@@ -1,0 +1,46 @@
+"""§Roofline source: aggregates the dry-run JSON records into the
+per-(arch x shape x mesh) three-term roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.util import csv_row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "experiments", "dryrun")
+
+
+def load_records(mesh: str = "single", mode: str = "conventional") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}_{mode}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run(mesh=None) -> list[str]:
+    out = []
+    for mesh_kind in ("single", "multi"):
+        for rec in load_records(mesh_kind):
+            name = f"roofline_{rec['arch']}_{rec['shape']}_{mesh_kind}"
+            if rec["status"] == "skip":
+                out.append(csv_row(name, 0.0, status="skip",
+                                   reason=rec.get("skip_reason", "")[:40].replace(",", ";")))
+                continue
+            if rec["status"] != "ok":
+                out.append(csv_row(name, 0.0, status="FAIL"))
+                continue
+            rl = rec["roofline"]
+            out.append(csv_row(
+                name, rl["step_time_s"] * 1e6,
+                compute_ms=f"{rl['compute_s']*1e3:.2f}",
+                memory_ms=f"{rl['memory_s']*1e3:.2f}",
+                collective_ms=f"{rl['collective_s']*1e3:.2f}",
+                dominant=rl["dominant"],
+                mfu=f"{rl['mfu_at_roofline']:.4f}",
+                useful_ratio=f"{rl['useful_ratio']:.2f}",
+                peak_gb=f"{rec['memory']['peak_device_bytes']/1e9:.2f}",
+                fits=str(rec["memory"]["fits_16GB"]),
+            ))
+    return out

@@ -1,0 +1,41 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# 8 fake CPU devices for the measured app benchmarks (set before jax).
+
+"""Benchmark harness: one module per paper figure + the roofline table.
+Prints ``name,us_per_call,derived`` CSV (see EXPERIMENTS.md for the
+interpretation and the measured-vs-model methodology)."""
+import sys
+import traceback
+
+
+def main() -> None:
+    import jax
+    from jax.sharding import AxisType
+
+    from benchmarks import (
+        fig5_mapreduce,
+        fig6_cg,
+        fig7_particle_comm,
+        fig8_particle_io,
+        roofline_table,
+    )
+
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
+                roofline_table):
+        try:
+            for line in mod.run(mesh):
+                print(line)
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},0.0,ERROR")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark helpers: wall-clock timing + calibrated paper-scale models.
+
+This container has one CPU core and 8 fake devices, so absolute times
+are NOT Cray times. Methodology (DESIGN.md §8): measure the mechanism
+at 8-way, calibrate the paper's Eq.-4 model parameters from those
+measurements, then evaluate the model at P = 32..8192 and compare the
+predicted speedups against the paper's reported ones. Measured columns
+are labelled `meas_`, model columns `model_`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def bench(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn(*args) (jax arrays blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, **derived) -> str:
+    extra = ",".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us_per_call:.1f},{extra}"
+
+
+PAPER_SCALES = (32, 128, 512, 2048, 4096, 8192)

@@ -1,0 +1,51 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Serving driver: batched requests through the slot-based engine with
+decoupled analytics samples per tick (the paper's Listing-1 pattern
+applied to an inference fleet).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import build
+from repro.serve.engine import Engine, EngineConfig, Request
+
+
+def main():
+    cfg = get_smoke("qwen2.5-3b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(max_batch=4, max_len=96))
+
+    rng = np.random.default_rng(0)
+    n_requests = 10
+    for i in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(2, 6))
+        eng.submit(Request(uid=i, prompt=prompt.astype(np.int32),
+                           max_new_tokens=int(rng.integers(4, 12))))
+
+    t0 = time.time()
+    ticks = 0
+    analytics = []
+    while eng.queue or any(s is not None for s in eng.slots):
+        eng.step()
+        ticks += 1
+        analytics.append(eng.workload_sample())  # -> decoupled analytics group
+        if ticks > 500:
+            raise RuntimeError("engine did not drain")
+    dt = time.time() - t0
+    print(f"served {n_requests} requests, {eng.stats['tokens_out']} tokens "
+          f"in {ticks} ticks ({eng.stats['tokens_out']/dt:.1f} tok/s on CPU)")
+    occ = np.mean([a["active_slots"] for a in analytics])
+    print(f"mean slot occupancy {occ:.2f}/4, final queue depth "
+          f"{analytics[-1]['queue_depth']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""End-to-end training driver: a decoder LM trained with the DECOUPLED
+gradient-reduction step (the paper's technique as a first-class
+feature), fault-tolerant checkpointing included.
+
+Defaults are CPU-friendly (a ~10M-param llama-style model, 120 steps).
+The production invocation for the ~100M run is:
+
+  PYTHONPATH=src python examples/train_lm.py --d-model 512 --layers 12 \
+      --seq 1024 --steps 300 --vocab 32000
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d-model", type=int, default=192)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=6)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--mode", default="decoupled",
+                    choices=["conventional", "decoupled", "overlap"])
+    ap.add_argument("--compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    import shutil
+
+    import jax
+    from jax.sharding import AxisType
+
+    from repro.configs.base import ArchConfig
+    from repro.data.pipeline import DataConfig, Pipeline
+    from repro.models import build
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = ArchConfig(
+        name="examples-lm", family="dense",
+        n_layers=args.layers, d_model=args.d_model, n_heads=args.heads,
+        n_kv_heads=args.kv_heads, d_ff=args.d_model * 3,
+        vocab_size=args.vocab,
+    )
+    model = build(cfg)
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params, mode={args.mode}")
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    pipe = Pipeline(DataConfig(
+        vocab_size=args.vocab, seq_len=args.seq, global_batch=args.batch,
+        kind="zipf", skew=0.4,  # imbalanced docs: what decoupling absorbs
+    ))
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    with jax.set_mesh(mesh):
+        trainer = Trainer(
+            model, mesh, pipe,
+            OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+            TrainStepConfig(mode=args.mode, reduce_alpha=0.25,
+                            compress=args.compress),
+            TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                          ckpt_dir=args.ckpt_dir, log_every=20),
+        )
+        state = trainer.run()
+        trainer.close()
+    first = trainer.metrics_log[0]["loss"]
+    last = trainer.metrics_log[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {state['step']} steps "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

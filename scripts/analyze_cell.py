@@ -1,0 +1,106 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb profiler: lower one cell and print the top collective and
+byte contributors with call-graph scaling (the dry-run 'profile')."""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default="conventional")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as dr
+    from repro.utils import hloanalyze
+
+    # reuse run_cell's lowering path but keep the compiled text
+    import jax
+
+    from repro.configs import SHAPES, get
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build
+
+    rec = dr.run_cell(args.arch, args.shape, args.mesh, args.mode, "/tmp/analyze_cell")
+    print("--- record:", {k: rec[k] for k in ("status",)})
+
+    # re-lower to fetch text (run_cell doesn't return it)
+    # quicker: read the record and print roofline; detailed lines need text
+    # -> lower again here
+    arch_cfg = get(args.arch)
+    shape_cfg = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    model = build(arch_cfg)
+    import jax.numpy as jnp
+
+    from repro.serve.serve_step import build_decode_step, build_prefill_step
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.train_step import TrainStepConfig, make_jitted_step
+
+    with jax.set_mesh(mesh):
+        if shape_cfg.kind == "train":
+            batch_sds = dr.input_specs(arch_cfg, shape_cfg)
+            params_like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            opt_like = jax.eval_shape(lambda: init_opt_state(OptConfig(), params_like))
+            step, _ = make_jitted_step(
+                model, mesh, OptConfig(), TrainStepConfig(mode=args.mode),
+                params_like, batch_sds, multi_pod=args.mesh == "multi", donate=False,
+            )
+            txt = step.lower(params_like, opt_like, batch_sds).compile().as_text()
+        elif shape_cfg.kind == "prefill":
+            sds = dr.input_specs(arch_cfg, shape_cfg)
+            make = build_prefill_step(model, mesh, multi_pod=args.mesh == "multi")
+            a = [sds["tokens"]] + ([sds.get("frames") or sds.get("patches")] if arch_cfg.frontend else [])
+            txt = make(*a).lower(
+                jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), *a
+            ).compile().as_text()
+        else:
+            b = shape_cfg.global_batch
+            step, _ = build_decode_step(
+                model, mesh, multi_pod=args.mesh == "multi",
+                shard_seq=args.shape == "long_500k", batch=b,
+                max_len=shape_cfg.seq_len, donate=False,
+            )
+            from repro.serve.serve_step import _serve_params_like
+
+            params_like = _serve_params_like(model)
+            cache_like = jax.eval_shape(lambda: model.init_cache(b, shape_cfg.seq_len))
+            txt = step.lower(
+                params_like, cache_like, jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            ).compile().as_text()
+
+    comps = hloanalyze.parse_hlo(txt)
+    entry = next(c.name for c in comps.values() if c.is_entry)
+    mult = hloanalyze._fixed_point_multipliers(comps, entry)
+
+    rows = []
+    cur = None
+    for line in txt.splitlines():
+        s = line.strip()
+        if not line.startswith(" ") and s.endswith("{"):
+            m = hloanalyze._COMP_HEADER.match(s)
+            cur = m.group(2) if m else None
+            continue
+        p = hloanalyze._split_op_line(line)
+        if not p or cur is None:
+            continue
+        _, shape, opcode, _ = p
+        kind = opcode.replace("-start", "")
+        if kind in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute"):
+            _, b = hloanalyze._shape_elems_bytes(shape)
+            rows.append((b * mult.get(cur, 0), b, mult.get(cur, 0), kind,
+                         shape[:48], cur[:44]))
+    rows.sort(reverse=True)
+    print(f"--- top {args.top} collectives (scaled bytes/device):")
+    for r in rows[: args.top]:
+        print(f"  {r[0]/1e9:8.3f}GB raw={r[1]/1e6:8.1f}MB x{r[2]:<5.0f} "
+              f"{r[3]:18s} {r[4]:48s} in {r[5]}")
+
+
+if __name__ == "__main__":
+    main()

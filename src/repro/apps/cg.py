@@ -1,0 +1,208 @@
+"""Conjugate-Gradient Poisson solver — the paper's Sec. IV-C case study.
+
+3-D Poisson equation on a Cartesian grid, 7-point Laplacian, 1-D domain
+decomposition over the `data` axis (each row owns an x-slab). Three
+halo-exchange variants, mirroring the paper's Fig. 6 bars:
+
+  blocking      exchange both halo planes (ppermute), wait, then compute
+                the full Laplacian — data dependency stalls on the wire.
+  nonblocking   exchange halos and compute the INNER Laplacian
+                concurrently (XLA schedules the permutes async), then
+                patch the boundary planes — Hoefler et al.'s overlap.
+  decoupled     boundary planes stream to a halo service group which
+                aggregates both neighbours' planes and streams the pair
+                back in one element — compute rows overlap the inner
+                Laplacian, and with G_1 aggregating, each compute row
+                talks to ONE service peer instead of two neighbours.
+
+All three run a fixed iteration count (paper: 300) and must converge to
+the same residual (tests/test_apps_cg.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import GroupedMesh, make_channel
+
+
+@dataclasses.dataclass(frozen=True)
+class CGCfg:
+    nx_local: int = 16  # slab thickness per compute row (paper: 120^3)
+    ny: int = 16
+    nz: int = 16
+    n_iters: int = 30
+    mode: str = "blocking"  # blocking | nonblocking | decoupled
+
+
+# -- halo exchange variants (per-device code) --------------------------------------
+
+def _neighbor_perms(rows: range):
+    lo = list(rows)
+    up = [(lo[i], lo[i + 1]) for i in range(len(lo) - 1)]  # send up
+    dn = [(lo[i + 1], lo[i]) for i in range(len(lo) - 1)]  # send down
+    return up, dn
+
+
+def _exchange_blocking(u, gmesh):
+    """Both planes via neighbour ppermute; returns (below, above)."""
+    up, dn = _neighbor_perms(gmesh.rows_of("compute"))
+    below = lax.ppermute(u[-1], gmesh.axis, up)  # from row-1: its top plane
+    above = lax.ppermute(u[0], gmesh.axis, dn)  # from row+1: its bottom plane
+    return below, above
+
+
+def _laplacian_inner(u):
+    """7-point Laplacian using only local planes (periodic in y/z,
+    x-halo planes patched in by _apply_halo)."""
+    lap = -6.0 * u
+    lap = lap.at[1:].add(u[:-1])   # lower x-neighbour (local part)
+    lap = lap.at[:-1].add(u[1:])   # upper x-neighbour (local part)
+    lap = lap + jnp.roll(u, 1, axis=1) + jnp.roll(u, -1, axis=1)
+    lap = lap + jnp.roll(u, 1, axis=2) + jnp.roll(u, -1, axis=2)
+    return lap
+
+
+def _apply_halo(lap, below, above):
+    lap = lap.at[0].add(below)
+    lap = lap.at[-1].add(above)
+    return lap
+
+
+def _matvec(u, gmesh, mode: str, channel=None):
+    """A @ u for the negative Laplacian, given the exchange mode."""
+    if mode == "blocking":
+        below, above = _exchange_blocking(u, gmesh)
+        # force the stencil to WAIT for the wire (MPI blocking semantics)
+        below, above, u_b = lax.optimization_barrier((below, above, u))
+        lap = _laplacian_inner(u_b)
+        lap = _apply_halo(lap, below, above)
+    elif mode == "nonblocking":
+        # issue permutes first; XLA overlaps them with the inner stencil
+        below, above = _exchange_blocking(u, gmesh)
+        lap = _laplacian_inner(u)  # independent of the permutes
+        lap = _apply_halo(lap, below, above)
+    elif mode == "decoupled":
+        # compute rows stream both boundary planes to the halo group;
+        # the group bundles each row's (below, above) pair and streams it
+        # back — one peer instead of two, pipelined with the inner stencil
+        planes = jnp.stack([u[0], u[-1]])  # (2, ny, nz)
+        bundled = _halo_service(planes, channel)
+        lap = _laplacian_inner(u)
+        lap = _apply_halo(lap, bundled[0], bundled[1])
+    else:
+        raise ValueError(mode)
+    return -lap
+
+
+def _halo_service(planes, channel):
+    """Service-group bundling: G_1 receives every compute row's boundary
+    planes, assembles the (below, above) pair each row needs, and
+    returns it. Realized with the channel's wave permutes: for the 1-D
+    decomposition the assembled pair for row i is (top of i-1, bottom
+    of i+1), so the service group computes it by shifting the collected
+    planes — one stream in, one element back."""
+    gmesh = channel.gmesh
+    comp = list(gmesh.rows_of("compute"))
+    n = len(comp)
+    # stream every compute row's planes into the service group, one
+    # element per row (the channel's wave schedule, unrolled)
+    slots = jnp.zeros((n, 2) + planes.shape[1:], planes.dtype)
+    halo_row = list(gmesh.rows_of("halo"))[0]
+    for i, src in enumerate(comp):
+        arrived = lax.ppermute(planes, gmesh.axis, [(src, halo_row)])
+        slots = slots.at[i].set(arrived)
+    # assemble: row i needs (top of i-1, bottom of i+1)
+    below_all = jnp.concatenate(
+        [jnp.zeros((1,) + planes.shape[1:], planes.dtype), slots[:-1, 1]]
+    )
+    above_all = jnp.concatenate(
+        [slots[1:, 0], jnp.zeros((1,) + planes.shape[1:], planes.dtype)]
+    )
+    # stream each row's bundle back
+    out = jnp.zeros((2,) + planes.shape[1:], planes.dtype)
+    for i, dst in enumerate(comp):
+        bundle = jnp.stack([below_all[i], above_all[i]])
+        perm = [(halo_row, dst)]
+        arrived = lax.ppermute(bundle, gmesh.axis, perm)
+        row = lax.axis_index(gmesh.axis)
+        out = jnp.where(row == dst, arrived, out)
+    return out
+
+
+def _dot(a, b, gmesh, group="compute"):
+    from repro.core.decouple import group_psum
+
+    local = jnp.sum(a * b)
+    return group_psum(local, gmesh, group)
+
+
+def cg_solve(b_rhs, cfg: CGCfg, gmesh: GroupedMesh, channel=None):
+    """Per-device CG iterations; returns (u, residual_norm)."""
+    matvec = functools.partial(_matvec, gmesh=gmesh, mode=cfg.mode, channel=channel)
+    x = jnp.zeros_like(b_rhs)
+    r = b_rhs
+    p = r
+    rs = _dot(r, r, gmesh)
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        alpha = rs / jnp.maximum(_dot(p, ap, gmesh), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = _dot(r, r, gmesh)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        return (x, r, p, rs_new), rs_new
+
+    (x, r, p, rs), hist = lax.scan(body, (x, r, p, rs), None, length=cfg.n_iters)
+    return x, jnp.sqrt(rs), hist
+
+
+def run_cg(mesh, cfg: CGCfg, alpha: float = 0.125):
+    """Host driver: grouped mesh, skewed RHS, one solve. Same TOTAL grid
+    for all modes (decoupled redistributes slabs over compute rows)."""
+    from jax.sharding import PartitionSpec as P
+
+    n_rows = mesh.shape["data"]
+    if cfg.mode == "decoupled":
+        gmesh = GroupedMesh.build(mesh, services={"halo": alpha})
+        channel = make_channel(gmesh, "halo")
+        work_rows = gmesh.compute.size
+    else:
+        gmesh = GroupedMesh.trivial(mesh)
+        channel = None
+        work_rows = n_rows
+    total_nx = cfg.nx_local * n_rows
+    if total_nx % work_rows:
+        raise ValueError(
+            f"global nx={total_nx} must divide over {work_rows} compute rows "
+            "(pick nx_local divisible by both decompositions)"
+        )
+    nx_per = total_nx // work_rows
+
+    rng = np.random.default_rng(7)
+    rhs_global = rng.standard_normal((total_nx, cfg.ny, cfg.nz)).astype(np.float32)
+    pad_rows = n_rows - work_rows
+    rhs = np.concatenate(
+        [rhs_global, np.zeros((pad_rows * nx_per, cfg.ny, cfg.nz), np.float32)]
+    )
+    rhs = jnp.asarray(rhs.reshape(n_rows, nx_per, cfg.ny, cfg.nz))
+
+    def per_row(b_local):
+        u, res, hist = cg_solve(b_local[0], cfg, gmesh, channel)
+        return u[None], res[None], hist[None]
+
+    sm = jax.shard_map(
+        per_row, mesh=mesh,
+        in_specs=P("data"), out_specs=(P("data"), P("data"), P("data")),
+        check_vma=False,
+    )
+    u, res, hist = jax.jit(sm)(rhs)
+    return np.asarray(u), float(np.asarray(res)[0]), np.asarray(hist)[0]

@@ -1,0 +1,162 @@
+"""MapReduce word-histogram — the paper's Sec. IV-B case study.
+
+Reference implementation (paper: map+reduce coupled on all processes,
+MPI_Iallgatherv + MPI_Ireduce): every row maps its documents to a local
+histogram, then a global all-reduce combines them — the reduce
+operation's complexity grows with P.
+
+Decoupled implementation (paper: map group + reduce group + master):
+map rows stream (key, count) elements of granularity S as they are
+produced; reducer rows fold `histogram_op` on arrival; a small
+intra-group aggregation (the "master" step) completes the reduction.
+Map and reduce progress in pipeline; reducer complexity is O(alpha*P).
+
+Both run under `shard_map` over the grouped data axis and must produce
+identical histograms (tests/test_apps_mapreduce.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GroupedMesh, make_channel
+from repro.core.decouple import group_psum
+from repro.core.imbalance import skewed_partition
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusCfg:
+    n_docs_per_row: int = 8
+    words_per_doc: int = 512
+    vocab: int = 1024
+    skew: float = 0.8  # natural-language irregularity (paper Sec. IV-B)
+    seed: int = 0
+
+
+def make_corpus(cfg: CorpusCfg, total_docs: int):
+    """Returns (tokens (total_docs, words), mask) with Zipf word ids and
+    skewed document lengths — the paper's variable-size log files."""
+    rng = np.random.default_rng(cfg.seed)
+    shape = (total_docs, cfg.words_per_doc)
+    tokens = rng.zipf(1.4, size=shape).astype(np.int64) % cfg.vocab
+    mask = np.ones(shape, np.float32)
+    lengths = np.clip(
+        skewed_partition(total_docs * cfg.words_per_doc, total_docs, cfg.skew, rng),
+        1,
+        cfg.words_per_doc,
+    )
+    for d in range(total_docs):
+        mask[d, lengths[d]:] = 0.0
+    return jnp.asarray(tokens, jnp.int32), jnp.asarray(mask)
+
+
+def layout_corpus(tokens, mask, work_rows: int, n_rows: int):
+    """Distribute the SAME document set over `work_rows` rows (padding
+    service rows with zero-masked docs) — paper Sec. IV-A: identical
+    total workload for both implementations."""
+    total_docs = tokens.shape[0]
+    per_row = -(-total_docs // work_rows)
+    pad_docs = per_row * n_rows - total_docs
+    t = jnp.concatenate(
+        [tokens, jnp.zeros((pad_docs, tokens.shape[1]), tokens.dtype)]
+    )
+    m = jnp.concatenate([mask, jnp.zeros((pad_docs, mask.shape[1]), mask.dtype)])
+    # fill compute rows densely first; service rows get only padding
+    order = np.zeros(per_row * n_rows, np.int64)
+    order[: total_docs] = np.arange(total_docs)
+    order[total_docs:] = np.arange(total_docs, per_row * n_rows)
+    idx = jnp.asarray(order)
+    return t[idx].reshape(n_rows, per_row, -1), m[idx].reshape(n_rows, per_row, -1)
+
+
+def _local_histogram(tokens, mask, vocab: int) -> jax.Array:
+    """The map operation: word -> (word, 1) pairs folded locally."""
+    flat = tokens.reshape(-1)
+    m = mask.reshape(-1)
+    return jnp.zeros((vocab,), jnp.float32).at[flat].add(m)
+
+
+# -- reference: all rows map AND reduce (coupled) -------------------------------
+
+def reference_wordcount(tokens, mask, vocab: int, gmesh: GroupedMesh) -> jax.Array:
+    """Per-device code: local map then global all-reduce (paper Fig 3a)."""
+    local = _local_histogram(tokens, mask, vocab)
+    return jax.lax.psum(local, gmesh.axis)
+
+
+# -- decoupled: map group streams, reduce group folds ----------------------------
+
+def decoupled_wordcount(
+    tokens,  # (docs, words) local slice; service rows receive padding
+    mask,
+    vocab: int,
+    gmesh: GroupedMesh,
+    granularity_words: int = 256,
+) -> jax.Array:
+    """Per-device code. Map rows stream [keys|counts] elements per S
+    words; reducer rows fold histograms on the fly (first available
+    element — no waiting on a specific map peer), then the intra-group
+    psum completes the reduction (the paper's master aggregation)."""
+    channel = make_channel(gmesh, "reduce")
+    flat = tokens.reshape(-1)
+    m = mask.reshape(-1)
+    n = flat.shape[0]
+    s = min(granularity_words, n)
+    n_chunks = -(-n // s)
+    pad = n_chunks * s - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad), constant_values=-1)
+        m = jnp.pad(m, (0, pad))
+    keys = jnp.where(m > 0, flat, -1).reshape(n_chunks, s).astype(jnp.float32)
+    counts = m.reshape(n_chunks, s)
+    elements = jnp.concatenate([keys, counts], axis=1)  # (n_chunks, 2S)
+
+    def hist_op(acc, elem, k):
+        kk = elem[:s].astype(jnp.int32)
+        cc = elem[s:]
+        valid = kk >= 0
+        return acc.at[jnp.clip(kk, 0, vocab - 1)].add(jnp.where(valid, cc, 0.0))
+
+    partial = channel.stream_fold(elements, hist_op, jnp.zeros((vocab,), jnp.float32))
+    total = group_psum(partial, gmesh, "reduce")
+    # return the result to every row (so callers can verify anywhere)
+    return channel.broadcast_from_consumer(total)
+
+
+def run_wordcount(mesh, mode: str, corpus_cfg: CorpusCfg, alpha: float = 0.25,
+                  granularity_words: int = 256):
+    """Host-level driver: builds the grouped mesh, lays out the corpus
+    (map workload on compute rows only in decoupled mode — same total
+    work, paper Sec. IV-A), runs one histogram pass."""
+    from jax.sharding import PartitionSpec as P
+
+    n_rows = mesh.shape["data"]
+    if mode == "decoupled":
+        gmesh = GroupedMesh.build(mesh, services={"reduce": alpha})
+        work_rows = gmesh.compute.size
+    else:
+        gmesh = GroupedMesh.trivial(mesh)
+        work_rows = n_rows
+    cfg = corpus_cfg
+    total_docs = cfg.n_docs_per_row * n_rows
+    all_tokens, all_mask = make_corpus(cfg, total_docs)
+    tokens, mask = layout_corpus(all_tokens, all_mask, work_rows, n_rows)
+
+    if mode == "reference":
+        fn = lambda t, mk: reference_wordcount(t, mk, cfg.vocab, gmesh)
+    else:
+        fn = lambda t, mk: decoupled_wordcount(
+            t, mk, cfg.vocab, gmesh, granularity_words
+        )
+    sm = jax.shard_map(
+        lambda t, mk: fn(t[0], mk[0])[None],  # strip/re-add the row dim
+        mesh=mesh,
+        in_specs=(P("data"), P("data")),
+        out_specs=P("data"),
+        check_vma=False,
+    )
+    hist_rows = jax.jit(sm)(tokens, mask)  # (rows, vocab): identical rows
+    return np.asarray(hist_rows[0]), (tokens, mask)

@@ -1,0 +1,1 @@
+from repro.configs.base import ARCH_NAMES, REGISTRY, SHAPES, ArchConfig, ShapeCfg, cells, get, get_smoke

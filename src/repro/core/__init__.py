@@ -1,0 +1,92 @@
+"""repro.core — the paper's decoupling strategy as a composable JAX library.
+
+Public surface:
+  GroupedMesh, GroupSpec           (groups.py)   — operation-to-group mapping
+  StreamChunker                    (stream.py)   — granularity-S elements
+  StreamChannel, make_channel      (channel.py)  — group-to-group dataflow
+  StreamOperator + operators       (operators.py)
+  group_psum / stream_reduce / ... (decouple.py) — decoupled collectives
+  WorkloadProfile, t_decoupled ... (perfmodel.py)— Eqs. 1-4
+  ImbalanceModel, skewed_partition (imbalance.py)
+"""
+from repro.core.channel import StreamChannel, make_channel
+from repro.core.decouple import (
+    conventional_allreduce,
+    group_all_gather,
+    group_pmax,
+    group_psum,
+    group_psum_scatter,
+    role_index,
+    select_by_role,
+    stream_reduce,
+    stream_reduce_and_return,
+)
+from repro.core.groups import COMPUTE, GroupSpec, GroupedMesh, batch_rows_padding
+from repro.core.imbalance import ImbalanceModel, skewed_partition
+from repro.core.operators import (
+    StreamOperator,
+    buffer_op,
+    finalize_workload_stats,
+    histogram_op,
+    pack_kv,
+    sum_op,
+    workload_stats_op,
+)
+from repro.core.perfmodel import (
+    OperationTraits,
+    StreamCosts,
+    WorkloadProfile,
+    decoupling_criteria,
+    default_beta,
+    memory_bytes,
+    optimal_alpha,
+    optimal_granularity,
+    recommend_decoupling,
+    speedup,
+    t_conventional,
+    t_decoupled,
+    t_sigma,
+)
+from repro.core.stream import StreamChunker, granularity_from_bytes
+
+__all__ = [
+    "COMPUTE",
+    "GroupSpec",
+    "GroupedMesh",
+    "ImbalanceModel",
+    "OperationTraits",
+    "StreamChannel",
+    "StreamChunker",
+    "StreamCosts",
+    "StreamOperator",
+    "WorkloadProfile",
+    "batch_rows_padding",
+    "buffer_op",
+    "conventional_allreduce",
+    "decoupling_criteria",
+    "default_beta",
+    "finalize_workload_stats",
+    "granularity_from_bytes",
+    "group_all_gather",
+    "group_pmax",
+    "group_psum",
+    "group_psum_scatter",
+    "histogram_op",
+    "make_channel",
+    "memory_bytes",
+    "optimal_alpha",
+    "optimal_granularity",
+    "pack_kv",
+    "recommend_decoupling",
+    "role_index",
+    "select_by_role",
+    "skewed_partition",
+    "speedup",
+    "stream_reduce",
+    "stream_reduce_and_return",
+    "sum_op",
+    "t_conventional",
+    "t_decoupled",
+    "t_sigma",
+    "workload_stats_op",
+]

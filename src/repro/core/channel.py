@@ -1,0 +1,221 @@
+"""StreamChannel: the MPIStream communication channel on a TPU mesh.
+
+The paper's channel (Sec. III-A) connects a producer group to a consumer
+group; producers inject stream elements as soon as they are ready
+(`MPIStream_Isend`) and consumers fold an attached operator over arriving
+elements (`MPIStream_Operate`).
+
+TPU realization
+---------------
+All functions here are *per-device* code, to be called inside a
+``jax.shard_map`` body over the grouped axis. Transfers use
+``lax.ppermute`` (XLA collective-permute), which the TPU latency-hiding
+scheduler turns into async start/done pairs — element ``k+1`` is on the
+wire while the operator consumes element ``k``. That is the paper's
+asynchronous fine-grained dataflow, with the lockstep-SPMD caveat
+documented in DESIGN.md §2 (round-robin wave schedule instead of
+first-come-first-served).
+
+Schedule
+--------
+With C producer rows and R consumer rows, producers are drained in
+``ceil(C/R)`` *waves*; each wave streams its ``n_chunks`` elements
+through a static permutation (one scan). Wave loops are unrolled in
+Python (static perms), chunk loops are ``lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.groups import COMPUTE, GroupedMesh
+
+Operator = Callable[[Any, jax.Array, jax.Array], Any]  # (acc, element, k) -> acc
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamChannel:
+    """A directed channel ``producer -> consumer`` over ``gmesh.axis``."""
+
+    gmesh: GroupedMesh
+    producer: str
+    consumer: str
+
+    # -- static schedule ----------------------------------------------------
+    @property
+    def n_producers(self) -> int:
+        return self.gmesh.group(self.producer).size
+
+    @property
+    def n_consumers(self) -> int:
+        return self.gmesh.group(self.consumer).size
+
+    @property
+    def n_waves(self) -> int:
+        return math.ceil(self.n_producers / max(self.n_consumers, 1))
+
+    def wave_perm(self, wave: int) -> list[tuple[int, int]]:
+        """Static (src, dst) pairs for one wave (a partial permutation)."""
+        prod = list(self.gmesh.rows_of(self.producer))
+        cons = list(self.gmesh.rows_of(self.consumer))
+        r = len(cons)
+        pairs = []
+        for j in range(r):
+            p = wave * r + j
+            if p < len(prod):
+                pairs.append((prod[p], cons[j]))
+        return pairs
+
+    # -- per-device helpers (inside shard_map) --------------------------------
+    def _row(self) -> jax.Array:
+        return lax.axis_index(self.gmesh.axis)
+
+    def is_member(self, name: str) -> jax.Array:
+        g = self.gmesh.group(name)
+        row = self._row()
+        return (row >= g.start) & (row < g.stop)
+
+    def member_rank(self, name: str) -> jax.Array:
+        """Rank of this row within group `name` (garbage off-group)."""
+        return self._row() - self.gmesh.group(name).start
+
+    # -- the core fold ---------------------------------------------------------
+    def stream_fold(
+        self,
+        elements: jax.Array,
+        operator: Operator,
+        init: Any,
+        *,
+        count: jax.Array | None = None,
+    ) -> Any:
+        """Stream producer-local ``elements`` to consumers and fold.
+
+        Parameters
+        ----------
+        elements : (n_chunks, S) local buffer. Meaningful on producer
+            rows only (other rows may pass zeros of the same shape).
+        operator : fold fn applied on consumer rows per arriving element.
+        init : operator state pytree (same on every row; only consumer
+            rows' result is meaningful).
+        count : optional per-producer valid-chunk count (dynamic, for
+            variable-size streams — the paper's imbalanced producers).
+            Elements at index >= count are skipped by masking.
+
+        Returns the folded state (valid on consumer rows).
+        """
+        n_chunks = elements.shape[0]
+        if count is None:
+            count = jnp.full((), n_chunks, jnp.int32)
+        axis = self.gmesh.axis
+        is_cons = self.is_member(self.consumer)
+        cons_rank = self.member_rank(self.consumer)
+
+        acc = init
+        for wave in range(self.n_waves):
+            perm = self.wave_perm(wave)
+            if not perm:
+                continue
+            n_pairs = len(perm)
+            # does this consumer row receive during this wave?
+            receives = is_cons & (cons_rank < n_pairs)
+            # the producer rank active on this row this wave
+            my_rank = self.member_rank(self.producer)
+            active = self.is_member(self.producer) & (
+                my_rank // max(self.n_consumers, 1) == wave
+            )
+
+            # stream the producer's valid-count alongside (prefix exchange)
+            sent_count = lax.ppermute(count, axis, perm)
+
+            def body(carry, k):
+                acc = carry
+                elem = lax.ppermute(elements[k], axis, perm)
+                valid = receives & (k < sent_count)
+                new = operator(acc, elem, k)
+                acc = jax.tree.map(
+                    lambda n, o: jnp.where(valid, n, o), new, acc
+                )
+                return acc, None
+
+            acc, _ = lax.scan(body, acc, jnp.arange(n_chunks))
+            del active  # producers need no masking: ppermute ignores non-sources
+        return acc
+
+    def stream_fold_tree(
+        self,
+        payload: Any,
+        *,
+        acc_init: Any | None = None,
+        combine: Callable[[Any, Any, jax.Array], Any] | None = None,
+    ) -> Any:
+        """Stream a whole pytree (one element per leaf) and fold on the
+        consumer group. Used when the stream payload must keep its
+        GSPMD sharding along auto axes (e.g. model-sharded gradient
+        leaves in the decoupled train step) — flattening into (n,S)
+        chunks would force a reshard.
+
+        `combine(acc, arrived_payload, ok)` folds one wave; the default
+        is a masked elementwise sum (payload structure == acc structure).
+        Compressed payloads (train/grad_compress.py) pass a `combine`
+        that dequantizes on arrival and an `acc_init` in the decoded
+        dtype/structure.
+        """
+        is_cons = self.is_member(self.consumer)
+        combine = combine or (lambda acc, new, ok: jax.tree.map(
+            lambda a, b: jnp.where(ok, a + b, a), acc, new
+        ))
+        acc = (
+            jax.tree.map(jnp.zeros_like, payload) if acc_init is None else acc_init
+        )
+        for wave in range(self.n_waves):
+            perm = self.wave_perm(wave)
+            if not perm:
+                continue
+            cons_rank = self.member_rank(self.consumer)
+            receives = is_cons & (cons_rank < len(perm))
+            arrived = jax.tree.map(
+                lambda x: lax.ppermute(x, self.gmesh.axis, perm), payload
+            )
+            acc = combine(acc, arrived, receives)
+            # serialize waves: without this barrier the latency-hiding
+            # scheduler hoists every wave's permute-start, keeping
+            # n_waves full payload copies in flight (§Perf pair 1 it.6:
+            # 214GB -> bounded). Costs overlap; memory wins at scale.
+            acc = lax.optimization_barrier(acc)
+        return acc
+
+    # -- result return path -----------------------------------------------------
+    def broadcast_from_consumer(self, value: Any) -> Any:
+        """Broadcast consumer-row result to every row of the axis.
+
+        Implemented as a masked psum over the axis: rows outside the
+        consumer group contribute zeros. For R consumer rows holding
+        *identical* values, the result is scaled back by 1/R.
+        """
+        is_cons = self.is_member(self.consumer)
+        scale = 1.0 / max(self.n_consumers, 1)
+
+        def one(x):
+            contrib = jnp.where(is_cons, x.astype(jnp.float32), 0.0)
+            return (lax.psum(contrib, self.gmesh.axis) * scale).astype(x.dtype)
+
+        return jax.tree.map(one, value)
+
+    def scatter_back(self, value: Any, *, wave_of_target: int = 0) -> Any:
+        """Reverse-direction transfer: consumer rows send to the
+        producer rows of one wave (static inverse permutation)."""
+        perm = [(d, s) for (s, d) in self.wave_perm(wave_of_target)]
+        return jax.tree.map(
+            lambda x: lax.ppermute(x, self.gmesh.axis, perm), value
+        )
+
+
+def make_channel(
+    gmesh: GroupedMesh, consumer: str, producer: str = COMPUTE
+) -> StreamChannel:
+    return StreamChannel(gmesh=gmesh, producer=producer, consumer=consumer)

@@ -1,0 +1,151 @@
+"""Decoupled collectives: group-restricted reductions and the
+stream-reduce primitive used by the decoupled train step.
+
+These are the building blocks that turn the paper's strategy into a
+first-class training-system feature:
+
+  * ``group_psum`` / ``group_psum_scatter`` — collectives restricted to
+    one group of the partitioned axis (``axis_index_groups``), i.e. the
+    reduced-complexity collective on a subset of processes (criterion 2
+    of Sec. II-E).
+  * ``stream_reduce`` — compute rows stream raw gradient chunks to the
+    reducer group which folds partial sums on-the-fly and then performs
+    the small intra-group aggregation (the paper's MapReduce "reduce
+    group + master" two-level scheme, Sec. IV-B).
+  * ``select_by_role`` — MPMD-style divergence under SPMD: different
+    groups take different branches of a ``lax.cond``.
+
+All functions are per-device code for use inside ``jax.shard_map``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.channel import StreamChannel
+from repro.core.groups import GroupedMesh
+
+
+# -- group-restricted collectives ---------------------------------------------
+
+def group_psum(x: Any, gmesh: GroupedMesh, group: str) -> Any:
+    """psum over ``gmesh.axis`` restricted to rows of ``group``.
+
+    Rows outside the group psum within singleton groups (identity), so
+    the op is safe to execute unconditionally under SPMD.
+    """
+    groups = gmesh.subgroup_only(group)
+    return jax.tree.map(
+        lambda l: lax.psum(l, gmesh.axis, axis_index_groups=groups), x
+    )
+
+
+def group_pmax(x: Any, gmesh: GroupedMesh, group: str) -> Any:
+    groups = gmesh.subgroup_only(group)
+    return jax.tree.map(
+        lambda l: lax.pmax(l, gmesh.axis, axis_index_groups=groups), x
+    )
+
+
+def group_psum_scatter(x: jax.Array, gmesh: GroupedMesh, group: str) -> jax.Array:
+    """Reduce-scatter restricted to the group (leading dim split by group size).
+
+    Only valid when every row executes it and ``x.shape[0]`` is divisible
+    by the group size; rows outside the group reduce-scatter within
+    singletons (identity on their shard 0) — callers must mask.
+    """
+    groups = gmesh.subgroup_only(group)
+    return lax.psum_scatter(
+        x, gmesh.axis, scatter_dimension=0, axis_index_groups=groups, tiled=True
+    )
+
+
+def group_all_gather(x: jax.Array, gmesh: GroupedMesh, group: str) -> jax.Array:
+    groups = gmesh.subgroup_only(group)
+    return lax.all_gather(
+        x, gmesh.axis, axis_index_groups=groups, tiled=True
+    )
+
+
+# -- role-based branching (MPMD under SPMD) -------------------------------------
+
+def role_index(gmesh: GroupedMesh) -> jax.Array:
+    """Integer role id of this row: position of its group in gmesh.groups."""
+    row = lax.axis_index(gmesh.axis)
+    role = jnp.zeros((), jnp.int32)
+    for i, g in enumerate(gmesh.groups):
+        inside = (row >= g.start) & (row < g.stop)
+        role = jnp.where(inside, jnp.int32(i), role)
+    return role
+
+
+def select_by_role(
+    gmesh: GroupedMesh, branches: dict[str, Callable[[], Any]]
+) -> Any:
+    """Run a different branch per group; all branches must return the
+    same pytree structure/shapes. Branches for groups not listed default
+    to the first listed branch's zeros.
+
+    Under SPMD every device compiles all branches; ``lax.switch``
+    executes only the taken one at runtime (paper's MPMD divergence;
+    roofline HLO over-counts this — see EXPERIMENTS.md §Roofline).
+    """
+    names = [g.name for g in gmesh.groups]
+    fns = []
+    default = next(iter(branches.values()))
+    for n in names:
+        fns.append(branches.get(n, default))
+    return lax.switch(role_index(gmesh), fns)
+
+
+# -- the decoupled reduce -------------------------------------------------------
+
+def stream_reduce(
+    elements: jax.Array,
+    channel: StreamChannel,
+    *,
+    aggregate: bool = True,
+) -> jax.Array:
+    """Stream (n_chunks, S) producer buffers to the consumer group and
+    return per-chunk global sums (valid on consumer rows).
+
+    Stage 1 (stream fold): consumer row j folds the chunks arriving from
+    producers {wave*R + j}, giving a partial sum over a producer stride.
+    Stage 2 (aggregate): small psum *within the consumer group only*
+    completes the reduction — the paper's master-aggregation step, at
+    complexity O(R) << O(P).
+    """
+    partial = channel.stream_fold(
+        elements,
+        lambda acc, elem, k: acc.at[k].add(elem),
+        jnp.zeros_like(elements),
+    )
+    if aggregate and channel.n_consumers > 1:
+        partial = group_psum(partial, channel.gmesh, channel.consumer)
+    return partial
+
+
+def stream_reduce_and_return(
+    elements: jax.Array,
+    channel: StreamChannel,
+    transform: Callable[[jax.Array], jax.Array] | None = None,
+) -> jax.Array:
+    """Full round trip: stream-reduce on the service group, optionally
+    transform the reduced value there (e.g. optimizer update), then
+    broadcast the result back to every row.
+    """
+    reduced = stream_reduce(elements, channel)
+    if transform is not None:
+        reduced = transform(reduced)
+    return channel.broadcast_from_consumer(reduced)
+
+
+# -- reference (conventional) path for equivalence tests -------------------------
+
+def conventional_allreduce(x: Any, gmesh: GroupedMesh) -> Any:
+    """Plain psum over the whole axis — the model every process performs
+    every operation (paper Fig. 3a)."""
+    return jax.tree.map(lambda l: lax.psum(l, gmesh.axis), x)

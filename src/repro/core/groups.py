@@ -1,0 +1,199 @@
+"""Group formation: the paper's `G_0..G_k` process groups on a JAX mesh.
+
+The paper (Sec. II-C) forms groups of processes and maps each operation
+to exactly one group. On a TPU mesh we partition one mesh axis (by
+default ``data``) into contiguous *row ranges*, one per group. The
+``compute`` group is implicit: it receives all rows not claimed by a
+service group.
+
+``alpha`` in the paper's Eq. 2-4 is the fraction of processes dedicated
+to the decoupled operation; here it resolves to an integer number of
+rows of the partitioned axis (>= 1 when requested > 0).
+
+Example
+-------
+>>> gm = GroupedMesh.build(mesh, axis="data",
+...                        services={"reduce": 1/16, "io": 1/16})
+>>> gm.rows_of("compute"), gm.rows_of("reduce")
+(range(0, 14), range(14, 15))
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+
+COMPUTE = "compute"
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One group: a named contiguous row-range of the partitioned axis."""
+
+    name: str
+    start: int
+    stop: int  # exclusive
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def rows(self) -> range:
+        return range(self.start, self.stop)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupedMesh:
+    """A mesh whose ``axis`` is partitioned into operation groups.
+
+    Rows ``[0, compute_rows)`` belong to the compute group; service
+    groups occupy the tail rows in declaration order. This mirrors the
+    paper's G_0 (compute) / G_1.. (decoupled operations) layout.
+    """
+
+    mesh: jax.sharding.Mesh
+    axis: str
+    groups: tuple[GroupSpec, ...]
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def build(
+        mesh: jax.sharding.Mesh,
+        axis: str = "data",
+        services: Mapping[str, float] | None = None,
+        min_compute_rows: int = 1,
+    ) -> "GroupedMesh":
+        """Resolve fractional ``alpha`` requests into integer row counts.
+
+        Every requested service with alpha > 0 receives at least one row.
+        Rows are taken from the tail of the axis. Raises if the compute
+        group would shrink below ``min_compute_rows``.
+        """
+        services = dict(services or {})
+        n = mesh.shape[axis]
+        sizes: dict[str, int] = {}
+        for name, frac in services.items():
+            if not 0.0 <= frac < 1.0:
+                raise ValueError(f"service {name!r}: alpha={frac} outside [0,1)")
+            if frac > 0.0:
+                sizes[name] = max(1, int(round(frac * n)))
+        used = sum(sizes.values())
+        compute_rows = n - used
+        if compute_rows < min_compute_rows:
+            raise ValueError(
+                f"axis {axis!r} has {n} rows; services demand {used}, "
+                f"leaving {compute_rows} < min_compute_rows={min_compute_rows}"
+            )
+        specs = [GroupSpec(COMPUTE, 0, compute_rows)]
+        cursor = compute_rows
+        for name, size in sizes.items():
+            specs.append(GroupSpec(name, cursor, cursor + size))
+            cursor += size
+        return GroupedMesh(mesh=mesh, axis=axis, groups=tuple(specs))
+
+    @staticmethod
+    def trivial(mesh: jax.sharding.Mesh, axis: str = "data") -> "GroupedMesh":
+        """All rows compute — the conventional (non-decoupled) model."""
+        return GroupedMesh.build(mesh, axis=axis, services={})
+
+    # -- queries ----------------------------------------------------------
+    def group(self, name: str) -> GroupSpec:
+        for g in self.groups:
+            if g.name == name:
+                return g
+        raise KeyError(name)
+
+    def has(self, name: str) -> bool:
+        return any(g.name == name for g in self.groups)
+
+    def rows_of(self, name: str) -> range:
+        return self.group(name).rows
+
+    @property
+    def axis_size(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    @property
+    def compute(self) -> GroupSpec:
+        return self.group(COMPUTE)
+
+    @property
+    def service_groups(self) -> tuple[GroupSpec, ...]:
+        return tuple(g for g in self.groups if g.name != COMPUTE)
+
+    def alpha(self, name: str) -> float:
+        """Realized alpha (Eq. 2): fraction of axis rows in group `name`."""
+        return self.group(name).size / self.axis_size
+
+    # -- collective helpers ------------------------------------------------
+    def axis_index_groups(self, *names: str) -> list[list[int]]:
+        """``axis_index_groups`` for a collective restricted per group.
+
+        Every row of the axis must appear exactly once, so groups not
+        named still get singleton/rest groups — XLA requires a full
+        partition of the replica set.
+        """
+        wanted = set(names) or {g.name for g in self.groups}
+        out: list[list[int]] = []
+        for g in self.groups:
+            if g.name in wanted:
+                out.append(list(g.rows))
+            else:
+                out.extend([[r] for r in g.rows])
+        return out
+
+    def subgroup_only(self, name: str) -> list[list[int]]:
+        """Partition where `name`'s rows form one group, all others singletons."""
+        return self.axis_index_groups(name)
+
+    def producer_consumer_perm(
+        self, producer: str, consumer: str, shift: int = 0
+    ) -> list[tuple[int, int]]:
+        """A partial permutation pairing producer rows to consumer rows.
+
+        Producer row ``p_i`` sends to consumer row ``c_{(i+shift) % R}``.
+        When producers outnumber consumers only ``R`` producers send per
+        call; the stream layer cycles ``shift`` over scan steps so every
+        producer row is drained round-robin — the SPMD analogue of the
+        paper's first-come-first-served consumption.
+        """
+        prod = list(self.rows_of(producer))
+        cons = list(self.rows_of(consumer))
+        if not prod or not cons:
+            return []
+        r = len(cons)
+        pairs = []
+        # choose up to r distinct producers this round, rotating by shift
+        for j in range(min(r, len(prod))):
+            src = prod[(shift + j) % len(prod)]
+            dst = cons[j % r]
+            pairs.append((src, dst))
+        return pairs
+
+    def role_mask(self, name: str) -> np.ndarray:
+        """Boolean per-row mask (host-side) for group membership."""
+        m = np.zeros(self.axis_size, dtype=bool)
+        m[self.group(name).start : self.group(name).stop] = True
+        return m
+
+    def describe(self) -> str:
+        parts = [
+            f"{g.name}[{g.start}:{g.stop}] (alpha={g.size / self.axis_size:.4f})"
+            for g in self.groups
+        ]
+        return f"GroupedMesh(axis={self.axis!r}, {', '.join(parts)})"
+
+
+def batch_rows_padding(global_batch: int, compute_rows: int) -> tuple[int, int]:
+    """Padded per-row batch and padded global batch for a grouped mesh.
+
+    The conventional model shards ``global_batch`` over all rows; the
+    grouped model shards it over compute rows only, padding when the
+    division is uneven (paper keeps total workload constant — Sec IV-A).
+    """
+    per_row = math.ceil(global_batch / compute_rows)
+    return per_row, per_row * compute_rows

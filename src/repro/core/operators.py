@@ -1,0 +1,137 @@
+"""Stream operators: the paper's `MPIStream_Attach` payload (Sec. III-A).
+
+An operator is applied on-the-fly on the consumer group to every
+arriving stream element. Operators are plain jittable fold functions
+``(acc, element, k) -> acc`` (k = stream step index) plus an ``init`` constructor, so they compose
+with `StreamChannel.stream_fold`.
+
+The four operators here correspond to the paper's four case studies:
+  * `sum_op`            — decoupled reduce (MapReduce / gradient reduction)
+  * `histogram_op`      — keyed word-count reduce (MapReduce)
+  * `buffer_op`         — aggressive buffering for the decoupled I/O group
+  * `workload_stats_op` — min/max/median workload analytics (Listing 1)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamOperator:
+    name: str
+    init: Callable[..., Any]
+    apply: Callable[[Any, jax.Array], Any]
+
+
+# -- decoupled reduce ---------------------------------------------------------
+
+def sum_op(chunk_elems: int, dtype=jnp.float32) -> StreamOperator:
+    """acc <- acc + element : the decoupled reduction operator."""
+    return StreamOperator(
+        name="sum",
+        init=lambda: jnp.zeros((chunk_elems,), dtype),
+        apply=lambda acc, elem, k: acc + elem.astype(dtype),
+    )
+
+
+# -- keyed histogram (MapReduce word count) ----------------------------------
+
+def histogram_op(n_bins: int, keys_per_elem: int) -> StreamOperator:
+    """Elements are packed ``[keys | counts]`` (each keys_per_elem wide).
+
+    acc[key] += count for every (key, count) pair; key < 0 marks padding.
+    """
+
+    def apply(acc, elem, k):
+        keys = elem[:keys_per_elem].astype(jnp.int32)
+        counts = elem[keys_per_elem : 2 * keys_per_elem]
+        valid = keys >= 0
+        safe_keys = jnp.clip(keys, 0, n_bins - 1)
+        return acc.at[safe_keys].add(jnp.where(valid, counts, 0.0))
+
+    return StreamOperator(
+        name="histogram",
+        init=lambda: jnp.zeros((n_bins,), jnp.float32),
+        apply=apply,
+    )
+
+
+def pack_kv(keys: jax.Array, counts: jax.Array, elem_width: int) -> jax.Array:
+    """Pack (keys, counts) into histogram_op's element layout."""
+    k = keys.astype(jnp.float32)
+    c = counts.astype(jnp.float32)
+    pad = elem_width - 2 * keys.shape[0]
+    return jnp.concatenate([k, c, jnp.zeros((max(pad, 0),), jnp.float32)])
+
+
+# -- buffering I/O group -------------------------------------------------------
+
+def buffer_op(capacity_chunks: int, chunk_elems: int, dtype=jnp.float32) -> StreamOperator:
+    """Append arriving elements into a preallocated ring buffer.
+
+    State = (buffer[capacity, S], write_ptr). The decoupled I/O group
+    drains the buffer to host storage off the critical path
+    (io/iogroup.py); capacity plays the paper's "substantial memory for
+    buffering" role.
+    """
+
+    def init():
+        return (
+            jnp.zeros((capacity_chunks, chunk_elems), dtype),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def apply(state, elem, k):
+        buf, ptr = state
+        buf = lax_dynamic_row_set(buf, ptr % capacity_chunks, elem.astype(dtype))
+        return buf, ptr + 1
+
+    return StreamOperator(name="buffer", init=init, apply=apply)
+
+
+def lax_dynamic_row_set(buf: jax.Array, row: jax.Array, value: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice(buf, value[None, :], (row, jnp.zeros((), row.dtype)))
+
+
+# -- workload analytics (paper Listing 1) --------------------------------------
+
+def workload_stats_op(max_samples: int) -> StreamOperator:
+    """Collect scalar workload samples; finalize to (min, max, median).
+
+    Elements carry one scalar workload figure in slot 0. The paper's
+    `analyze_workload` computes min/max/median over processes — three
+    reductions that would otherwise be three global collectives.
+    """
+
+    def init():
+        return (
+            jnp.full((max_samples,), jnp.nan, jnp.float32),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def apply(state, elem, k):
+        samples, n = state
+        samples = jax.lax.dynamic_update_slice(
+            samples, elem[:1], (jnp.minimum(n, max_samples - 1),)
+        )
+        return samples, n + 1
+
+    return StreamOperator(name="workload_stats", init=init, apply=apply)
+
+
+def finalize_workload_stats(state) -> dict[str, jax.Array]:
+    samples, n = state
+    valid = ~jnp.isnan(samples)
+    big = jnp.where(valid, samples, jnp.inf)
+    small = jnp.where(valid, samples, -jnp.inf)
+    med = jnp.nanmedian(samples)
+    return {
+        "min": jnp.min(big),
+        "max": jnp.max(small),
+        "median": med,
+        "count": n,
+    }

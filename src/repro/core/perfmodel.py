@@ -1,0 +1,191 @@
+"""The paper's analytical performance model (Sec. II-D, Eqs. 1-4).
+
+    T_c = T_W0 + T_sigma + T_W1                                     (Eq. 1)
+    T_d = max( T_W0/(1-alpha) + T_sigma , T'_W1/alpha )             (Eq. 2)
+    T_d = beta * [ T_W0/(1-alpha) + T_sigma ] + T'_W1/alpha         (Eq. 3)
+    T_d = beta(S) * [ T_W0/(1-alpha) + T_sigma + (D/S)*o ]
+          + T'_W1/alpha                                             (Eq. 4)
+
+plus the memory bound of Sec. II-D (streamed consumption is O(S),
+buffered consumption is O(D)) and the five suitability criteria of
+Sec. II-E. The model is used three ways:
+
+  1. unit/property tests pin its limiting behaviour (beta=1 -> sum of
+     ops; beta=0 -> decoupled op only, matching the paper's prose);
+  2. benchmarks calibrate (o, beta(S), T'_W1 complexity) from measured
+     multi-device runs and evaluate the model at P = 32..8192 to compare
+     against the paper's Cray XC40 speedups;
+  3. the trainer uses `optimal_alpha` to auto-size service groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Per-process workload of a two-operation application at scale P."""
+
+    t_w0: float  # seconds of the kept-coupled operation per process
+    t_w1: float  # seconds of the decoupling candidate per process
+    d_bytes: float  # total bytes streamed between the groups (D)
+    sigma: float = 0.0  # per-process time stddev (feeds T_sigma)
+    # complexity of the decoupled op when run by a group of size P1
+    # (default: perfectly divisible work). Receives (t_w1_total, P, P1).
+    t_w1_prime: Callable[[float, int, int], float] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamCosts:
+    """Platform stream parameters."""
+
+    o_seconds: float  # per-element overhead (o): pack + inject cost
+    beta: Callable[[float, float], float] | None = None  # beta(S, D)
+
+
+def t_sigma(sigma: float, n_procs: int) -> float:
+    """Expected synchronization penalty E[max_i t_i] - E[t] for P iid
+    Gaussian process times (extreme-value approximation sqrt(2 ln P)).
+
+    This is the paper's T_sigma: idle time waiting for the slowest peer
+    ([4], [5] in the paper). Grows with P — the reason imbalance bites
+    harder at scale.
+    """
+    if n_procs <= 1 or sigma <= 0.0:
+        return 0.0
+    return sigma * math.sqrt(2.0 * math.log(n_procs))
+
+
+def default_beta(s_bytes: float, d_bytes: float, beta_min: float = 0.05) -> float:
+    """Default beta(S): finer granularity -> better pipelining.
+
+    beta == non-overlapped fraction of Op0. With one element (S >= D)
+    nothing pipelines (beta = 1). With D/S elements the first element
+    arrives after ~S/D of Op0, so beta ~= S/D, floored at beta_min
+    (startup/drain of the pipeline can never be hidden).
+    """
+    if d_bytes <= 0:
+        return 1.0
+    return min(1.0, max(beta_min, s_bytes / d_bytes))
+
+
+def t_conventional(p: WorkloadProfile, n_procs: int) -> float:
+    """Eq. 1."""
+    return p.t_w0 + t_sigma(p.sigma, n_procs) + p.t_w1
+
+
+def _t_w1_decoupled(p: WorkloadProfile, n_procs: int, n_service: int) -> float:
+    """T'_W1/alpha: per-process time of the decoupled op on the group."""
+    if p.t_w1_prime is not None:
+        return p.t_w1_prime(p.t_w1 * n_procs, n_procs, n_service)
+    # default: total work T_W1 * P redistributed over the service group
+    return p.t_w1 * n_procs / max(n_service, 1)
+
+
+def t_decoupled(
+    p: WorkloadProfile,
+    n_procs: int,
+    alpha: float,
+    s_bytes: float,
+    costs: StreamCosts,
+    pessimistic_max: bool = False,
+) -> float:
+    """Eq. 4 (or Eq. 2 when ``pessimistic_max``)."""
+    if not 0.0 < alpha < 1.0:
+        raise ValueError(f"alpha must be in (0,1), got {alpha}")
+    n_service = max(1, int(round(alpha * n_procs)))
+    n_compute = n_procs - n_service
+    if n_compute < 1:
+        raise ValueError("no compute processes left")
+    compute_side = (
+        p.t_w0 * n_procs / n_compute  # 1/(1-alpha) * T_W0 (exact integer form)
+        + t_sigma(p.sigma, n_compute)
+        + (p.d_bytes / max(s_bytes, 1.0)) * costs.o_seconds
+    )
+    service_side = _t_w1_decoupled(p, n_procs, n_service)
+    if pessimistic_max:
+        return max(compute_side, service_side)  # Eq. 2
+    beta_fn = costs.beta or default_beta
+    beta = beta_fn(s_bytes, p.d_bytes)
+    return beta * compute_side + service_side  # Eqs. 3-4
+
+
+def speedup(
+    p: WorkloadProfile, n_procs: int, alpha: float, s_bytes: float, costs: StreamCosts
+) -> float:
+    return t_conventional(p, n_procs) / t_decoupled(p, n_procs, alpha, s_bytes, costs)
+
+
+def memory_bytes(d_bytes: float, s_bytes: float, buffered: bool) -> float:
+    """Sec. II-D memory model: streamed O(S) vs buffered O(D)."""
+    return d_bytes if buffered else min(s_bytes, d_bytes)
+
+
+def optimal_alpha(
+    p: WorkloadProfile,
+    n_procs: int,
+    s_bytes: float,
+    costs: StreamCosts,
+    candidates: Sequence[float] = (1 / 64, 1 / 32, 1 / 16, 1 / 8, 1 / 4, 1 / 2),
+) -> tuple[float, float]:
+    """Grid-search alpha (the paper tunes alpha empirically, Fig. 5)."""
+    best = None
+    for a in candidates:
+        if round(a * n_procs) < 1 or round(a * n_procs) >= n_procs:
+            continue
+        t = t_decoupled(p, n_procs, a, s_bytes, costs)
+        if best is None or t < best[1]:
+            best = (a, t)
+    if best is None:
+        raise ValueError("no feasible alpha")
+    return best
+
+
+def optimal_granularity(
+    p: WorkloadProfile,
+    n_procs: int,
+    alpha: float,
+    costs: StreamCosts,
+    candidates: Sequence[float] = tuple(2.0**k for k in range(10, 28)),
+) -> tuple[float, float]:
+    """Grid-search S: fine S pipelines better, coarse S cuts (D/S)*o."""
+    best = None
+    for s in candidates:
+        t = t_decoupled(p, n_procs, alpha, s, costs)
+        if best is None or t < best[1]:
+            best = (s, t)
+    assert best is not None
+    return best
+
+
+# -- Sec. II-E suitability criteria ---------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OperationTraits:
+    orthogonal: bool = False  # little data dependency with other ops
+    complexity_grows_with_p: bool = False  # e.g. collectives, all-to-all
+    high_variance: bool = False  # irregular execution time
+    continuous_dataflow: bool = False  # produces data throughout the stage
+    special_hardware: bool = False  # benefits from special-purpose nodes
+
+
+def decoupling_criteria(traits: OperationTraits) -> list[str]:
+    """Which of the paper's five categories (Sec. II-E) an op satisfies."""
+    hits = []
+    if traits.orthogonal:
+        hits.append("orthogonal")
+    if traits.complexity_grows_with_p:
+        hits.append("complexity-grows-with-P")
+    if traits.high_variance:
+        hits.append("high-variance")
+    if traits.continuous_dataflow:
+        hits.append("continuous-dataflow")
+    if traits.special_hardware:
+        hits.append("special-hardware")
+    return hits
+
+
+def recommend_decoupling(traits: OperationTraits) -> bool:
+    return len(decoupling_criteria(traits)) >= 1

@@ -1,0 +1,79 @@
+"""Stream elements: the paper's granularity-S dataflow unit (Sec. II-D).
+
+A *stream element* is the basic unit injected into a channel "as soon as
+data for one element is ready". Here a `StreamChunker` turns an
+arbitrary pytree into a `(num_chunks, chunk_elems)` buffer (and back),
+so channels and operators are defined over a uniform element type. The
+granularity S trades pipelining (`beta(S)`) against per-element
+overhead (`(D/S) * o`) exactly as in Eq. 4; S is a config knob
+everywhere streams are used.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import treeutil
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamChunker:
+    """Static chunking plan for a pytree with element granularity S.
+
+    ``chunk_elems`` plays the role of S (measured in elements of
+    ``dtype``; bytes = chunk_elems * itemsize). All shapes are static so
+    the chunker composes with jit/scan.
+    """
+
+    spec: treeutil.TreeSpec
+    chunk_elems: int
+    n_chunks: int
+    padded: int
+    dtype: Any
+
+    @staticmethod
+    def plan(tree: Any, chunk_elems: int, dtype=jnp.float32) -> "StreamChunker":
+        spec = treeutil.spec_of(tree)
+        total = max(spec.total, 1)
+        chunk_elems = int(min(chunk_elems, total)) if chunk_elems > 0 else total
+        n_chunks = treeutil.num_chunks(total, chunk_elems)
+        return StreamChunker(
+            spec=spec,
+            chunk_elems=chunk_elems,
+            n_chunks=n_chunks,
+            padded=n_chunks * chunk_elems,
+            dtype=dtype,
+        )
+
+    # -- pack / unpack ------------------------------------------------------
+    def pack(self, tree: Any) -> jax.Array:
+        """pytree -> (n_chunks, chunk_elems) stream-element buffer."""
+        flat = treeutil.flatten(tree, self.dtype)
+        flat = treeutil.pad_to_multiple(flat, self.chunk_elems)
+        return flat.reshape(self.n_chunks, self.chunk_elems)
+
+    def unpack(self, elements: jax.Array) -> Any:
+        """(n_chunks, chunk_elems) -> pytree (drops padding)."""
+        flat = elements.reshape(-1)[: self.spec.total]
+        return treeutil.unflatten(self.spec, flat)
+
+    # -- bookkeeping for the perf model (D, S, D/S) --------------------------
+    @property
+    def element_bytes(self) -> int:
+        return self.chunk_elems * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def total_bytes(self) -> int:
+        return self.spec.total * jnp.dtype(self.dtype).itemsize
+
+    def overhead_calls(self) -> int:
+        """Number of element injections = D/S in Eq. 4."""
+        return self.n_chunks
+
+
+def granularity_from_bytes(nbytes: int, dtype=jnp.float32) -> int:
+    """Convert a byte-granularity config value to elements."""
+    return max(1, nbytes // jnp.dtype(dtype).itemsize)

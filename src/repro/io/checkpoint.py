@@ -1,0 +1,159 @@
+"""Fault-tolerant sharded checkpointing (no orbax/tensorstore deps).
+
+Layout on disk:
+    <dir>/step_000123/
+        leaf_00000.npy ... leaf_NNNNN.npy    one file per pytree leaf
+        treedef.json                          paths + shapes + dtypes
+        COMMIT                                atomic commit marker
+
+Guarantees:
+  * atomic: written into step_XXXX.tmp then renamed; COMMIT written last.
+    A crash mid-write leaves no COMMIT -> the loader ignores the dir.
+  * mesh-agnostic: leaves are stored unsharded (gathered); `restore`
+    re-device_puts onto any target sharding — this is what makes
+    elastic re-scaling possible (launch/elastic.py).
+  * async: `save_async` runs the gather+write on a worker thread — the
+    decoupled-I/O idea at trainer level (the paper's Sec. IV-D2: a
+    dedicated I/O path with aggressive buffering off the critical path).
+  * retention: keep the newest `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any
+
+import jax
+import numpy as np
+
+COMMIT = "COMMIT"
+
+
+def _leaf_paths(tree: Any) -> list[str]:
+    paths = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(path))
+    return paths
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous atomic checkpoint write. Returns the final dir."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    meta = {
+        "step": step,
+        "paths": _leaf_paths(tree),
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+    }
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), np.asarray(leaf))
+    with open(os.path.join(tmp, "treedef.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # commit marker written after the rename: dir contents are complete
+    with open(os.path.join(final, COMMIT), "w") as f:
+        f.write("ok\n")
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    """Newest committed step, ignoring torn writes."""
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        if not os.path.exists(os.path.join(directory, name, COMMIT)):
+            continue  # torn write — crash before commit
+        try:
+            s = int(name.split("_")[1])
+        except ValueError:
+            continue
+        best = s if best is None or s > best else best
+    return best
+
+
+def restore(directory: str, step: int, like: Any, shardings: Any | None = None) -> Any:
+    """Load a checkpoint into the structure of `like`, placing each leaf
+    on `shardings` (pytree of Sharding) if given — this is where elastic
+    re-scaling happens: the same files restore onto any mesh."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(d, COMMIT)):
+        raise FileNotFoundError(f"no committed checkpoint at {d}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    out = []
+    sh_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves_like)
+    )
+    for i, (ref, sh) in enumerate(zip(leaves_like, sh_leaves)):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        ref_shape = tuple(np.shape(ref))
+        if tuple(arr.shape) != ref_shape:
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != expected {ref_shape}"
+            )
+        if not ref_shape and not hasattr(ref, "dtype"):
+            out.append(arr[()])  # python scalar leaf (e.g. step counter)
+            continue
+        arr = arr.astype(np.asarray(ref).dtype if not hasattr(ref, "dtype") else ref.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def retain(directory: str, keep: int) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1])
+        for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+        and os.path.exists(os.path.join(directory, n, COMMIT))
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """One background writer thread; at most one save in flight.
+
+    `save(step, tree)` snapshots device arrays to host synchronously
+    (cheap) and writes asynchronously. `wait()` blocks until the last
+    write commits — call before shutdown."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
+        self._last: Future | None = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree: Any) -> None:
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        with self._lock:
+            if self._last is not None:
+                self._last.result()  # backpressure: one in flight
+            self._last = self._pool.submit(self._write, step, host_tree)
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        save(self.directory, step, host_tree)
+        retain(self.directory, self.keep)
+
+    def wait(self) -> None:
+        with self._lock:
+            if self._last is not None:
+                self._last.result()
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown()

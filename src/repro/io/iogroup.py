@@ -1,0 +1,71 @@
+"""Decoupled I/O group: the paper's particle-I/O pattern (Sec. IV-D2)
+as a reusable primitive.
+
+Compute rows stream state chunks to the io service rows; the io rows
+accumulate them in a device-side ring buffer (`buffer_op` — the paper's
+"substantial memory for buffering") and drain to host storage with
+`jax.experimental.io_callback` OFF the compute rows' critical path:
+only the io rows execute a host round-trip, and only when the buffer
+fills.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback
+
+from repro.core import GroupedMesh, StreamChunker, make_channel
+from repro.core.operators import buffer_op
+
+
+class HostSink:
+    """Host-side append-only store (one file per drain)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self.n_drains = 0
+
+    def drain(self, buf: np.ndarray, count: np.ndarray) -> np.ndarray:
+        n = int(count)
+        if n > 0:
+            path = os.path.join(self.directory, f"drain_{self.n_drains:06d}.npy")
+            np.save(path, np.asarray(buf)[: min(n, buf.shape[0])])
+            self.n_drains += 1
+        return np.zeros((), np.int32)
+
+
+def stream_to_io_group(
+    tree,
+    gmesh: GroupedMesh,
+    sink: HostSink,
+    *,
+    granularity_elems: int = 8192,
+    capacity_chunks: int = 64,
+):
+    """Per-device code: stream `tree` (e.g. a params/trace snapshot) to
+    the io rows, buffer there, and drain to `sink` via io_callback.
+
+    Returns the number of chunks written (on io rows)."""
+    channel = make_channel(gmesh, "io")
+    chunker = StreamChunker.plan(tree, granularity_elems)
+    elements = chunker.pack(tree)
+    op = buffer_op(capacity_chunks, chunker.chunk_elems)
+    buf, count = channel.stream_fold(elements, op.apply, op.init())
+
+    is_io = channel.is_member("io")
+
+    def maybe_drain(buf, count, flag):
+        # only io rows carry a meaningful buffer; others pass zeros
+        return io_callback(
+            sink.drain, jax.ShapeDtypeStruct((), jnp.int32),
+            jnp.where(flag, 1.0, 0.0)[..., None, None] * buf, count,
+            ordered=True,
+        )
+
+    _ = maybe_drain(buf, jnp.where(is_io, count, 0), is_io)
+    return count

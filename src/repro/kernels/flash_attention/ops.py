@@ -1,0 +1,38 @@
+"""Jitted public wrapper for the flash attention kernel.
+
+`mha(q, k, v)` accepts the model-layout (B, S, H, d) tensors used by
+repro.models.layers and transposes to the kernel layout. On a real TPU
+pass interpret=False; this container validates in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def mha(
+    q: jax.Array,  # (B, Sq, H, d)
+    k: jax.Array,  # (B, Sk, Kv, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = flash_attention(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.swapaxes(1, 2)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, d)
+    k: jax.Array,  # (B, Kv, Sk, d)
+    v: jax.Array,  # (B, Kv, Sk, d)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kv, sk = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=1)
+        v = jnp.repeat(v, h // kv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= qp >= kp
+    if window > 0:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

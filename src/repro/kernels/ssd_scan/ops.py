@@ -1,0 +1,13 @@
+"""Jitted public wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+    return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

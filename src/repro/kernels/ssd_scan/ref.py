@@ -1,0 +1,33 @@
+"""Oracle for the SSD scan kernel — delegates to the model's pure-jnp
+chunked SSD (repro.models.ssm), which is itself unit-tested against a
+naive per-step recurrence."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, *, chunk: int = 256) -> jax.Array:
+    y, _ = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y
+
+
+def ssd_naive(x, dt, A, Bm, Cm):
+    """O(S) per-step recurrence — the ground truth both implementations
+    must match."""
+    import jax.numpy as jnp
+
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t].astype(jnp.float32) * A)  # (b,h)
+        outer = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t].astype(jnp.float32),
+            x[:, t].astype(jnp.float32), Bm[:, t].astype(jnp.float32),
+        )
+        state = decay[..., None, None] * state + outer
+        ys.append(jnp.einsum("bhpn,bn->bhp", state, Cm[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype)

@@ -1,0 +1,121 @@
+"""Mamba-2 SSD chunked-scan kernel for TPU.
+
+Tiling: grid = (batch, heads, num_chunks); the chunk index is minor-most
+so TPU iterates chunks sequentially per (b, h) and the recurrent state
+(P x N) lives in VMEM scratch across grid steps — the inter-chunk
+recurrence never round-trips HBM. Within a chunk the SSD dual form is
+evaluated as two MXU matmuls (C B^T masked-decay quadratic + state
+read-out), which is the TPU-native adaptation of the paper's GPU
+algorithm (DESIGN.md §6).
+
+VMEM working set per step: x (Q x P), B/C (Q x N), L (Q x Q),
+state (P x N) ~= (256*64 + 2*256*128 + 256^2 + 64*128)*4B ~= 0.7 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,   # (1, 1, Q, P)
+    dt_ref,  # (1, 1, Q)
+    a_ref,   # (1,)
+    b_ref,   # (1, Q, N)
+    c_ref,   # (1, Q, N)
+    o_ref,   # (1, 1, Q, P)
+    state_scr,  # (P, N) f32
+    *, chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (Q,)
+    a = a_ref[0].astype(jnp.float32)         # scalar
+    bm = b_ref[0].astype(jnp.float32)        # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)        # (Q, N)
+
+    dA = dt * a                              # (Q,) log decay, <= 0
+    dA_cum = jnp.cumsum(dA)                  # (Q,)
+
+    # intra-chunk masked quadratic: L[s,t] = exp(cum[s]-cum[t]) for s>=t
+    diff = dA_cum[:, None] - dA_cum[None, :]
+    sgeq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    L = jnp.exp(jnp.where(sgeq, diff, -1e30))  # clamp-then-exp (no inf)
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q) = C B^T  -> MXU
+    gated = L * scores
+    xdt = x * dt[:, None]
+    y_diag = jax.lax.dot_general(
+        gated, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    # inter-chunk: read out entering state, then update it
+    state_decay = jnp.exp(dA_cum)            # (Q,)
+    y_off = jax.lax.dot_general(
+        cm, state_scr[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * state_decay[:, None]                  # (Q, P)
+
+    decay_to_end = jnp.exp(dA_cum[-1] - dA_cum)  # (Q,)
+    contrib = jax.lax.dot_general(
+        xdt * decay_to_end[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    state_scr[...] = jnp.exp(dA_cum[-1]) * state_scr[...] + contrib
+
+    o_ref[0, 0] = (y_diag + y_off).astype(o_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    Bm: jax.Array,  # (B, S, N)
+    Cm: jax.Array,  # (B, S, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = nc * chunk
+    xt = x.transpose(0, 2, 1, 3)    # (B, H, S, P)
+    dtt = dt.transpose(0, 2, 1)      # (B, H, S)
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c: (b_, h_, c)),
+            pl.BlockSpec((1,), lambda b_, h_, c: (h_,)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c: (b_, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, Bm, Cm)
+    return out.transpose(0, 2, 1, 3)[:, :s]

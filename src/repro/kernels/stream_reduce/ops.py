@@ -1,0 +1,18 @@
+"""Jitted public wrappers for the stream-reduce kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.stream_reduce.stream_reduce import chunk_accumulate, histogram
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "interpret"))
+def keyed_histogram(keys, counts, n_bins: int, *, interpret: bool = True):
+    return histogram(keys, counts, n_bins, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def accumulate(elements, *, interpret: bool = True):
+    return chunk_accumulate(elements, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Oracles for the stream-reduce kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(keys: jax.Array, counts: jax.Array, n_bins: int) -> jax.Array:
+    valid = keys >= 0
+    safe = jnp.clip(keys, 0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.float32).at[safe].add(
+        jnp.where(valid, counts.astype(jnp.float32), 0.0)
+    )
+
+
+def chunk_accumulate_ref(elements: jax.Array) -> jax.Array:
+    return jnp.sum(elements.astype(jnp.float32), axis=0)

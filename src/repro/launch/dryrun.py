@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks
+# the device count at first init, and the production meshes need 512
+# placeholder host devices (256 single-pod + 512 multi-pod).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, WITHOUT allocating model state
+(ShapeDtypeStruct stand-ins only):
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM;
+  * compiled.cost_analysis()    — per-device FLOPs/bytes for §Roofline;
+  * collective-byte accounting  — parsed from the optimized HLO;
+  * a JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k \
+      --mesh multi --mode decoupled
+  python -m repro.launch.dryrun --all --mesh single   # full grid
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch_cfg, shape_cfg, *, padded_batch: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    import jax.numpy as jnp
+
+    b = padded_batch or shape_cfg.global_batch
+    s = shape_cfg.seq_len
+    out = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+        "mask": _sds((b, s), jnp.float32),
+    }
+    if arch_cfg.frontend == "audio":
+        out["frames"] = _sds((b, arch_cfg.n_frontend_tokens, arch_cfg.d_model), jnp.float32)
+    if arch_cfg.frontend == "vision":
+        out["patches"] = _sds((b, arch_cfg.n_frontend_tokens, arch_cfg.d_model), jnp.float32)
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, mode: str, out_dir: str) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import SHAPES, get
+    from repro.core.groups import batch_rows_padding
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build
+    from repro.serve.serve_step import build_decode_step, build_prefill_step
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.train_step import TrainStepConfig, make_jitted_step
+    from repro.utils import hloanalyze, roofline
+
+    t0 = time.time()
+    arch_cfg = get(arch)
+    shape_cfg = SHAPES[shape]
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = build(arch_cfg)
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "mode": mode,
+        "n_chips": int(n_chips),
+        "status": "ok",
+    }
+
+    # -- skips ------------------------------------------------------------------
+    if shape == "long_500k" and not arch_cfg.supports_long_context:
+        record["status"] = "skip"
+        record["skip_reason"] = "full-attention arch: long_500k needs sub-quadratic attention"
+        return _finish(record, out_dir, t0)
+    if shape_cfg.kind == "decode" and not arch_cfg.supports_decode:
+        record["status"] = "skip"
+        record["skip_reason"] = "arch has no decode step"
+        return _finish(record, out_dir, t0)
+
+    with jax.set_mesh(mesh):
+        if shape_cfg.kind == "train":
+            data_rows = mesh.shape["data"]
+            opt_cfg = OptConfig()
+            ts_cfg = TrainStepConfig(
+                mode=mode, compress=os.environ.get("REPRO_COMPRESS", "none")
+            )
+            padded = None
+            if mode == "decoupled":
+                service = max(1, int(round(ts_cfg.reduce_alpha * data_rows)))
+                per_row, padded_rows = batch_rows_padding(
+                    shape_cfg.global_batch, data_rows - service
+                )
+                padded = per_row * data_rows
+                if multi_pod:
+                    padded *= mesh.shape["pod"]
+            batch_sds = input_specs(arch_cfg, shape_cfg, padded_batch=padded)
+            params_like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            opt_like = jax.eval_shape(lambda: init_opt_state(opt_cfg, params_like))
+            step, _ = make_jitted_step(
+                model, mesh, opt_cfg, ts_cfg, params_like, batch_sds,
+                multi_pod=multi_pod, donate=False,
+            )
+            lowered = step.lower(params_like, opt_like, batch_sds)
+        elif shape_cfg.kind == "prefill":
+            sds = input_specs(arch_cfg, shape_cfg)
+            make = build_prefill_step(model, mesh, multi_pod=multi_pod)
+            args = [sds["tokens"]]
+            if arch_cfg.frontend:
+                args.append(sds.get("frames") or sds.get("patches"))
+            lowered = make(*args).lower(
+                jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), *args
+            )
+        else:  # decode
+            b = shape_cfg.global_batch
+            step, in_sh = build_decode_step(
+                model, mesh, multi_pod=multi_pod,
+                shard_seq=(shape == "long_500k"), batch=b,
+                max_len=shape_cfg.seq_len, donate=False,
+            )
+            params_like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+            cache_like = jax.eval_shape(lambda: model.init_cache(b, shape_cfg.seq_len))
+            token_sds = _sds((b, 1), jnp.int32)
+            lowered = step.lower(params_like, cache_like, token_sds)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # XLA's analyzer visits while bodies once; ours applies call-graph
+    # trip-count multipliers (utils/hloanalyze.py) — use it for roofline.
+    mine = hloanalyze.analyze(compiled.as_text())
+    rl = roofline.from_dryrun(
+        {"flops": mine.flops, "bytes accessed": mine.bytes},
+        mine.coll_wire,
+        roofline.model_flops_for(arch_cfg, shape_cfg),
+        int(n_chips),
+    )
+    record.update(
+        {
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_device_bytes": mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes,
+                "fits_16GB": (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
+                < 16e9,
+            },
+            "cost_xla": {
+                k: float(v)
+                for k, v in cost.items()
+                if k in ("flops", "bytes accessed", "transcendentals")
+            },
+            **mine.as_dict(),
+            "roofline": rl.as_dict(),
+        }
+    )
+    print(f"[dryrun] {arch} x {shape} x {mesh_kind} x {mode}: "
+          f"peak={record['memory']['peak_device_bytes']/1e9:.2f}GB "
+          f"dominant={rl.dominant} step={rl.step_time_s*1e3:.2f}ms")
+    return _finish(record, out_dir, t0)
+
+
+def _finish(record: dict, out_dir: str, t0: float) -> dict:
+    record["wall_s"] = time.time() - t0
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['arch']}_{record['shape']}_{record['mesh']}_{record['mode']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--mode", default="conventional",
+                    choices=["conventional", "decoupled", "overlap"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES, SHAPES
+
+    cells = (
+        [(a, s) for a in ARCH_NAMES for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = 0
+    for arch, shape in cells:
+        try:
+            run_cell(arch, shape, args.mesh, args.mode, args.out)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            rec = {
+                "arch": arch, "shape": shape, "mesh": args.mesh,
+                "mode": args.mode, "status": "fail",
+                "error": traceback.format_exc()[-2000:],
+            }
+            _finish(rec, args.out, time.time())
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

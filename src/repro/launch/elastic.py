@@ -1,0 +1,48 @@
+"""Elastic re-scaling: resume any committed checkpoint onto a different
+mesh (fewer/more healthy hosts after a failure, or a grown allocation).
+
+Checkpoints are mesh-agnostic (io/checkpoint.py stores unsharded
+leaves); this module re-derives shardings for the TARGET mesh and
+device_puts each leaf. Used by tests/test_multidevice.py's
+crash->resume-on-smaller-mesh case and by launch/train.py on restart.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.io import checkpoint as ckpt
+from repro.train import sharding
+
+
+def restore_for_mesh(ckpt_dir: str, step: int, like_state: dict, mesh) -> dict:
+    """Load `step` and place params/opt on `mesh`-appropriate shardings."""
+    pspecs = sharding.param_specs(like_state["params"], mesh.shape["model"])
+    shardings = {
+        "params": sharding.named(mesh, pspecs),
+        "opt": None,  # moments re-placed by the first step's in_shardings
+        "step": None,
+    }
+    restored = ckpt.restore(ckpt_dir, step, like_state, None)
+    restored["params"] = jax.device_put(restored["params"], shardings["params"])
+    return restored
+
+
+def healthy_mesh(preferred_shape: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Build the largest mesh the surviving devices allow: shrink the
+    data axis first (model parallelism is topology-bound)."""
+    n = len(jax.devices())
+    shape = list(preferred_shape)
+    while shape[0] > 1 and n < 1:
+        shape[0] //= 2
+    total = 1
+    for s in shape:
+        total *= s
+    while total > n and shape[0] > 1:
+        shape[0] //= 2
+        total //= 2
+    if total > n:
+        raise RuntimeError(f"not enough devices: need {total}, have {n}")
+    return jax.make_mesh(
+        tuple(shape), axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
+    )

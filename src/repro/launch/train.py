@@ -1,0 +1,80 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 50 --decouple reduce --alpha 0.25
+
+On this CPU container use --smoke (reduced config, 8 fake devices). On
+a real TPU pod slice, drop --smoke; the mesh comes from
+launch/mesh.make_production_mesh and jax.distributed.initialize().
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config on CPU")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--decouple", default="reduce", choices=["none", "reduce"])
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "conventional", "decoupled", "overlap"])
+    ap.add_argument("--alpha", type=float, default=1 / 16)
+    ap.add_argument("--compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--data", type=int, default=4)
+    ap.add_argument("--model", type=int, default=2)
+    args = ap.parse_args()
+
+    if args.smoke:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.data * args.model}",
+        )
+
+    import jax
+    from jax.sharding import AxisType
+
+    from repro.configs import get, get_smoke
+    from repro.data.pipeline import DataConfig, Pipeline
+    from repro.models import build
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
+    model = build(cfg)
+    mode = args.mode or ("decoupled" if args.decouple == "reduce" else "conventional")
+
+    if args.smoke:
+        mesh = jax.make_mesh((args.data, args.model), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
+    else:
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh()
+
+    pipe = Pipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        kind="zipf", skew=0.4,
+        frontend=cfg.frontend, n_frontend_tokens=cfg.n_frontend_tokens,
+        d_model=cfg.d_model,
+    ))
+    with jax.set_mesh(mesh):
+        trainer = Trainer(
+            model, mesh, pipe,
+            OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps),
+            TrainStepConfig(mode=mode, reduce_alpha=args.alpha,
+                            compress=args.compress),
+            TrainerConfig(total_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+                          ckpt_dir=args.ckpt_dir, log_every=10),
+        )
+        state = trainer.run()
+        trainer.close()
+    print(f"done at step {state['step']}")
+
+
+if __name__ == "__main__":
+    main()

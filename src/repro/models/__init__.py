@@ -1,0 +1,2 @@
+from repro.models import encdec, layers, model_zoo, moe, ssm, transformer
+from repro.models.model_zoo import Model, build, synthetic_batch

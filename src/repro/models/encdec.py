@@ -1,0 +1,213 @@
+"""Encoder-decoder backbone (whisper-small). The conv/mel frontend is a
+STUB: callers provide precomputed frame embeddings (B, n_frames, d).
+
+Encoder: bidirectional self-attention stack. Decoder: causal self-attn
++ cross-attn over encoder memory + MLP. Decode uses the same flattened
+KV layout as transformer.py plus a static cross-attention cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.transformer import (
+    _init_attn,
+    chunked_softmax_xent,
+    lm_logits,
+    unembed_table,
+)
+
+Params = dict
+
+
+def _init_enc_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "attn": _init_attn(ks[0], cfg),
+        "norm2": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, cfg.mlp_bias),
+    }
+
+
+def _init_dec_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "attn": _init_attn(ks[0], cfg),
+        "norm_x": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "xattn": _init_attn(ks[1], cfg),
+        "norm2": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind, cfg.mlp_bias),
+    }
+
+
+def init_encdec(cfg, key) -> Params:
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": layers.init_embedding(ks[2], cfg.vocab_size, cfg.d_model),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "final_norm": layers.init_norm(cfg.d_model, cfg.norm_kind),
+        "lm_head": {"table": layers._dense_init(ks[3], (cfg.vocab_size, cfg.d_model), 0.02)},
+    }
+
+
+def _mha(cfg, p, hq, hkv, mask, dtype):
+    b, sq, _ = hq.shape
+    sk = hkv.shape[1]
+    hd = cfg.resolved_head_dim
+    q = layers.linear(p["wq"], hq, dtype).reshape(b, sq, cfg.n_heads, hd)
+    k = layers.linear(p["wk"], hkv, dtype).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = layers.linear(p["wv"], hkv, dtype).reshape(b, sk, cfg.n_kv_heads, hd)
+    # context-parallel activation sharding (whisper's 12 heads don't
+    # divide a 16-way model axis — see transformer._attention_full)
+    q = layers.maybe_shard(q, "batch", "model", None, None)
+    out = layers.attention_plain(q, k, v, mask, 1.0 / np.sqrt(hd))
+    out = layers.maybe_shard(out, "batch", "model", None, None)
+    return layers.linear(p["wo"], out.reshape(b, sq, cfg.d_q), dtype)
+
+
+def encode(cfg, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, n_frames, d) precomputed frontend embeddings."""
+    dtype = cfg.dtype
+    x = frames.astype(dtype)
+    s = x.shape[1]
+    x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    zero_mask = jnp.zeros((s, s), jnp.float32)
+
+    @jax.checkpoint
+    def body(x, p):
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + _mha(cfg, p["attn"], h, h, zero_mask, dtype)
+        h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layers.apply_norm(params["enc_norm"], x, cfg.norm_kind, cfg.norm_eps)
+
+
+def _causal_self_attn(cfg, p, h, pos, dtype):
+    """Causal decoder self-attention; streaming-softmax KV blocks for
+    long sequences (O(S*block) memory instead of an O(S^2) mask).
+    Returns (out, k_flat, v_flat) so prefill can fill the cache."""
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(hd)
+    q = layers.linear(p["wq"], h, dtype).reshape(b, s, cfg.n_heads, hd)
+    k = layers.linear(p["wk"], h, dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    v = layers.linear(p["wv"], h, dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    q = layers.maybe_shard(q, "batch", "model", None, None)
+    from repro.models.transformer import BLOCKWISE_THRESHOLD
+
+    if s > BLOCKWISE_THRESHOLD:
+        out = layers.attention_blockwise(q, k, v, pos, pos, 0, scale)
+    else:
+        mask = layers.causal_window_mask(pos, pos, 0)
+        out = layers.attention_plain(q, k, v, mask, scale)
+    out = layers.linear(p["wo"], out.reshape(b, s, cfg.d_q), dtype)
+    return out, k.reshape(b, s, cfg.d_kv), v.reshape(b, s, cfg.d_kv)
+
+
+def decode_train(cfg, params: Params, tokens: jax.Array, memory: jax.Array,
+                 want_kv: bool = False):
+    """Teacher-forced decoder pass. Returns (hidden, kv_stack|None)."""
+    dtype = cfg.dtype
+    x = layers.embed(params["embed"], tokens, dtype)
+    b, s, _ = x.shape
+    x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    pos = jnp.arange(s)
+    xmask = jnp.zeros((s, memory.shape[1]), jnp.float32)
+
+    @jax.checkpoint
+    def body(x, p):
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        attn, kf, vf = _causal_self_attn(cfg, p["attn"], h, pos, dtype)
+        x = x + attn
+        hx = layers.apply_norm(p["norm_x"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + _mha(cfg, p["xattn"], hx, memory, xmask, dtype)
+        h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+        return x, ((kf, vf) if want_kv else None)
+
+    x, kv = jax.lax.scan(body, x, params["dec_layers"])
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return (x, kv) if want_kv else (x, None)
+
+
+def encdec_loss(cfg, params, frames, tokens, labels, mask):
+    memory = encode(cfg, params, frames)
+    hidden, _ = decode_train(cfg, params, tokens, memory)
+    return chunked_softmax_xent(cfg, params, hidden, labels, mask)
+
+
+# -- decode with caches -----------------------------------------------------------
+
+def init_encdec_cache(cfg, batch: int, max_len: int, n_frames: int, dtype=jnp.bfloat16):
+    ln = cfg.n_layers
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros((ln, batch, max_len, cfg.d_kv), dtype),
+        "v": jnp.zeros((ln, batch, max_len, cfg.d_kv), dtype),
+        "xk": jnp.zeros((ln, batch, n_frames, cfg.d_kv), dtype),
+        "xv": jnp.zeros((ln, batch, n_frames, cfg.d_kv), dtype),
+    }
+
+
+def prime_cross_cache(cfg, params, memory: jax.Array, cache: dict) -> dict:
+    """Precompute cross-attention K/V once per request batch."""
+    dtype = cfg.dtype
+    b, sk, _ = memory.shape
+
+    def body(_, p):
+        k = layers.linear(p["xattn"]["wk"], memory, dtype).reshape(b, sk, cfg.d_kv)
+        v = layers.linear(p["xattn"]["wv"], memory, dtype).reshape(b, sk, cfg.d_kv)
+        return None, (k, v)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_layers"])
+    cache["xk"], cache["xv"] = xk.astype(cache["xk"].dtype), xv.astype(cache["xv"].dtype)
+    return cache
+
+
+def decode_step_encdec(cfg, params: Params, cache: dict, token: jax.Array):
+    dtype = cfg.dtype
+    x = layers.embed(params["embed"], token, dtype)
+    b = x.shape[0]
+    pos = cache["pos"]
+    x = x + layers.sinusoidal_at(pos, cfg.d_model).astype(dtype)[None, None]
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(hd)
+
+    def body(x, inp):
+        p, slc = inp
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        q = layers.linear(p["attn"]["wq"], h, dtype).reshape(b, 1, cfg.n_heads, hd)
+        kn = layers.linear(p["attn"]["wk"], h, dtype).reshape(b, 1, cfg.d_kv)
+        vn = layers.linear(p["attn"]["wv"], h, dtype).reshape(b, 1, cfg.d_kv)
+        kc = jax.lax.dynamic_update_slice(slc["k"], kn.astype(slc["k"].dtype), (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(slc["v"], vn.astype(slc["v"].dtype), (0, pos, 0))
+        attn = layers.attention_decode(q, kc, vc, cfg.n_kv_heads, pos + 1, 0, scale)
+        x = x + layers.linear(p["attn"]["wo"], attn.reshape(b, 1, cfg.d_q), dtype)
+        hx = layers.apply_norm(p["norm_x"], x, cfg.norm_kind, cfg.norm_eps)
+        qx = layers.linear(p["xattn"]["wq"], hx, dtype).reshape(b, 1, cfg.n_heads, hd)
+        n_frames = slc["xk"].shape[1]
+        xattn = layers.attention_decode(
+            qx, slc["xk"], slc["xv"], cfg.n_kv_heads, jnp.full((), n_frames, jnp.int32), 0, scale
+        )
+        x = x + layers.linear(p["xattn"]["wo"], xattn.reshape(b, 1, cfg.d_q), dtype)
+        h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+        return x, {"k": kc, "v": vc}
+
+    slices = {k: cache[k] for k in ("k", "v", "xk", "xv")}
+    x, new = jax.lax.scan(body, x, (params["dec_layers"], slices))
+    cache["k"], cache["v"] = new["k"], new["v"]
+    cache["pos"] = pos + 1
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return lm_logits(cfg, params, x), cache

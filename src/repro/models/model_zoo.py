@@ -1,0 +1,136 @@
+"""Model zoo: one uniform interface over every assigned architecture.
+
+    model = build(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)          # training
+    logits, cache, _ = model.prefill(params, tokens)   # serving
+    logits, cache = model.decode_step(params, cache, token)
+
+`batch` dict: tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32,
+plus `frames` / `patches` (B, n_frontend_tokens, d) for the stubbed
+audio/vision frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+    init: Callable[[jax.Array], Params]
+    loss: Callable[[Params, dict], tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple]
+    decode_step: Callable[[Params, dict, jax.Array], tuple]
+    init_cache: Callable[..., dict]
+
+
+def _frontend_key(cfg) -> str | None:
+    return {"audio": "frames", "vision": "patches"}.get(cfg.frontend) if cfg.frontend else None
+
+
+def build(cfg) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)
+
+
+def _build_lm(cfg) -> Model:
+    fkey = _frontend_key(cfg)
+
+    def init(key):
+        return transformer.init_lm(cfg, key)
+
+    def loss(params, batch):
+        extra = batch.get(fkey) if fkey else None
+        hidden, aux, _, _ = transformer.forward_lm(
+            cfg, params, batch["tokens"], extra_embeds=extra
+        )
+        labels, mask = batch["labels"], batch["mask"]
+        if extra is not None:
+            # frontend positions carry no next-token loss
+            hidden = hidden[:, extra.shape[1] :]
+        ce = transformer.chunked_softmax_xent(cfg, params, hidden, labels, mask)
+        total = ce + 0.01 * aux.get("aux_loss", 0.0)
+        metrics = {"ce": ce, **aux}
+        return total, metrics
+
+    def init_cache(batch_size, max_len, **kw):
+        return transformer.init_cache(cfg, batch_size, max_len)
+
+    def prefill(params, tokens, cache=None, **kw):
+        extra = kw.get(fkey) if fkey else None
+        if cache is None:
+            # frontend tokens (patches/frames) occupy cache slots too
+            n_extra = extra.shape[1] if extra is not None else 0
+            cache = init_cache(tokens.shape[0], tokens.shape[1] + n_extra)
+        return transformer.prefill_lm(cfg, params, tokens, cache, extra_embeds=extra)
+
+    def decode_step(params, cache, token):
+        return transformer.decode_step_lm(cfg, params, cache, token)
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+def _build_encdec(cfg) -> Model:
+    def init(key):
+        return encdec.init_encdec(cfg, key)
+
+    def loss(params, batch):
+        ce = encdec.encdec_loss(
+            cfg, params, batch["frames"], batch["tokens"], batch["labels"], batch["mask"]
+        )
+        return ce, {"ce": ce}
+
+    def init_cache(batch_size, max_len, n_frames=None, **kw):
+        return encdec.init_encdec_cache(
+            cfg, batch_size, max_len, n_frames or cfg.n_frontend_tokens
+        )
+
+    def prefill(params, tokens, cache=None, frames=None, **kw):
+        b = tokens.shape[0]
+        if cache is None:
+            cache = init_cache(b, tokens.shape[1] + 64)
+        memory = encdec.encode(cfg, params, frames)
+        cache = encdec.prime_cross_cache(cfg, params, memory, cache)
+        # teacher-forced prefill fills the decoder self-attn cache
+        hidden, kv = encdec.decode_train(cfg, params, tokens, memory, want_kv=True)
+        kf, vf = kv
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kf.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vf.astype(cache["v"].dtype), (0, 0, 0, 0))
+        logits = transformer.lm_logits(cfg, params, hidden[:, -1:])
+        cache["pos"] = jnp.full((), tokens.shape[1], jnp.int32)
+        return logits, cache, {}
+
+    def decode_step(params, cache, token):
+        return encdec.decode_step_encdec(cfg, params, cache, token)
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+
+
+def synthetic_batch(cfg, batch: int, seq: int, key=None) -> dict:
+    """Random batch with the right structure (smoke tests / examples)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+        "mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    fkey = _frontend_key(cfg)
+    if fkey:
+        out[fkey] = (
+            jax.random.normal(k3, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+            * 0.02
+        )
+    return out

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: GShard-style grouped top-k dispatch with
+capacity dropping (static shapes for SPMD), optional shared expert.
+
+Tokens are processed in groups of `group_size` so the dispatch/combine
+one-hots stay (G, t, E, C) with t = group_size and
+C = k * t / E * capacity_factor — bounded transient memory regardless of
+global token count. Experts shard over the `model` axis when E divides
+it (expert parallelism); otherwise expert weights shard over d_ff
+(tensor parallelism inside each expert) — see DESIGN.md §5.
+
+Expert-routing skew is the paper's "operations with large execution
+time variance" (Sec. II-E criterion 3); the router aux loss and the
+`router_entropy` metric feed the decoupled analytics group.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Params = dict
+
+DEFAULT_GROUP = 1024
+
+
+def init_moe(key, cfg) -> Params:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.init_linear(ks[0], d, e),
+        "w_gate": layers._dense_init(ks[1], (e, d, ff)),
+        "w_up": layers._dense_init(ks[2], (e, d, ff)),
+        "w_down": layers._dense_init(ks[3], (e, ff, d)),
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.init_mlp(ks[4], d, ff, "swiglu")
+    return p
+
+
+def _capacity(group: int, n_experts: int, k: int, factor: float) -> int:
+    c = int(group * k * factor / n_experts)
+    return max(4, min(group, c))
+
+
+def apply_moe(p: Params, x: jax.Array, cfg, dtype=jnp.bfloat16):
+    """x: (B, S, d) -> (out, aux) with aux = {aux_loss, router_entropy}."""
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    from repro.utils import flags as _flags
+
+    t = min(_flags.moe_group(DEFAULT_GROUP), bsz * s)
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    g = n_tok // t
+    xg = tokens[: g * t].reshape(g, t, d)
+    from repro.utils import flags
+
+    cap = _capacity(t, e, k, flags.moe_capacity_factor(cfg.moe_capacity_factor))
+
+    logits = layers.linear(p["router"], xg, dtype).astype(jnp.float32)  # (g,t,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # iterative top-k (k is 1 or 2 for the assigned archs)
+    combine = jnp.zeros((g, t, e, cap), jnp.float32)
+    dispatch = jnp.zeros((g, t, e, cap), jnp.bool_)
+    remaining = probs
+    used = jnp.zeros((g, t, e), jnp.bool_)
+    fill = jnp.zeros((g, e), jnp.int32)  # slots consumed per expert
+    for _ in range(k):
+        gate = jnp.where(used, -jnp.inf, jnp.log(remaining + 1e-9))
+        choice = jnp.argmax(gate, axis=-1)  # (g,t)
+        onehot = jax.nn.one_hot(choice, e, dtype=jnp.float32)  # (g,t,e)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + fill[:, None, :]
+        pos_tok = jnp.einsum("gte,gte->gt", pos, onehot)  # slot index
+        keep = pos_tok < cap
+        slot = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap, dtype=jnp.float32)
+        sel = onehot * keep[..., None].astype(jnp.float32)
+        w = jnp.einsum("gte,gt->gte", sel, jnp.take_along_axis(probs, choice[..., None], -1)[..., 0])
+        combine = combine + w[..., None] * slot[:, :, None, :]
+        dispatch = dispatch | ((sel[..., None] * slot[:, :, None, :]) > 0)
+        used = used | (onehot > 0)
+        fill = fill + jnp.einsum("gte,gt->ge", onehot, keep.astype(jnp.float32)).astype(
+            jnp.int32
+        )
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dtype), xg.astype(dtype))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dtype))) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["w_up"].astype(dtype)
+    )
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dtype))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(dtype), ye)
+
+    out_flat = out.reshape(g * t, d)
+    if g * t < n_tok:  # ragged tail falls back to dense expert 0 (rare; smoke only)
+        tail = tokens[g * t :]
+        th = jax.nn.silu(tail.astype(dtype) @ p["w_gate"][0].astype(dtype)) * (
+            tail.astype(dtype) @ p["w_up"][0].astype(dtype)
+        )
+        out_flat = jnp.concatenate([out_flat, th @ p["w_down"][0].astype(dtype)])
+    y = out_flat.reshape(bsz, s, d)
+
+    if cfg.shared_expert:
+        y = y + layers.apply_mlp(p["shared"], x, "swiglu", dtype)
+
+    # Switch-style load-balancing aux loss + routing-entropy metric
+    me = probs.mean(axis=(0, 1))  # (e,)
+    ce = (dispatch.any(-1).astype(jnp.float32)).mean(axis=(0, 1))
+    aux_loss = e * jnp.sum(me * ce)
+    entropy = -jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1).mean()
+    return y, {"aux_loss": aux_loss, "router_entropy": entropy}

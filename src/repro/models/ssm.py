@@ -1,0 +1,216 @@
+"""Mamba-2 SSD (state-space duality) block — pure-JAX reference path.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: the sequence
+is split into chunks of length Q; within a chunk the recurrence is
+evaluated as a masked quadratic form (the "attention-like" dual), and a
+single recurrent scan over chunk summaries passes state between chunks.
+The Pallas kernel in kernels/ssd_scan mirrors this tiling; this module
+is its oracle and the default model path.
+
+Shapes (single group g=1 for B/C as in mamba2-130m):
+  x  : (B, S, H, P)   H = d_inner / head_dim, P = head_dim
+  dt : (B, S, H)      positive step sizes (softplus applied by caller)
+  A  : (H,)           negative decay rates
+  Bm : (B, S, N)      input projection (shared across heads)
+  Cm : (B, S, N)      output projection
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+Params = dict
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    chunk: int,
+    initial_state: jax.Array | None = None,
+):
+    """Returns (y, final_state); y: (B,S,H,P), state: (B,H,P,N)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    tri = jnp.asarray(np.tril(np.ones((chunk, chunk), np.bool_)))
+    scores = jnp.einsum("bcsn,bctn->bcst", Cc, Bc)  # shared across heads (g=1)
+    init_all = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def per_head(args):
+        """SSD for ONE head — keeps the (b,nc,q,q) decay tensor per-head
+        instead of materializing (b,nc,q,q,H) (hymba: 50 heads would be
+        ~100 GB global in f32). Heads are independent; lax.map serializes
+        them here, the Pallas ssd_scan kernel parallelizes them on TPU."""
+        xh, dth, ah, inith = args  # (b,nc,q,p), (b,nc,q), (), (b,p,n)
+        dA = dth * ah
+        dA_cum = jnp.cumsum(dA, axis=2)  # (b,nc,q)
+        diff = dA_cum[:, :, :, None] - dA_cum[:, :, None, :]
+        # clamp BEFORE exp: masked (s<t) entries have diff>0 and would
+        # overflow to inf, poisoning gradients through the where
+        L = jnp.exp(jnp.where(tri[None, None], diff, -1e30))  # (b,nc,q,q)
+        gated = L * scores
+        y_diag = jnp.einsum("bcst,bct,bctp->bcsp", gated, dth, xh)
+        decay_to_end = jnp.exp(dA_cum[:, :, -1:] - dA_cum)
+        states = jnp.einsum("bctn,bct,bct,bctp->bcpn", Bc, decay_to_end, dth, xh)
+        chunk_decay = jnp.exp(dA_cum[:, :, -1])  # (b,nc)
+
+        def scan_fn(carry, inp):
+            st, cd = inp
+            return st + cd[:, None, None] * carry, carry
+
+        final, prev = jax.lax.scan(
+            scan_fn, inith, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+        )
+        prev = prev.swapaxes(0, 1)  # (b,nc,p,n)
+        y_off = jnp.einsum("bcsn,bcpn,bcs->bcsp", Cc, prev, jnp.exp(dA_cum))
+        return (y_diag + y_off), final
+
+    xs = (
+        xc.astype(jnp.float32).transpose(3, 0, 1, 2, 4),  # (h,b,nc,q,p)
+        dtc.transpose(3, 0, 1, 2),  # (h,b,nc,q)
+        A.astype(jnp.float32),  # (h,)
+        init_all.transpose(1, 0, 2, 3),  # (h,b,p,n)
+    )
+    y_h, final_h = jax.lax.map(per_head, xs)  # (h,b,nc,q,p), (h,b,p,n)
+    y = y_h.transpose(1, 2, 3, 0, 4).reshape(b, sp, h, p)[:, :s]
+    final_state = final_h.transpose(1, 0, 2, 3)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # (B,H,P,N)
+    x_t: jax.Array,  # (B,H,P)
+    dt_t: jax.Array,  # (B,H)
+    A: jax.Array,  # (H,)
+    B_t: jax.Array,  # (B,N)
+    C_t: jax.Array,  # (B,N)
+):
+    """O(1) recurrent decode: h <- exp(dt*A) h + dt * x B^T ; y = h C."""
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    outer = jnp.einsum(
+        "bh,bhp,bn->bhpn", dt_t.astype(jnp.float32), x_t.astype(jnp.float32), B_t.astype(jnp.float32)
+    )
+    new_state = decay[..., None, None] * state + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# -- full Mamba-2 block -------------------------------------------------------------
+
+def init_mamba_block(key, cfg) -> Params:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.init_linear(ks[0], d, 2 * din + 2 * n + h),
+        "conv_w": layers._dense_init(ks[1], (cfg.ssm_conv, conv_ch), scale=0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": layers.init_norm(din, "rms"),
+        "out_proj": layers.init_linear(ks[2], din, d),
+    }
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. seq: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i : i + seq.shape[1]].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(seq.dtype)
+
+
+def mamba_block(
+    p: Params, x: jax.Array, cfg, dtype=jnp.bfloat16, want_state: bool = False
+):
+    """Full-sequence Mamba-2 block (train / prefill). With
+    ``want_state`` also returns the decode cache ({state, conv}) after
+    consuming the sequence — used by prefill."""
+    bsz, s, _ = x.shape
+    din, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = layers.linear(p["in_proj"], x, dtype)
+    z, xin, Bm, Cm, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(
+        xin.reshape(bsz, s, h, hd), dt, A, Bm, Cm, cfg.ssm_chunk
+    )
+    y = y + xin.reshape(bsz, s, h, hd) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, s, din)
+    y = layers.apply_norm(p["norm"], y, "rms", cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = layers.linear(p["out_proj"], y, dtype)
+    if want_state:
+        k = cfg.ssm_conv
+        tail = conv_in[:, -(k - 1):]
+        pad = (k - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"state": final_state, "conv": tail}
+    return out
+
+
+def init_mamba_cache(cfg, batch: int):
+    h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, hd, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def mamba_decode(p: Params, x_t: jax.Array, cache, cfg, dtype=jnp.bfloat16):
+    """One-token decode. x_t: (B, 1, d). Returns (y_t, new_cache)."""
+    bsz = x_t.shape[0]
+    din, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = layers.linear(p["in_proj"], x_t[:, 0], dtype)
+    z, xin, Bm, Cm, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)  # (B, C)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w) + p["conv_b"]
+    ).astype(dtype)
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_decode_step(
+        cache["state"], xin.reshape(bsz, h, hd), dt, A, Bm, Cm
+    )
+    y = y + xin.reshape(bsz, h, hd) * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, din)
+    y = layers.apply_norm(p["norm"], y, "rms", cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = layers.linear(p["out_proj"], y, dtype)[:, None]
+    new_cache = {"state": new_state, "conv": window[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

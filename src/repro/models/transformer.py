@@ -1,0 +1,344 @@
+"""Decoder-only LM backbone covering the dense / MoE / SSM / hybrid / VLM
+families with scan-over-layers (stacked layer params, one compiled layer
+body — essential to keep 512-device dry-run compiles tractable).
+
+Heterogeneous layer stacks (per-layer attention windows: SWA with a few
+global layers, llama4 chunked-local + global-every-4) scan uniformly by
+passing a per-layer window vector as scan xs; window 0 means full causal.
+
+Decode uses a flattened KV-cache layout (B, S, n_kv*head_dim) so the
+feature dim shards over the `model` axis for every assigned arch (see
+DESIGN.md §4) and the sequence dim shards for long contexts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, moe, ssm
+
+Params = dict
+
+BLOCKWISE_THRESHOLD = 8192  # plain attention below, streaming-softmax above
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.init_linear(ks[0], d, cfg.d_q, cfg.qkv_bias),
+        "wk": layers.init_linear(ks[1], d, cfg.d_kv, cfg.qkv_bias),
+        "wv": layers.init_linear(ks[2], d, cfg.d_kv, cfg.qkv_bias),
+        "wo": layers.init_linear(ks[3], cfg.d_q, d, cfg.mlp_bias),
+    }
+
+
+def _init_layer(key, cfg) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": layers.init_norm(cfg.d_model, cfg.norm_kind)}
+    if cfg.family == "ssm":
+        p["mamba"] = ssm.init_mamba_block(ks[0], cfg)
+        return p
+    p["attn"] = _init_attn(ks[1], cfg)
+    if cfg.hybrid:
+        p["mamba"] = ssm.init_mamba_block(ks[2], cfg)
+    p["norm2"] = layers.init_norm(cfg.d_model, cfg.norm_kind)
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[4], cfg.d_model, cfg.d_ff, cfg.mlp_kind, cfg.mlp_bias)
+    return p
+
+
+def init_lm(cfg, key) -> Params:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    p = {
+        "embed": layers.init_embedding(ks[1], cfg.vocab_size, cfg.d_model),
+        "layers": stacked,
+        "final_norm": layers.init_norm(cfg.d_model, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = {"table": layers._dense_init(ks[2], (cfg.vocab_size, cfg.d_model), 0.02)}
+    return p
+
+
+def layer_windows_array(cfg) -> jax.Array:
+    return jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attention_full(cfg, p, h, positions, window, dtype):
+    """Returns (attn_out, k_flat, v_flat).
+
+    Activation sharding: the *sequence* dim of Q (and the attention
+    output) is sharded over the model axis — context-parallel style.
+    This works for every assigned head count (25, 12, 48, ...) where
+    head-dim sharding would not divide a 16-way axis, and bounds the
+    score tile to (S/model, S) per device. K/V stay batch-sharded (the
+    GQA KV block is small) and are re-gathered by GSPMD per layer.
+    """
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q = layers.linear(p["wq"], h, dtype).reshape(b, s, cfg.n_heads, hd)
+    k = layers.linear(p["wk"], h, dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    v = layers.linear(p["wv"], h, dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.pos_kind == "rope":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = layers.maybe_shard(q, "batch", "model", None, None)
+    k = layers.maybe_shard(k, "batch", None, None, None)
+    v = layers.maybe_shard(v, "batch", None, None, None)
+    scale = 1.0 / np.sqrt(hd)
+    if s > BLOCKWISE_THRESHOLD:
+        out = layers.attention_blockwise(q, k, v, positions, positions, window, scale)
+    else:
+        mask = layers.causal_window_mask(positions, positions, window)
+        out = layers.attention_plain(q, k, v, mask, scale)
+    out = layers.maybe_shard(out, "batch", "model", None, None)
+    out = layers.linear(p["wo"], out.reshape(b, s, cfg.d_q), dtype)
+    kf = k.reshape(b, s, cfg.d_kv)
+    vf = v.reshape(b, s, cfg.d_kv)
+    return out, kf, vf
+
+
+def _layer_forward(cfg, p, x, positions, window, dtype, want_kv: bool):
+    aux = {}
+    kv = None
+    sstate = None
+    if cfg.family == "ssm":
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        if want_kv:
+            y, sstate = ssm.mamba_block(p["mamba"], h, cfg, dtype, want_state=True)
+        else:
+            y = ssm.mamba_block(p["mamba"], h, cfg, dtype)
+        return x + y, aux, kv, sstate
+    h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+    attn_out, kf, vf = _attention_full(cfg, p["attn"], h, positions, window, dtype)
+    if cfg.hybrid:
+        if want_kv:
+            ssm_out, sstate = ssm.mamba_block(p["mamba"], h, cfg, dtype, want_state=True)
+        else:
+            ssm_out = ssm.mamba_block(p["mamba"], h, cfg, dtype)
+        attn_out = (attn_out + ssm_out) * 0.5
+    x = x + attn_out
+    h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+    if cfg.n_experts:
+        mo, aux = moe.apply_moe(p["moe"], h2, cfg, dtype)
+        x = x + mo
+    else:
+        x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+    if want_kv:
+        kv = (kf, vf)
+    return x, aux, kv, sstate
+
+
+def forward_lm(
+    cfg,
+    params: Params,
+    tokens: jax.Array,
+    *,
+    extra_embeds: jax.Array | None = None,
+    remat: bool = True,
+    want_kv: bool = False,
+):
+    """Returns (hidden (B,S,d) post-final-norm, aux dict, stacked_kv|None).
+
+    `extra_embeds` (B, n_frontend_tokens, d) are prepended (VLM patch /
+    audio-frame embeddings); callers account for the longer sequence.
+    """
+    dtype = cfg.dtype
+    x = layers.embed(params["embed"], tokens, dtype)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    if cfg.pos_kind == "sinusoidal":
+        x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(dtype)[None]
+    windows = layer_windows_array(cfg)
+
+    def body(carry, inp):
+        p, window = inp
+        y, aux, kv, sstate = _layer_forward(
+            cfg, p, carry, positions, window, dtype, want_kv
+        )
+        outs = {k: v for k, v in aux.items()}
+        return y, (outs, kv, sstate)
+
+    fn = jax.checkpoint(body) if remat else body
+    x, (aux_stack, kv_stack, state_stack) = jax.lax.scan(
+        fn, x, (params["layers"], windows)
+    )
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    aux = {k: jnp.mean(v) for k, v in (aux_stack or {}).items()}
+    return x, aux, kv_stack, state_stack
+
+
+def unembed_table(cfg, params: Params) -> jax.Array:
+    return params["embed"]["table"] if cfg.tie_embeddings else params["lm_head"]["table"]
+
+
+def lm_logits(cfg, params: Params, hidden: jax.Array) -> jax.Array:
+    return layers.unembed({"table": unembed_table(cfg, params)}, hidden, cfg.dtype)
+
+
+def chunked_softmax_xent(
+    cfg,
+    params: Params,
+    hidden: jax.Array,  # (B, S, d)
+    labels: jax.Array,  # (B, S)
+    mask: jax.Array,  # (B, S) 1.0 for real tokens
+    chunk: int = 256,
+):
+    """Cross-entropy without materializing the full (B,S,V) logits —
+    required for the 150k-vocab archs at production batch sizes."""
+    table = unembed_table(cfg, params)
+    b, s, d = hidden.shape
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in bwd: keeps the scan's
+    def body(carry, inp):  # saved residuals O(chunk) instead of O(S*V)
+        tot, cnt = carry
+        h, l, m = inp
+        logits = jnp.einsum("btd,vd->btv", h.astype(cfg.dtype), table.astype(cfg.dtype))
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (tot + nll.sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc, mc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    ln = cfg.n_layers
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((ln, batch, max_len, cfg.d_kv), dtype)
+        cache["v"] = jnp.zeros((ln, batch, max_len, cfg.d_kv), dtype)
+    if cfg.family == "ssm" or cfg.hybrid:
+        h, hd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_ch = cfg.d_inner + 2 * n
+        cache["ssm_state"] = jnp.zeros((ln, batch, h, hd, n), jnp.float32)
+        cache["ssm_conv"] = jnp.zeros((ln, batch, cfg.ssm_conv - 1, conv_ch), dtype)
+    return cache
+
+
+def prefill_lm(cfg, params: Params, tokens: jax.Array, cache: dict, *, extra_embeds=None):
+    """Run the full-sequence forward, fill the cache, return last-token
+    logits and the updated cache. SSM/hybrid state prefill recomputes the
+    recurrence via the chunked scan's final state."""
+    hidden, aux, kv, sstate = forward_lm(
+        cfg, params, tokens, extra_embeds=extra_embeds, want_kv=True
+    )
+    s = hidden.shape[1]
+    if kv is not None:
+        kf, vf = kv  # (L, B, S, d_kv)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kf.astype(cache["k"].dtype), (0, 0, 0, 0)
+        )
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vf.astype(cache["v"].dtype), (0, 0, 0, 0)
+        )
+    if sstate is not None:  # SSM / hybrid recurrent state after the seq
+        cache["ssm_state"] = sstate["state"].astype(cache["ssm_state"].dtype)
+        cache["ssm_conv"] = sstate["conv"].astype(cache["ssm_conv"].dtype)
+    cache["pos"] = jnp.full((), s, jnp.int32)
+    logits = lm_logits(cfg, params, hidden[:, -1:])
+    return logits, cache, aux
+
+
+
+
+def decode_step_lm(cfg, params: Params, cache: dict, token: jax.Array):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new cache)."""
+    dtype = cfg.dtype
+    x = layers.embed(params["embed"], token, dtype)  # (B,1,d)
+    pos = cache["pos"]
+    if cfg.pos_kind == "sinusoidal":
+        x = x + layers.sinusoidal_at(pos, cfg.d_model).astype(dtype)[None, None]
+    windows = layer_windows_array(cfg)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(hd) if hd else 1.0
+
+    carry_keys = [k for k in ("k", "v", "ssm_state", "ssm_conv") if k in cache]
+
+    def body(x, inp):
+        p, window, slices = inp
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        new_slices = dict(slices)
+        if cfg.family == "ssm":
+            y, new_mc = ssm.mamba_decode(
+                p["mamba"], h, {"state": slices["ssm_state"], "conv": slices["ssm_conv"]}, cfg, dtype
+            )
+            x = x + y
+            new_slices["ssm_state"], new_slices["ssm_conv"] = new_mc["state"], new_mc["conv"]
+            return x, new_slices
+        q = layers.linear(p["attn"]["wq"], h, dtype).reshape(b, 1, cfg.n_heads, hd)
+        kn = layers.linear(p["attn"]["wk"], h, dtype).reshape(b, 1, cfg.n_kv_heads, hd)
+        vn = layers.linear(p["attn"]["wv"], h, dtype)
+        if cfg.pos_kind == "rope":
+            pos_arr = jnp.full((1,), pos, jnp.int32)
+            q = layers.apply_rope(q, pos_arr, cfg.rope_theta)
+            kn = layers.apply_rope(kn, pos_arr, cfg.rope_theta)
+        kcache = jax.lax.dynamic_update_slice(
+            slices["k"], kn.reshape(b, 1, cfg.d_kv).astype(slices["k"].dtype), (0, pos, 0)
+        )
+        vcache = jax.lax.dynamic_update_slice(
+            slices["v"], vn.reshape(b, 1, cfg.d_kv).astype(slices["v"].dtype), (0, pos, 0)
+        )
+        attn = layers.attention_decode(
+            q, kcache, vcache, cfg.n_kv_heads, pos + 1, window, scale
+        )
+        attn = layers.linear(p["attn"]["wo"], attn.reshape(b, 1, cfg.d_q), dtype)
+        if cfg.hybrid:
+            y, new_mc = ssm.mamba_decode(
+                p["mamba"], h, {"state": slices["ssm_state"], "conv": slices["ssm_conv"]}, cfg, dtype
+            )
+            attn = (attn + y) * 0.5
+            new_slices["ssm_state"], new_slices["ssm_conv"] = new_mc["state"], new_mc["conv"]
+        x = x + attn
+        h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+        if cfg.n_experts:
+            mo, _ = moe.apply_moe(p["moe"], h2, cfg, dtype)
+            x = x + mo
+        else:
+            x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+        new_slices["k"], new_slices["v"] = kcache, vcache
+        return x, new_slices
+
+    slices_in = {k: cache[k] for k in carry_keys}
+    x, new_slices = jax.lax.scan(body, x, (params["layers"], windows, slices_in))
+    for k in carry_keys:
+        cache[k] = new_slices[k]
+    cache["pos"] = pos + 1
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return lm_logits(cfg, params, x), cache

@@ -1,0 +1,118 @@
+"""Jitted serving steps (prefill / decode) with production shardings.
+
+`decode_32k` shards the KV cache over batch; `long_500k` (batch 1)
+shards the cache over the *sequence* dim instead — both keep the
+flattened feature dim on the model axis (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.train import sharding
+
+FSDP_THRESHOLD = 6e9  # bytes of bf16 params per device (model-sharded)
+
+
+def _serve_params_like(model):
+    """Serving stores params in bf16 (inference precision)."""
+    like = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype
+        ),
+        like,
+    )
+
+
+def _param_specs_maybe_fsdp(params_like, mesh, data_axes):
+    model_size = mesh.shape["model"]
+    pspecs = sharding.param_specs(params_like, model_size)
+    nbytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(params_like)
+    )
+    if nbytes / model_size > FSDP_THRESHOLD:
+        data_size = 1
+        for a in data_axes:
+            data_size *= mesh.shape[a]
+        pspecs = sharding.zero1_specs(params_like, pspecs, tuple(data_axes), data_size)
+    return pspecs
+
+
+def build_decode_step(model, mesh, *, multi_pod: bool = False, shard_seq: bool = False,
+                      batch: int, max_len: int, donate: bool = True):
+    """Returns (jitted_step, (param_sh, cache_sh, token_sh))."""
+    cfg = model.cfg
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    batch_axes = data_axes if len(data_axes) > 1 else data_axes[0]
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh.shape[a]
+
+    params_like = _serve_params_like(model)
+    cache_like = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    pspecs = _param_specs_maybe_fsdp(params_like, mesh, data_axes)
+    kv_div = cfg.n_kv_heads > 0 and cfg.n_kv_heads % mesh.shape["model"] == 0
+    cspecs = sharding.cache_specs(
+        cache_like, batch_axes,
+        shard_seq=shard_seq or batch % data_size != 0,
+        kv_divisible=kv_div,
+    )
+    tok_spec = P(batch_axes, None) if batch % data_size == 0 else P()
+
+    def step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    in_sh = (
+        sharding.named(mesh, pspecs),
+        sharding.named(mesh, cspecs),
+        sharding.named(mesh, tok_spec),
+    )
+    jitted = jax.jit(
+        step,
+        in_shardings=in_sh,
+        out_shardings=(None, in_sh[1]),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, in_sh
+
+
+def build_prefill_step(model, mesh, *, multi_pod: bool = False):
+    """Prefill over a request batch; cache output kept fully sharded."""
+    cfg = model.cfg
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    batch_axes = data_axes if len(data_axes) > 1 else data_axes[0]
+    params_like = _serve_params_like(model)
+    pspecs = _param_specs_maybe_fsdp(params_like, mesh, data_axes)
+    fkey = {"audio": "frames", "vision": "patches"}.get(cfg.frontend, None)
+
+    def step(params, tokens, extra=None):
+        kw = {fkey: extra} if fkey else {}
+        logits, cache, _aux = model.prefill(params, tokens, None, **kw)
+        return logits, cache
+
+    in_sh = [sharding.named(mesh, pspecs), sharding.named(mesh, P(batch_axes, None))]
+    if fkey:
+        in_sh.append(sharding.named(mesh, P(batch_axes, None, None)))
+
+    def out_shardings_for(tokens_sds, extra_sds=None):
+        b = tokens_sds.shape[0]
+        s = tokens_sds.shape[1]
+        cache_like = jax.eval_shape(lambda: model.init_cache(b, s))
+        cspecs = sharding.cache_specs(cache_like, batch_axes, shard_seq=False)
+        return (
+            sharding.named(mesh, P(batch_axes, None, None)),
+            sharding.named(mesh, cspecs),
+        )
+
+    def make(tokens_sds, extra_sds=None):
+        outs = out_shardings_for(tokens_sds, extra_sds)
+        return jax.jit(
+            step,
+            in_shardings=tuple(in_sh[: 3 if fkey else 2]),
+            out_shardings=outs,
+        )
+
+    return make

@@ -1,0 +1,44 @@
+"""Gradient compression for stream elements: symmetric int8 quantization
+with error feedback. Applied on the wire of the decoupled reduce stream
+(transform/untransform hooks of `StreamChannel.stream_fold_tree`), it
+cuts the stream's collective bytes ~4x — one of the "application-specific
+optimizations on the decoupled operation" the paper calls for
+(Sec. II-E, "aggregate data ... on communication-intensive operations").
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_leaf(x: jax.Array) -> dict:
+    """Symmetric per-leaf int8: q = round(x / scale), scale = max|x|/127."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_leaf(payload: dict) -> jax.Array:
+    return payload["q"].astype(jnp.float32) * payload["scale"]
+
+
+def is_payload(x: Any) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def compress_with_feedback(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Error feedback: compress (g + r); the quantization error becomes
+    the next step's residual, so compression bias vanishes over time."""
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    payload = jax.tree.map(quantize_leaf, corrected)
+    new_residual = jax.tree.map(
+        lambda p, c: c - dequantize_leaf(p), payload, corrected, is_leaf=is_payload
+    )
+    return payload, new_residual
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

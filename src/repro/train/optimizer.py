@@ -1,0 +1,105 @@
+"""Optimizers from scratch (no optax): AdamW and SGD+momentum, pytree
+and flat-buffer variants. The flat variants power the decoupled
+reducer group, which updates gradient chunks as they arrive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(cfg: OptConfig, params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "adamw":
+        state["m"] = zeros
+        state["v"] = jax.tree.map(jnp.copy, zeros)
+    elif cfg.kind == "sgdm":
+        state["m"] = zeros
+    else:
+        raise ValueError(cfg.kind)
+    return state
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(
+    cfg: OptConfig, params: Any, grads: Any, state: dict
+) -> tuple[Any, dict]:
+    """Pytree update (conventional / overlap modes)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            new_p = p.astype(jnp.float32) - lr * (
+                mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            )
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": step, "m": new_m, "v": new_v}
+
+    if cfg.kind == "sgdm":
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            m = cfg.beta1 * m + g
+            new_p = p.astype(jnp.float32) - lr * (m + cfg.weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": step, "m": new_m}
+
+    raise ValueError(cfg.kind)

@@ -1,0 +1,182 @@
+"""Sharding rules: PartitionSpecs for params, optimizer state, batches
+and caches over the production mesh axes (pod, data, model).
+
+Heuristic column/row sharding with divisibility guards so every
+assigned arch shards cleanly on a 16-way model axis (flattened QKV/KV
+feature dims — see DESIGN.md §4). ZeRO-1 specs additionally shard
+optimizer moments over the data axis along the largest divisible dim.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _spec_for_leaf(names: list[str], shape: tuple[int, ...], model_size: int) -> P:
+    """PartitionSpec over the model axis for one parameter leaf."""
+    joined = ".".join(names)
+
+    from repro.utils import flags
+
+    if flags.replicate_ssm() and any(
+        k in joined for k in ("in_proj", "conv_w", "conv_b", "A_log", "dt_bias")
+    ) and "mamba" in joined:
+        return P()
+
+    def ok(dim: int) -> bool:
+        return shape[dim] % model_size == 0 and shape[dim] >= model_size
+
+    nd = len(shape)
+    spec: list[Any] = [None] * nd
+
+    # row-sharded projections (output side contracts into the residual)
+    if any(k in joined for k in ("wo.w", "w_down.w", "out_proj.w")) and nd >= 2:
+        dim = nd - 2
+        if "w_down" in joined and "experts" not in joined and nd == 3:
+            dim = 1  # stacked (L, ff, d)
+        if ok(dim):
+            spec[dim] = MODEL
+            return P(*spec)
+    # expert tensors (possibly stacked: (L, E, d, ff))
+    if any(k in joined for k in ("w_gate", "w_up", "w_down")) and "moe" in joined and nd >= 3:
+        e_dim = nd - 3
+        if ok(e_dim):
+            spec[e_dim] = MODEL  # expert parallelism
+            return P(*spec)
+        # TP inside experts: gate/up shard ff (last), down shards ff (-2)
+        dim = nd - 2 if "w_down" in joined else nd - 1
+        if ok(dim):
+            spec[dim] = MODEL
+            return P(*spec)
+    # embedding / unembedding tables: shard vocab
+    if "table" in joined and nd == 2:
+        if ok(0):
+            spec[0] = MODEL
+            return P(*spec)
+        return P()
+    # biases: shard last dim when it matches a column-sharded projection
+    if names[-1] == "b" and nd >= 1:
+        if any(k in joined for k in ("wq", "wk", "wv", "w_gate", "w_up")) and ok(nd - 1):
+            spec[nd - 1] = MODEL
+            return P(*spec)
+        return P()
+    # default: column-shard the last dim of >=2D weights
+    if names[-1] in ("w", "conv_w") or (nd >= 2 and names[-1] not in ("scale", "bias")):
+        if nd >= 2 and ok(nd - 1):
+            spec[nd - 1] = MODEL
+            return P(*spec)
+    return P()
+
+
+def param_specs(params: Any, model_size: int) -> Any:
+    """Pytree of PartitionSpec matching `params` (works on arrays or
+    ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_leaf(_path_names(path), tuple(leaf.shape), model_size),
+        params,
+    )
+
+
+def zero1_specs(params: Any, specs: Any, data_axes: tuple[str, ...], data_size: int) -> Any:
+    """Optimizer-moment specs: param spec + shard the largest free dim
+    over the data axes (ZeRO-1). Falls back to the param spec."""
+
+    def one(leaf, spec):
+        shape = tuple(leaf.shape)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_dim = 0, -1
+        for d, s in enumerate(shape):
+            if entries[d] is None and s % data_size == 0 and s > best:
+                best, best_dim = s, d
+        if best_dim >= 0:
+            entries[best_dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*entries)
+
+    return jax.tree.map(one, params, specs)
+
+
+def batch_specs(batch_axes) -> dict:
+    return {
+        "tokens": P(batch_axes, None),
+        "labels": P(batch_axes, None),
+        "mask": P(batch_axes, None),
+        "frames": P(batch_axes, None, None),
+        "patches": P(batch_axes, None, None),
+    }
+
+
+def cache_specs(cache: Any, batch_axes, *, shard_seq: bool, kv_divisible: bool = False) -> Any:
+    """Specs for a decode cache.
+
+    K/V caches shard their SEQUENCE dim over the model axis (batch over
+    the data axes): sharding the flattened feature dim looks natural but
+    the per-head reshape inside attention un-shards it whenever n_kv
+    doesn't divide the 16-way axis, making GSPMD all-gather the whole
+    cache every step (§Perf pair-3 iteration 2: 21.5 GB/token -> KBs).
+    Attention reductions over the sharded S become small psums instead.
+    shard_seq=True (long_500k, batch 1) also folds the data axes into
+    the sequence dim."""
+    axes_tuple = batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        key = names[-1]
+        if key in ("k", "v", "xk", "xv") and nd == 4:  # (L, B, S, d_kv)
+            seq = leaf.shape[2]
+            if shard_seq:
+                return P(None, None, axes_tuple + (MODEL,), None)
+            if kv_divisible:  # head reshape keeps the shard: cheapest
+                return P(None, batch_axes, None, MODEL)
+            if seq % 16 == 0:  # model-axis size on the production mesh
+                return P(None, batch_axes, MODEL, None)
+            return P(None, batch_axes, None, MODEL)
+        if key == "ssm_state" and nd == 5:  # (L, B, H, P, N)
+            return P(None, batch_axes, None, None, None) if not shard_seq else P()
+        if key == "ssm_conv" and nd == 4:  # (L, B, K-1, C)
+            return P(None, batch_axes, None, MODEL) if not shard_seq else P(None, None, None, MODEL)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def validate_divisibility(params: Any, specs: Any, mesh: Mesh) -> list[str]:
+    """Return a list of leaves whose sharded dims don't divide — should
+    always be empty; used by tests."""
+    bad = []
+
+    def one(path, leaf, spec):
+        for d, axis in enumerate(spec):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[d] % size:
+                bad.append(f"{_path_names(path)}: dim{d}={leaf.shape[d]} % {size}")
+        return None
+
+    jax.tree_util.tree_map_with_path(one, params, specs)
+    return bad

@@ -1,0 +1,41 @@
+"""Hillclimb knobs (EXPERIMENTS.md §Perf), controlled via environment
+variables so dry-run variants need no code edits:
+
+  REPRO_BF16_WIRE=1     barrier TP-partial outputs in bf16 so GSPMD
+                        all-reduces 2-byte activations instead of
+                        fusing the f32 upcast before the reduce.
+  REPRO_REPLICATE_SSM=1 replicate (small) Mamba projection weights over
+                        the model axis instead of column-sharding, which
+                        removes the per-layer gathers at the z/x/B/C/dt
+                        split points (hymba/mamba decode).
+  REPRO_KV_BLOCK=N      blockwise-attention KV block size.
+"""
+from __future__ import annotations
+
+import os
+
+
+def bf16_wire() -> bool:
+    return os.environ.get("REPRO_BF16_WIRE", "") == "1"
+
+
+def replicate_ssm() -> bool:
+    return os.environ.get("REPRO_REPLICATE_SSM", "") == "1"
+
+
+def kv_block(default: int = 1024) -> int:
+    return int(os.environ.get("REPRO_KV_BLOCK", default))
+
+
+def compress() -> str:
+    return os.environ.get("REPRO_COMPRESS", "none")
+
+
+def moe_capacity_factor(default: float) -> float:
+    v = os.environ.get("REPRO_MOE_CAP", "")
+    return float(v) if v else default
+
+
+def moe_group(default: int) -> int:
+    v = os.environ.get("REPRO_MOE_GROUP", "")
+    return int(v) if v else default

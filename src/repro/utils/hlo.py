@@ -1,0 +1,111 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+`cost_analysis()` does not report collective traffic, so we parse the
+optimized (post-SPMD-partitioning) HLO from `compiled.as_text()` and sum
+the operand/result sizes of every collective op. Sizes are per-device
+(the compiled module is the per-device SPMD program).
+
+Two columns are reported:
+  * naive_bytes  — sum of result-shape bytes per collective op (the
+    prompt's definition: operand sizes of each collective);
+  * wire_bytes   — ring-algorithm estimate of bytes actually serialized
+    per device link: all-reduce 2(N-1)/N, all-gather/reduce-scatter
+    (N-1)/N, all-to-all (N-1)/N, collective-permute 1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],() ]*?"
+    r"(all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[16,1024]' or a
+    tuple '(f32[4], f32[4])'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S]<=[...] : G groups of size S
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    naive_bytes: int = 0
+    wire_bytes: float = 0.0
+    count: int = 0
+    by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+
+    def as_dict(self) -> dict:
+        return {
+            "collective_naive_bytes": self.naive_bytes,
+            "collective_wire_bytes": self.wire_bytes,
+            "collective_count": self.count,
+            "collective_by_kind": dict(self.by_kind),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).replace("-start", "")
+        # result shape is the lhs shape before the op name
+        lhs = line.split("=", 1)
+        result_bytes = shape_bytes(lhs[1][: m.start(1) - len(lhs[0]) - 1]) if len(lhs) > 1 else 0
+        if result_bytes == 0:
+            result_bytes = shape_bytes(line)
+        n = _group_size(line)
+        stats.naive_bytes += result_bytes
+        stats.count += 1
+        stats.by_kind[kind] += result_bytes
+        if kind == "all-reduce":
+            stats.wire_bytes += 2.0 * (n - 1) / n * result_bytes
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            stats.wire_bytes += (n - 1) / n * result_bytes
+        else:  # collective-permute
+            stats.wire_bytes += result_bytes
+    return stats

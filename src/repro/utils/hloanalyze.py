@@ -1,0 +1,359 @@
+"""Call-graph-aware HLO cost analyzer.
+
+XLA's built-in ``compiled.cost_analysis()`` visits each while-loop body
+ONCE, so a scan-over-layers program under-reports FLOPs/bytes by ~n_layers.
+This module re-derives per-device costs from ``compiled.as_text()``:
+
+  * parses every computation into a symbol table (name -> shape),
+  * counts dot FLOPs exactly (2 * result_elems * contraction_size),
+  * counts HBM traffic at fusion boundaries (operands + results of
+    fusion/top-level ops; fusion interiors stay on-chip),
+  * counts collective bytes per op (naive = result bytes; wire = ring
+    estimate),
+  * multiplies every computation's cost by its call-graph multiplier,
+    using ``known_trip_count`` on while ops.
+
+Validated against XLA's analyzer on unnested programs and against
+analytic counts on scanned programs (tests/test_hloanalyze.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+SKIP_COST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "copy-start", "copy-done",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+}
+TRANSCENDENTAL_OPS = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                      "logistic", "sine", "cosine", "exponential-minus-one"}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SHAPE_TOK = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CALLS_ATTR = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_ATTR = re.compile(r"body=%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_APPLY_ATTR = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPCODE = re.compile(r"([\w\-]+)\((.*)$", re.S)
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems_total, bytes_total = 0, 0
+    for dtype, dims in _SHAPE_TOK.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dtype]
+    return elems_total, bytes_total
+
+
+def _first_shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_TOK.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_op_line(line: str):
+    """'  ROOT %x = SHAPE opcode(args), attrs' -> (name, shape, opcode, rest).
+
+    Robust to tuple shapes with /*index=N*/ comments and layout tiles
+    with parentheses: tuple shapes are scanned with paren balancing.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if "=" not in s or not (s.startswith("%") or s[0].isalpha()):
+        return None
+    name, eq, rest = s.partition(" = ")
+    if not eq:
+        return None
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape_str, tail = rest[: end + 1], rest[end + 1 :].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_str, tail = rest[:sp], rest[sp + 1 :].strip()
+    m = _OPCODE.match(tail)
+    if not m:
+        return None
+    opcode, args = m.groups()
+    return name.strip().lstrip("%"), shape_str, opcode, args
+
+
+@dataclasses.dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_naive: float = 0.0
+    coll_wire: float = 0.0
+    coll_count: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def scaled_add(self, other: "OpCost", k: float, bytes_too: bool = True) -> None:
+        self.flops += other.flops * k
+        if bytes_too:
+            self.bytes += other.bytes * k
+        self.transcendentals += other.transcendentals * k
+        self.coll_naive += other.coll_naive * k
+        self.coll_wire += other.coll_wire * k
+        self.coll_count += other.coll_count * k
+        for kk, v in other.coll_by_kind.items():
+            self.coll_by_kind[kk] += v * k
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "transcendentals": self.transcendentals,
+            "collective_naive_bytes": self.coll_naive,
+            "collective_wire_bytes": self.coll_wire,
+            "collective_count": self.coll_count,
+            "collective_by_kind": {k: v for k, v in self.coll_by_kind.items()},
+        }
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    cost: OpCost
+    calls: list  # (callee_name, multiplier, kind)
+    is_entry: bool = False
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    symbols: dict[str, str] = {}
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        stripped = line.strip()
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = _COMP_HEADER.match(stripped)
+            if m:
+                cur = Computation(
+                    name=m.group(2), cost=OpCost(), calls=[],
+                    is_entry=bool(m.group(1)),
+                )
+                comps[cur.name] = cur
+                symbols = {}
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _split_op_line(line)
+        if parsed is None:
+            continue
+        name, shape_str, opcode, rest = parsed
+        symbols[name] = shape_str
+        if opcode in ("parameter", "constant"):
+            continue
+
+        # ---- call-graph edges -------------------------------------------------
+        if opcode == "while":
+            trip = 1
+            tm = _TRIP.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            bm = _BODY_ATTR.search(line)
+            if bm:
+                cur.calls.append((bm.group(1), trip, "loop"))
+            cm = _COND_ATTR.search(line)
+            if cm:
+                cur.calls.append((cm.group(1), trip + 1, "loop"))
+            continue
+        if opcode == "conditional":
+            bm = _BRANCHES.search(line)
+            if bm:
+                for b in bm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        cur.calls.append((b, 1, "branch"))
+            continue
+        if opcode == "call":
+            cm = _CALLS_ATTR.search(line) or _APPLY_ATTR.search(line)
+            if cm:
+                cur.calls.append((cm.group(1), 1, "call"))
+            continue
+
+        # operand shapes (first balanced paren group = args)
+        args = rest.split(")", 1)[0]
+        operand_names = re.findall(r"%([\w.\-]+)", args)
+        operand_shapes = [symbols.get(n) for n in operand_names]
+        res_elems, res_bytes = _shape_elems_bytes(shape_str)
+
+        if opcode in COLLECTIVE_OPS:
+            kind = opcode.replace("-start", "")
+            n = _group_size(line)
+            cur.cost.coll_naive += res_bytes
+            cur.cost.coll_count += 1
+            cur.cost.coll_by_kind[kind] += res_bytes
+            if kind == "all-reduce":
+                cur.cost.coll_wire += 2.0 * (n - 1) / n * res_bytes
+            elif kind in ("all-gather", "reduce-scatter", "all-to-all",
+                          "ragged-all-to-all"):
+                cur.cost.coll_wire += (n - 1) / n * res_bytes
+            else:
+                cur.cost.coll_wire += res_bytes
+            cur.cost.bytes += res_bytes
+            continue
+
+        if opcode in SKIP_COST_OPS:
+            continue
+
+        if opcode == "dot":
+            contraction = 1
+            dm = _DOT_DIMS.search(line)
+            lhs_dims = _first_shape_dims(operand_shapes[0] or "") if operand_shapes else []
+            if dm and lhs_dims:
+                for d in dm.group(1).split(","):
+                    if d and int(d) < len(lhs_dims):
+                        contraction *= lhs_dims[int(d)]
+            cur.cost.flops += 2.0 * res_elems * contraction
+            cur.cost.bytes += res_bytes + sum(
+                _shape_elems_bytes(s or "")[1] for s in operand_shapes[:2]
+            )
+            continue
+
+        if opcode == "convolution":
+            cur.cost.flops += 2.0 * res_elems * 8  # depthwise convs only here
+            cur.cost.bytes += res_bytes + sum(
+                _shape_elems_bytes(s or "")[1] for s in operand_shapes[:2]
+            )
+            continue
+
+        if opcode == "fusion":
+            cur.cost.bytes += res_bytes + sum(
+                _shape_elems_bytes(s or "")[1] for s in operand_shapes
+            )
+            cm = _CALLS_ATTR.search(line)
+            if cm:
+                cur.calls.append((cm.group(1), 1, "fusion"))
+            continue
+
+        if opcode in ("reduce", "map", "scatter", "sort", "reduce-window",
+                      "select-and-scatter"):
+            cm = _APPLY_ATTR.search(line) or _CALLS_ATTR.search(line)
+            if cm:
+                cur.calls.append((cm.group(1), 1, "fusion"))  # scalar bodies
+            cur.cost.flops += res_elems
+            cur.cost.bytes += res_bytes + sum(
+                _shape_elems_bytes(s or "")[1] for s in operand_shapes
+            )
+            continue
+
+        if opcode in TRANSCENDENTAL_OPS:
+            cur.cost.transcendentals += res_elems
+            cur.cost.flops += res_elems
+
+        cur.cost.flops += res_elems
+        cur.cost.bytes += res_bytes + sum(
+            _shape_elems_bytes(s or "")[1] for s in operand_shapes
+        )
+    return comps
+
+
+def analyze(text: str) -> OpCost:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    mult = _fixed_point_multipliers(comps, entry.name)
+    fusion_interior = _fusion_interior_set(comps)
+
+    total = OpCost()
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        # fusion interiors: flops count, bytes stay on-chip
+        total.scaled_add(comp.cost, m, bytes_too=comp.name not in fusion_interior)
+    return total
+
+
+def _fusion_interior_set(comps: dict[str, Computation]) -> set[str]:
+    """Computations reachable ONLY through fusion edges."""
+    non_fusion_roots: set[str] = set()
+    fusion_called: set[str] = set()
+    for comp in comps.values():
+        for callee, _, kind in comp.calls:
+            if kind == "fusion":
+                fusion_called.add(callee)
+            else:
+                non_fusion_roots.add(callee)
+    # propagate: anything called (non-fusion) from a fusion interior is
+    # still interior unless reachable from a non-fusion context; keep it
+    # simple — one level is what XLA emits.
+    return fusion_called - non_fusion_roots
+
+
+def _fixed_point_multipliers(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    mult: dict[str, float] = {entry: 1.0}
+    for _ in range(len(comps) + 4):
+        new: dict[str, float] = defaultdict(float)
+        new[entry] = 1.0
+        for comp in comps.values():
+            m = mult.get(comp.name, 0.0)
+            if m <= 0:
+                continue
+            for callee, k, _kind in comp.calls:
+                if callee in comps:
+                    new[callee] += m * k
+        new_d = dict(new)
+        if new_d == mult:
+            return new_d
+        mult = new_d
+    return mult

@@ -1,0 +1,108 @@
+"""Three-term roofline model for TPU v5e from compiled dry-run artifacts.
+
+    compute_s    = HLO_FLOPs / peak_FLOPs            (per device)
+    memory_s     = HLO_bytes / HBM_bw                (per device)
+    collective_s = collective_bytes / link_bw        (per device)
+
+Hardware constants fixed by the assignment: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI. `MODEL_FLOPS` uses 6*N*D (dense train),
+6*N_active*D (MoE train) and 2*N*B (decode, one token per sequence),
+giving the useful-compute ratio that catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes / s / chip
+ICI_BW = 50e9  # bytes / s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms
+        (perfect overlap of compute, HBM and ICI)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips)."""
+        denom = self.hlo_flops * self.n_chips
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return self.model_flops / (self.n_chips * PEAK_FLOPS * self.step_time_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_at_roofline": self.mfu,
+            "step_time_s": self.step_time_s,
+            "n_chips": self.n_chips,
+        }
+
+
+def from_dryrun(
+    cost: dict,
+    collective_bytes: float,
+    model_flops: float,
+    n_chips: int,
+) -> Roofline:
+    """cost = compiled.cost_analysis() (per-device numbers)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_accessed / HBM_BW,
+        collective_s=collective_bytes / ICI_BW,
+        hlo_flops=flops,
+        hlo_bytes=bytes_accessed,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )
+
+
+def model_flops_for(arch_cfg, shape_cfg) -> float:
+    """Analytic useful FLOPs per step for the (arch, shape) cell."""
+    n_active = arch_cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape_cfg.global_batch

@@ -1,0 +1,96 @@
+"""Pytree <-> flat-buffer utilities used by the stream layer.
+
+The stream layer (core/stream.py) transfers *stream elements* of a fixed
+granularity S. To stream an arbitrary pytree (gradients, particle
+buffers, checkpoint shards) we flatten it into one 1-D buffer, pad to a
+multiple of the element size, and later unflatten. All functions are
+jit-compatible (shapes are static given the tree structure).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TreeSpec(NamedTuple):
+    """Static description of a flattened pytree (closed over by jit)."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    total: int  # unpadded element count of the flat buffer
+
+
+def spec_of(tree: Any) -> TreeSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    return TreeSpec(treedef, shapes, dtypes, sizes, int(sum(sizes)))
+
+
+def flatten(tree: Any, dtype=jnp.float32) -> jax.Array:
+    """Flatten a pytree of arrays into one 1-D buffer of `dtype`."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype)
+    return jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves])
+
+
+def unflatten(spec: TreeSpec, buf: jax.Array) -> Any:
+    """Inverse of `flatten` given the static TreeSpec."""
+    leaves = []
+    off = 0
+    for shape, dt, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(buf[off : off + size].reshape(shape).astype(dt))
+        off += size
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def pad_to_multiple(buf: jax.Array, multiple: int) -> jax.Array:
+    n = buf.shape[0]
+    padded = ((n + multiple - 1) // multiple) * multiple if multiple > 0 else n
+    if padded == n:
+        return buf
+    return jnp.concatenate([buf, jnp.zeros((padded - n,), buf.dtype)])
+
+
+def num_chunks(total: int, chunk: int) -> int:
+    return max(1, -(-total // chunk))
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_allclose(a: Any, b: Any, rtol=1e-5, atol=1e-5) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: bool(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)),
+        a,
+        b,
+    )
+    return all(jax.tree.leaves(oks))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def global_norm(tree: Any, _unused: int = 0) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    )

@@ -1,0 +1,32 @@
+"""Shared helpers. Multi-device tests run in SUBPROCESSES so the main
+pytest process keeps the default single CPU device (the dry-run is the
+only place that forces 512 devices — per its contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 900) -> str:
+    """Run `code` in a fresh interpreter with n fake CPU devices.
+    Raises on failure, returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture
+def multidevice():
+    return run_multidevice

@@ -1,0 +1,140 @@
+"""Unit + property tests for the core decoupling library (single device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.groups import GroupedMesh, GroupSpec, batch_rows_padding
+from repro.core.imbalance import ImbalanceModel, skewed_partition
+from repro.core.stream import StreamChunker, granularity_from_bytes
+from repro.utils import treeutil
+
+
+class FakeMesh:
+    """Duck-typed mesh (GroupedMesh only reads .shape)."""
+
+    def __init__(self, rows):
+        self.shape = {"data": rows}
+
+
+def gm(rows, **services):
+    return GroupedMesh.build(FakeMesh(rows), services=services)
+
+
+# -- groups ------------------------------------------------------------------------
+
+def test_group_resolution_basic():
+    g = gm(16, reduce=1 / 16)
+    assert g.compute.size == 15
+    assert g.group("reduce").size == 1
+    assert g.alpha("reduce") == pytest.approx(1 / 16)
+
+
+def test_min_one_row_for_positive_alpha():
+    g = gm(16, io=0.001)
+    assert g.group("io").size == 1
+
+
+def test_no_room_raises():
+    with pytest.raises(ValueError):
+        gm(2, a=0.5, b=0.5)
+
+
+def test_axis_index_groups_partition():
+    g = gm(8, reduce=0.25)
+    groups = g.axis_index_groups("reduce")
+    flat = sorted(r for grp in groups for r in grp)
+    assert flat == list(range(8))  # XLA needs a full partition
+    assert [6, 7] in groups
+
+
+@given(rows=st.integers(2, 64), frac=st.floats(0.01, 0.45))
+@settings(max_examples=60, deadline=None)
+def test_group_partition_property(rows, frac):
+    try:
+        g = gm(rows, svc=frac)
+    except ValueError:
+        return
+    total = sum(grp.size for grp in g.groups)
+    assert total == rows
+    # contiguous, non-overlapping
+    cursor = 0
+    for grp in g.groups:
+        assert grp.start == cursor
+        cursor = grp.stop
+
+
+def test_producer_consumer_perm_partial_permutation():
+    g = gm(8, reduce=0.25)
+    pairs = g.producer_consumer_perm("compute", "reduce", shift=0)
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+
+
+def test_batch_rows_padding():
+    per_row, padded = batch_rows_padding(256, 15)
+    assert per_row == 18 and padded == 270
+    assert batch_rows_padding(256, 16) == (16, 256)
+
+
+# -- stream chunker ------------------------------------------------------------------
+
+TREES = st.lists(
+    st.tuples(st.integers(1, 5), st.integers(1, 7)), min_size=1, max_size=4
+).map(lambda shapes: {f"w{i}": np.arange(a * b, dtype=np.float32).reshape(a, b) + i
+                      for i, (a, b) in enumerate(shapes)})
+
+
+@given(tree=TREES, chunk=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_chunker_roundtrip(tree, chunk):
+    tree = jax.tree.map(jnp.asarray, tree)
+    ch = StreamChunker.plan(tree, chunk)
+    packed = ch.pack(tree)
+    assert packed.shape == (ch.n_chunks, ch.chunk_elems)
+    out = ch.unpack(packed)
+    assert treeutil.tree_allclose(tree, out)
+
+
+def test_chunker_accounting():
+    tree = {"a": jnp.zeros((10, 10))}
+    ch = StreamChunker.plan(tree, 16)
+    assert ch.overhead_calls() == ch.n_chunks == 7  # ceil(100/16)
+    assert ch.total_bytes == 400
+    assert granularity_from_bytes(64) == 16
+
+
+# -- treeutil -----------------------------------------------------------------------
+
+@given(tree=TREES)
+@settings(max_examples=30, deadline=None)
+def test_flatten_unflatten(tree):
+    tree = jax.tree.map(jnp.asarray, tree)
+    spec = treeutil.spec_of(tree)
+    flat = treeutil.flatten(tree)
+    assert flat.shape == (spec.total,)
+    out = treeutil.unflatten(spec, flat)
+    assert treeutil.tree_allclose(tree, out)
+
+
+# -- imbalance ------------------------------------------------------------------------
+
+@given(total=st.integers(1, 100000), parts=st.integers(1, 64),
+       skew=st.floats(0.0, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_skewed_partition_conserves(total, parts, skew):
+    rng = np.random.default_rng(0)
+    counts = skewed_partition(total, parts, skew, rng)
+    assert counts.sum() == total
+    assert (counts >= 0).all()
+
+
+def test_imbalance_monte_carlo_close_to_closed_form():
+    from repro.core.perfmodel import t_sigma
+
+    m = ImbalanceModel(kind="gaussian", mean=1.0, sigma=0.05)
+    mc = m.expected_t_sigma(256, n_trials=400)
+    cf = t_sigma(0.05, 256)
+    assert mc == pytest.approx(cf, rel=0.35)  # sqrt(2 ln P) approximation

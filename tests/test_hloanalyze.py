@@ -1,0 +1,93 @@
+"""The call-graph HLO analyzer: exact on unnested programs, trip-count
+scaling on scans, collective accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.utils import hloanalyze
+from repro.utils.roofline import Roofline, from_dryrun, model_flops_for
+
+
+def test_matches_xla_on_plain_matmul():
+    f = jax.jit(lambda a, b: a @ b)
+    co = f.lower(
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+        jax.ShapeDtypeStruct((256, 256), jnp.float32),
+    ).compile()
+    mine = hloanalyze.analyze(co.as_text())
+    assert mine.flops == pytest.approx(co.cost_analysis()["flops"], rel=0.01)
+    assert mine.flops == pytest.approx(2 * 256**3, rel=0.01)
+
+
+def test_scan_body_scaled_by_trip_count():
+    def g(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=7)
+        return y.sum()
+
+    co = jax.jit(g).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    mine = hloanalyze.analyze(co.as_text())
+    expected = 2 * 64**3 * 7
+    assert mine.flops == pytest.approx(expected, rel=0.05)
+    # XLA's own analyzer undercounts (visits the body once)
+    assert co.cost_analysis()["flops"] < expected / 2
+
+
+def test_nested_scan():
+    def g(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    co = jax.jit(g).lower(jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    mine = hloanalyze.analyze(co.as_text())
+    assert mine.flops == pytest.approx(2 * 32**3 * 15, rel=0.05)
+
+
+def test_split_op_line_handles_tuples_with_comments():
+    line = ('  %while.71 = (s32[], bf16[16,4096,2048]{2,1,0}, '
+            '/*index=5*/f32[4,2048]{1,0}) while(%tuple.1), '
+            'condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"22"}}')
+    parsed = hloanalyze._split_op_line(line)
+    assert parsed is not None
+    name, shape, opcode, rest = parsed
+    assert name == "while.71" and opcode == "while"
+
+
+def test_shape_bytes():
+    elems, nbytes = hloanalyze._shape_elems_bytes("bf16[16,1024]{1,0}")
+    assert elems == 16384 and nbytes == 32768
+
+
+# -- roofline -------------------------------------------------------------------------
+
+def test_roofline_terms_and_dominance():
+    rl = from_dryrun(
+        {"flops": 197e12, "bytes accessed": 819e9 / 2},
+        collective_bytes=50e9 * 2,
+        model_flops=197e12 * 0.5,
+        n_chips=1,
+    )
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(0.5)
+    assert rl.collective_s == pytest.approx(2.0)
+    assert rl.dominant == "collective"
+    assert rl.step_time_s == pytest.approx(2.0)
+    assert rl.useful_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_for_shapes():
+    from repro.configs import SHAPES, get
+
+    cfg = get("tinyllama-1.1b")
+    n = cfg.param_count()
+    train = model_flops_for(cfg, SHAPES["train_4k"])
+    assert train == pytest.approx(6 * n * 256 * 4096, rel=1e-6)
+    dec = model_flops_for(cfg, SHAPES["decode_32k"])
+    assert dec == pytest.approx(2 * n * 128, rel=1e-6)
+    # MoE: active params only
+    moe = get("mixtral-8x7b")
+    assert moe.active_param_count() < 0.4 * moe.param_count()

@@ -1,0 +1,77 @@
+"""Per-kernel correctness: shape/dtype sweeps against the ref.py oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_naive, ssd_ref
+from repro.kernels.stream_reduce.ops import accumulate, keyed_histogram
+from repro.kernels.stream_reduce.ref import chunk_accumulate_ref, histogram_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,d,causal,window",
+    [
+        (2, 256, 256, 4, 2, 64, True, 0),
+        (1, 128, 384, 8, 8, 32, True, 64),
+        (2, 100, 100, 4, 1, 128, False, 0),   # ragged, MQA
+        (1, 300, 300, 2, 2, 64, True, 128),   # ragged + window
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, sq, sk, h, kv, d, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, sk, kv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, sk, kv, d)), dtype)
+    out = mha(q, k, v, causal=causal, window=window)
+    ref = attention_ref(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=causal, window=window,
+    ).swapaxes(1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 96, 3, 32, 16, 32),
+    (1, 64, 2, 16, 8, 16),
+    (1, 50, 1, 8, 4, 16),   # ragged chunking
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_naive(b, s, h, p, n, chunk, dtype):
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), dtype)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, size=(h,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(b, s, n)), dtype)
+    Cm = jnp.asarray(RNG.normal(size=(b, s, n)), dtype)
+    yk = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    yr = ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    yn = ssd_naive(x, dt, A, Bm, Cm)
+    tol = 2e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(yk, np.float32), np.asarray(yn, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(yr, np.float32), np.asarray(yn, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("n,bins", [(3000, 700), (512, 2000), (100, 16)])
+def test_histogram_matches_ref(n, bins):
+    keys = jnp.asarray(RNG.integers(-1, bins, size=(n,)), jnp.int32)
+    counts = jnp.asarray(RNG.uniform(0, 5, size=(n,)), jnp.float32)
+    out = keyed_histogram(keys, counts, bins)
+    ref = histogram_ref(keys, counts, bins)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-3)
+
+
+@pytest.mark.parametrize("chunks,s", [(7, 2500), (1, 10), (16, 1024)])
+def test_accumulate_matches_ref(chunks, s):
+    el = jnp.asarray(RNG.normal(size=(chunks, s)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(accumulate(el)), np.asarray(chunk_accumulate_ref(el)), atol=1e-4
+    )

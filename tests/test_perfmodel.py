@@ -1,0 +1,104 @@
+"""The paper's performance model (Eqs. 1-4) — limiting behaviour and
+properties from Sec. II-D."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel import (
+    OperationTraits,
+    StreamCosts,
+    WorkloadProfile,
+    decoupling_criteria,
+    default_beta,
+    memory_bytes,
+    optimal_alpha,
+    optimal_granularity,
+    t_conventional,
+    t_decoupled,
+    t_sigma,
+)
+
+P = 1024
+PROFILE = WorkloadProfile(t_w0=1.0, t_w1=0.5, d_bytes=1e9, sigma=0.02)
+COSTS = StreamCosts(o_seconds=1e-6)
+
+
+def test_eq1_conventional_is_sum():
+    p = WorkloadProfile(t_w0=1.0, t_w1=0.5, d_bytes=0, sigma=0.0)
+    assert t_conventional(p, P) == pytest.approx(1.5)
+
+
+def test_tsigma_grows_with_p():
+    assert t_sigma(0.1, 16) < t_sigma(0.1, 4096)
+    assert t_sigma(0.1, 1) == 0.0
+    assert t_sigma(0.0, 4096) == 0.0
+
+
+def test_beta_limits():
+    """Paper: beta=1 (one element) -> no pipeline; fine S -> beta -> floor."""
+    assert default_beta(1e9, 1e9) == 1.0
+    assert default_beta(2e9, 1e9) == 1.0
+    assert default_beta(1e3, 1e9) == pytest.approx(0.05)  # floor
+
+
+def test_eq3_limits():
+    """beta=1: T_d = compute side + decoupled side (sum, no pipelining);
+    beta->0: T_d -> decoupled side only (perfect pipeline)."""
+    costs_b1 = StreamCosts(o_seconds=0.0, beta=lambda s, d: 1.0)
+    costs_b0 = StreamCosts(o_seconds=0.0, beta=lambda s, d: 0.0)
+    p = WorkloadProfile(t_w0=1.0, t_w1=0.5, d_bytes=1e9, sigma=0.0)
+    alpha = 1 / 16
+    n_service = round(alpha * P)
+    service = p.t_w1 * P / n_service
+    compute = p.t_w0 * P / (P - n_service)
+    assert t_decoupled(p, P, alpha, 1e6, costs_b1) == pytest.approx(compute + service)
+    assert t_decoupled(p, P, alpha, 1e6, costs_b0) == pytest.approx(service)
+
+
+def test_overhead_term():
+    """Doubling granularity halves the (D/S)*o overhead term."""
+    costs = StreamCosts(o_seconds=1e-6, beta=lambda s, d: 1.0)
+    p = WorkloadProfile(t_w0=0.0, t_w1=1e-9, d_bytes=1e9, sigma=0.0)
+    t1 = t_decoupled(p, P, 0.5, 1e3, costs)
+    t2 = t_decoupled(p, P, 0.5, 2e3, costs)
+    assert t1 > t2
+
+
+def test_memory_model():
+    assert memory_bytes(1e9, 1e6, buffered=False) == 1e6  # O(S)
+    assert memory_bytes(1e9, 1e6, buffered=True) == 1e9  # O(D)
+
+
+def test_optimal_alpha_returns_feasible():
+    a, t = optimal_alpha(PROFILE, P, 65536, COSTS)
+    assert 0 < a < 1 and t > 0
+
+
+def test_optimal_granularity_interior():
+    """The S trade-off (pipelining vs overhead) has an interior optimum."""
+    costs = StreamCosts(o_seconds=1e-5)
+    s, t = optimal_granularity(PROFILE, P, 1 / 16, costs)
+    cands = tuple(2.0**k for k in range(10, 28))
+    assert s not in (cands[0], cands[-1])
+
+
+def test_criteria():
+    traits = OperationTraits(complexity_grows_with_p=True, high_variance=True)
+    hits = decoupling_criteria(traits)
+    assert "complexity-grows-with-P" in hits and "high-variance" in hits
+
+
+@given(
+    alpha=st.floats(1 / 64, 0.5),
+    s=st.floats(1e3, 1e8),
+    sigma=st.floats(0, 0.2),
+)
+@settings(max_examples=50, deadline=None)
+def test_decoupled_time_bounded_below_by_service_side(alpha, s, sigma):
+    """T_d >= T'_W1/alpha for every (alpha, S, sigma): pipelining can
+    hide the compute side but never the decoupled op itself (Eq. 3)."""
+    p = WorkloadProfile(t_w0=1.0, t_w1=0.3, d_bytes=1e8, sigma=sigma)
+    n_service = max(1, round(alpha * P))
+    service = p.t_w1 * P / n_service
+    assert t_decoupled(p, P, alpha, s, COSTS) >= service - 1e-9

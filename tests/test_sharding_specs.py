@@ -1,0 +1,70 @@
+"""Sharding rules must produce divisible specs for EVERY full config on
+the production 16-way model axis (using eval_shape — no allocation)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get
+from repro.models import build
+from repro.train import sharding
+
+MODEL_SIZE = 16
+DATA_SIZE = 16
+
+
+class FakeMesh:
+    shape = {"model": MODEL_SIZE, "data": DATA_SIZE}
+
+
+def _params_like(name):
+    model = build(get(name))
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_specs_divisible(name):
+    params_like = _params_like(name)
+    specs = sharding.param_specs(params_like, MODEL_SIZE)
+
+    def check(leaf, spec):
+        entries = list(spec)
+        for d, axis in enumerate(entries):
+            if axis is None:
+                continue
+            assert leaf.shape[d] % MODEL_SIZE == 0, (name, leaf.shape, spec)
+
+    jax.tree.map(check, params_like, specs)
+
+
+@pytest.mark.parametrize("name", ["starcoder2-15b", "mixtral-8x7b", "llama4-scout-17b-a16e"])
+def test_big_leaves_are_sharded(name):
+    """The dominant weight matrices must not end up replicated."""
+    params_like = _params_like(name)
+    specs = sharding.param_specs(params_like, MODEL_SIZE)
+    replicated_big = []
+
+    def check(path, leaf, spec):
+        if int(np.prod(leaf.shape)) > 50_000_000 and all(e is None for e in spec):
+            replicated_big.append((path, leaf.shape))
+
+    jax.tree_util.tree_map_with_path(check, params_like, specs)
+    assert not replicated_big, replicated_big
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_zero1_specs_add_data_axis(name):
+    params_like = _params_like(name)
+    pspecs = sharding.param_specs(params_like, MODEL_SIZE)
+    zspecs = sharding.zero1_specs(params_like, pspecs, ("data",), DATA_SIZE)
+
+    def check(leaf, spec):
+        for d, axis in enumerate(list(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for a in axes:
+                size *= {"model": MODEL_SIZE, "data": DATA_SIZE}[a]
+            assert leaf.shape[d] % size == 0, (name, leaf.shape, spec)
+
+    jax.tree.map(check, params_like, zspecs)
