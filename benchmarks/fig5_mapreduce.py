@@ -14,12 +14,9 @@ evaluated at P = 32..8192 against the paper's 2x -> 4x claims.
 """
 from __future__ import annotations
 
-import jax
-import numpy as np
-
 from benchmarks.util import PAPER_SCALES, bench, csv_row
 from repro.apps.mapreduce import CorpusCfg, run_wordcount
-from repro.core.perfmodel import StreamCosts, WorkloadProfile, t_sigma
+from repro.core.perfmodel import t_sigma
 
 
 def measure(mesh) -> dict:

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from benchmarks.util import PAPER_SCALES, bench, csv_row
 from repro.apps.cg import CGCfg, run_cg

@@ -10,22 +10,22 @@ import traceback
 
 
 def main() -> None:
-    import jax
-    from jax.sharding import AxisType
+    from repro.utils.compat import make_mesh
 
     from benchmarks import (
         fig5_mapreduce,
         fig6_cg,
         fig7_particle_comm,
         fig8_particle_io,
+        fig9_disagg_serve,
         roofline_table,
     )
 
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
-                roofline_table):
+                fig9_disagg_serve, roofline_table):
         try:
             for line in mod.run(mesh):
                 print(line)

@@ -12,7 +12,7 @@ import numpy as np
 from jax.sharding import AxisType
 
 from repro.apps.mapreduce import CorpusCfg, run_wordcount
-from repro.core import StreamCosts, WorkloadProfile, optimal_alpha, t_sigma
+from repro.core import StreamCosts, WorkloadProfile, optimal_alpha
 
 
 def main():

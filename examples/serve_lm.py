@@ -5,8 +5,13 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 decoupled analytics samples per tick (the paper's Listing-1 pattern
 applied to an inference fleet).
 
-Run:  PYTHONPATH=src python examples/serve_lm.py
+`--disagg` routes the same trace through the disaggregated engine
+instead: a prefill group feeds KV caches to the decode slot pool
+through the handoff channel (see repro/serve/disagg.py).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--disagg]
 """
+import argparse
 import time
 
 import jax
@@ -14,14 +19,26 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build
+from repro.serve.disagg import DisaggConfig, DisaggEngine
 from repro.serve.engine import Engine, EngineConfig, Request
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--disagg", action="store_true",
+                    help="serve through the prefill/decode-disaggregated engine")
+    args = ap.parse_args()
+
     cfg = get_smoke("qwen2.5-3b")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, EngineConfig(max_batch=4, max_len=96))
+    if args.disagg:
+        eng = DisaggEngine(
+            model, params,
+            DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=96),
+        )
+    else:
+        eng = Engine(model, params, EngineConfig(max_batch=4, max_len=96))
 
     rng = np.random.default_rng(0)
     n_requests = 10
@@ -33,18 +50,23 @@ def main():
     t0 = time.time()
     ticks = 0
     analytics = []
-    while eng.queue or any(s is not None for s in eng.slots):
+    while not eng.idle():
         eng.step()
         ticks += 1
         analytics.append(eng.workload_sample())  # -> decoupled analytics group
         if ticks > 500:
             raise RuntimeError("engine did not drain")
     dt = time.time() - t0
-    print(f"served {n_requests} requests, {eng.stats['tokens_out']} tokens "
-          f"in {ticks} ticks ({eng.stats['tokens_out']/dt:.1f} tok/s on CPU)")
+    mode = "disaggregated" if args.disagg else "colocated"
+    print(f"[{mode}] served {n_requests} requests, {eng.stats['tokens_out']} "
+          f"tokens in {ticks} ticks ({eng.stats['tokens_out']/dt:.1f} tok/s on CPU)")
     occ = np.mean([a["active_slots"] for a in analytics])
     print(f"mean slot occupancy {occ:.2f}/4, final queue depth "
           f"{analytics[-1]['queue_depth']}")
+    if args.disagg:
+        ttft = [r.first_token_tick - r.submitted_tick for r in eng.finished]
+        print(f"prefills handed off: {eng.stats['handoffs']}, "
+              f"mean TTFT {np.mean(ttft):.1f} ticks")
 
 
 if __name__ == "__main__":

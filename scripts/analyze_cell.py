@@ -3,7 +3,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Hillclimb profiler: lower one cell and print the top collective and
 byte contributors with call-graph scaling (the dry-run 'profile')."""
 import argparse
-import sys
 
 
 def main():

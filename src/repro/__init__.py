@@ -1,0 +1,1 @@
+"""repro: the decoupling-strategy reproduction (see ROADMAP.md)."""

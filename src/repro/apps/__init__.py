@@ -1,0 +1,1 @@
+"""The paper case-study applications: MapReduce, CG, PIC."""

@@ -26,7 +26,6 @@ modelled with `skewed_partition`.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

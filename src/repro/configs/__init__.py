@@ -1,1 +1,21 @@
-from repro.configs.base import ARCH_NAMES, REGISTRY, SHAPES, ArchConfig, ShapeCfg, cells, get, get_smoke
+from repro.configs.base import (
+    ARCH_NAMES,
+    REGISTRY,
+    SHAPES,
+    ArchConfig,
+    ShapeCfg,
+    cells,
+    get,
+    get_smoke,
+)
+
+__all__ = [
+    "ARCH_NAMES",
+    "REGISTRY",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeCfg",
+    "cells",
+    "get",
+    "get_smoke",
+]

@@ -26,14 +26,21 @@ from repro.core.imbalance import ImbalanceModel, skewed_partition
 from repro.core.operators import (
     StreamOperator,
     buffer_op,
+    cache_migration_op,
+    cache_stream_plan,
     finalize_workload_stats,
     histogram_op,
+    migrate_cache_into_slot,
+    pack_cache,
     pack_kv,
+    strip_cache_pos,
     sum_op,
     workload_stats_op,
 )
 from repro.core.perfmodel import (
+    DisaggPlan,
     OperationTraits,
+    ServeWorkload,
     StreamCosts,
     WorkloadProfile,
     decoupling_criteria,
@@ -41,20 +48,27 @@ from repro.core.perfmodel import (
     memory_bytes,
     optimal_alpha,
     optimal_granularity,
+    prefill_traits,
     recommend_decoupling,
+    recommend_disaggregation,
+    serve_speedup,
     speedup,
+    t_colocated_serve,
     t_conventional,
     t_decoupled,
+    t_disagg_serve,
     t_sigma,
 )
 from repro.core.stream import StreamChunker, granularity_from_bytes
 
 __all__ = [
     "COMPUTE",
+    "DisaggPlan",
     "GroupSpec",
     "GroupedMesh",
     "ImbalanceModel",
     "OperationTraits",
+    "ServeWorkload",
     "StreamChannel",
     "StreamChunker",
     "StreamCosts",
@@ -62,6 +76,8 @@ __all__ = [
     "WorkloadProfile",
     "batch_rows_padding",
     "buffer_op",
+    "cache_migration_op",
+    "cache_stream_plan",
     "conventional_allreduce",
     "decoupling_criteria",
     "default_beta",
@@ -74,19 +90,27 @@ __all__ = [
     "histogram_op",
     "make_channel",
     "memory_bytes",
+    "migrate_cache_into_slot",
     "optimal_alpha",
     "optimal_granularity",
+    "pack_cache",
     "pack_kv",
+    "prefill_traits",
     "recommend_decoupling",
+    "recommend_disaggregation",
     "role_index",
     "select_by_role",
+    "serve_speedup",
     "skewed_partition",
     "speedup",
+    "strip_cache_pos",
     "stream_reduce",
     "stream_reduce_and_return",
     "sum_op",
+    "t_colocated_serve",
     "t_conventional",
     "t_decoupled",
+    "t_disagg_serve",
     "t_sigma",
     "workload_stats_op",
 ]

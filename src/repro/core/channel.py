@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +92,7 @@ class StreamChannel:
         init: Any,
         *,
         count: jax.Array | None = None,
+        waves: Sequence[int] | None = None,
     ) -> Any:
         """Stream producer-local ``elements`` to consumers and fold.
 
@@ -105,6 +106,11 @@ class StreamChannel:
         count : optional per-producer valid-chunk count (dynamic, for
             variable-size streams — the paper's imbalanced producers).
             Elements at index >= count are skipped by masking.
+        waves : optional subset of waves to drain (default: all). Lets a
+            caller interleave per-wave post-processing — e.g. the
+            disaggregated serving step migrates each wave's arriving KV
+            cache into a different decode slot before draining the next
+            wave of producers.
 
         Returns the folded state (valid on consumer rows).
         """
@@ -116,7 +122,7 @@ class StreamChannel:
         cons_rank = self.member_rank(self.consumer)
 
         acc = init
-        for wave in range(self.n_waves):
+        for wave in range(self.n_waves) if waves is None else waves:
             perm = self.wave_perm(wave)
             if not perm:
                 continue

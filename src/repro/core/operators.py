@@ -19,6 +19,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import stream
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamOperator:
@@ -66,6 +68,101 @@ def pack_kv(keys: jax.Array, counts: jax.Array, elem_width: int) -> jax.Array:
     c = counts.astype(jnp.float32)
     pad = elem_width - 2 * keys.shape[0]
     return jnp.concatenate([k, c, jnp.zeros((max(pad, 0),), jnp.float32)])
+
+
+# -- KV-cache migration (disaggregated serving) --------------------------------
+#
+# `pack_kv` generalized from (key, count) pairs to a whole attention
+# KV cache: a finished prefill's cache pytree is packed into granularity-S
+# stream elements, handed producer -> consumer through a StreamChannel,
+# re-assembled by `cache_migration_op` on the decode group, and written
+# into a free decode slot by `migrate_cache_into_slot`. The same slot
+# write is reused by the colocated engine (slot admission is then a
+# local migration with no channel in between), which is what makes
+# colocated and disaggregated decode bit-for-bit comparable.
+
+def strip_cache_pos(cache: dict) -> dict:
+    """Cache pytree without the scalar cursor (streamed separately)."""
+    return {k: v for k, v in cache.items() if k != "pos"}
+
+
+def cache_stream_plan(cache_like: Any, chunk_elems: int) -> "stream.StreamChunker":
+    """Static chunking plan for a per-request cache pytree.
+
+    Elements travel as float32 — exact for the bf16/f32/int32 leaves a
+    cache holds, so migration is value-preserving bit-for-bit.
+    """
+    return stream.StreamChunker.plan(strip_cache_pos(cache_like), chunk_elems)
+
+
+def pack_cache(cache: dict, plan: "stream.StreamChunker") -> jax.Array:
+    """cache pytree -> (n_chunks, S) stream elements (pos excluded)."""
+    return plan.pack(strip_cache_pos(cache))
+
+
+def cache_migration_op(plan: "stream.StreamChunker") -> StreamOperator:
+    """Re-assemble a streamed cache on the consumer group.
+
+    State is a staging buffer with one row per stream element; chunk k
+    lands in row k, so after the fold `plan.unpack(state)` restores the
+    producer's cache pytree exactly.
+    """
+
+    def init():
+        return jnp.zeros((plan.n_chunks, plan.chunk_elems), plan.dtype)
+
+    def apply(state, elem, k):
+        return jax.lax.dynamic_update_slice(
+            state, elem[None, :].astype(plan.dtype), (k, jnp.zeros((), k.dtype))
+        )
+
+    return StreamOperator(name="cache_migration", init=init, apply=apply)
+
+
+def migrate_cache_into_slot(
+    dst_cache: dict,
+    src_cache: dict,
+    slot: jax.Array | int,
+    *,
+    ok: jax.Array | None = None,
+) -> dict:
+    """Write a single-request cache into slot `slot` of a batched cache.
+
+    ``src_cache`` leaves are (L, 1, s, ...) per-request buffers (from a
+    batch-1 prefill); ``dst_cache`` leaves are (L, B, S, ...) slot pools
+    with s <= S. Sequence-shaped leaves ("k"/"v") are zero-extended to S
+    before the write so stale KV from the slot's previous occupant never
+    leaks into attention. The shared decode cursor advances to
+    ``max(dst pos, src pos)`` — the engines' shared-position contract.
+
+    ``ok`` (bool scalar) masks the whole migration; with ``ok=False``
+    the destination cache is returned unchanged (used by the SPMD step,
+    where every row executes the migration unconditionally).
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    out = dict(dst_cache)
+    for key, src in src_cache.items():
+        if key == "pos":
+            continue
+        dst = dst_cache[key]
+        if src.shape[1] != 1:
+            raise ValueError(f"{key}: source cache must be batch-1, got {src.shape}")
+        row_shape = dst.shape[:1] + (1,) + dst.shape[2:]
+        row = jnp.zeros(row_shape, dst.dtype)
+        row = jax.lax.dynamic_update_slice(
+            row, src.astype(dst.dtype), (0,) * src.ndim
+        )
+        idx = (jnp.zeros((), jnp.int32), slot) + (jnp.zeros((), jnp.int32),) * (
+            dst.ndim - 2
+        )
+        new = jax.lax.dynamic_update_slice(dst, row, idx)
+        out[key] = new if ok is None else jnp.where(ok, new, dst)
+    if "pos" in dst_cache and "pos" in src_cache:
+        new_pos = jnp.maximum(dst_cache["pos"], src_cache["pos"].astype(jnp.int32))
+        out["pos"] = (
+            new_pos if ok is None else jnp.where(ok, new_pos, dst_cache["pos"])
+        )
+    return out
 
 
 # -- buffering I/O group -------------------------------------------------------

@@ -160,6 +160,146 @@ def optimal_granularity(
     return best
 
 
+# -- serving specialization: prefill/decode disaggregation ----------------------
+#
+# LLM serving is a two-operation application in the paper's sense:
+# Op0 = decode (latency-bound, one token per step, bandwidth-limited)
+# stays on the compute group; Op1 = prefill (throughput-bound, whole
+# prompts, FLOP-limited) is the decoupling candidate, moved to a
+# dedicated group of alpha*P rows. The dataflow D between the groups is
+# the migrated KV cache of every admitted request, streamed at
+# granularity S through the channel (Eq. 4's (D/S)*o term). T_sigma
+# comes from prompt-length skew: a colocated engine stalls every decode
+# slot behind its slowest in-flight prefill, which is exactly the
+# paper's synchronization penalty.
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeWorkload:
+    """Per-request serving traits, normalized to one request.
+
+    ``prompt_cv`` is the coefficient of variation of prompt lengths
+    (skewed_partition / real traffic both give >~1); it feeds T_sigma.
+    ``slots`` is the decode slot batch of one lockstep engine group —
+    the number of admissions a colocated row stalls behind per round.
+    """
+
+    prompt_tokens: float  # mean prompt length
+    decode_tokens: float  # mean generated tokens per request
+    t_prefill_token: float  # seconds per prefill token on one row
+    t_decode_token: float  # seconds per decode step of one row's slot batch
+    kv_bytes_per_token: float  # KV cache bytes migrated per prompt token
+    prompt_cv: float = 0.0  # relative stddev of prompt length
+    slots: float = 8.0  # decode slots per lockstep group
+
+
+def serve_profile(w: ServeWorkload) -> WorkloadProfile:
+    """Map serving traits onto the paper's WorkloadProfile (per round
+    of ``slots`` requests).
+
+    The key asymmetry: a batch-1 prefill does not data-parallelize, so
+    a colocated fleet pays the *serial* prefill of its whole slot batch
+    (t_w1 = slots * t_prefill — head-of-line blocking), while the
+    disaggregated prefill group runs different requests concurrently:
+    ``t_w1_prime`` spreads the same slot batch over the group's rows.
+    T_sigma adds the prompt-length-skew spread on top; D is the KV
+    migrated per round.
+    """
+    t_prefill = w.prompt_tokens * w.t_prefill_token
+    serial = w.slots * t_prefill
+
+    def redistribute(total_w1: float, n_procs: int, n_service: int) -> float:
+        del total_w1, n_procs  # serial stall, not per-process work
+        return serial / max(n_service, 1)
+
+    return WorkloadProfile(
+        t_w0=w.decode_tokens * w.t_decode_token,
+        t_w1=serial,
+        d_bytes=w.kv_bytes_per_token * w.prompt_tokens * w.slots,
+        sigma=w.prompt_cv * t_prefill,
+        t_w1_prime=redistribute,
+    )
+
+
+def t_colocated_serve(w: ServeWorkload, n_rows: int) -> float:
+    """Eq. 1 for serving: every row prefills and decodes, and each batch
+    of decode slots waits out the slowest in-flight prefill."""
+    return t_conventional(serve_profile(w), n_rows)
+
+
+def t_disagg_serve(
+    w: ServeWorkload,
+    n_rows: int,
+    alpha: float,
+    s_bytes: float,
+    costs: StreamCosts,
+    pessimistic_max: bool = False,
+) -> float:
+    """Eq. 4 for serving: decode on (1-alpha)P rows, prefill on alpha*P
+    rows, KV caches streamed between them at granularity S.
+
+    Note the role flip relative to training: the *decoupled* group does
+    prefill, so alpha here sizes the prefill group and the compute side
+    is the decode fleet.
+    """
+    profile = serve_profile(w)
+    # decouple.t_decoupled treats t_w1 as the decoupled op — prefill.
+    return t_decoupled(profile, n_rows, alpha, s_bytes, costs, pessimistic_max)
+
+
+def serve_speedup(
+    w: ServeWorkload, n_rows: int, alpha: float, s_bytes: float, costs: StreamCosts
+) -> float:
+    return t_colocated_serve(w, n_rows) / t_disagg_serve(w, n_rows, alpha, s_bytes, costs)
+
+
+def prefill_traits(w: ServeWorkload) -> "OperationTraits":
+    """Sec. II-E suitability of prefill as a decoupling candidate."""
+    return OperationTraits(
+        orthogonal=True,  # a request's prefill is independent of others' decode
+        complexity_grows_with_p=False,
+        high_variance=w.prompt_cv > 0.25,  # skewed prompt lengths
+        continuous_dataflow=True,  # KV caches stream out as prefills finish
+        special_hardware=True,  # FLOP-bound vs bandwidth-bound decode
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggPlan:
+    """Output of recommend_disaggregation."""
+
+    disaggregate: bool
+    alpha: float
+    speedup: float
+    criteria: list[str]
+
+
+def recommend_disaggregation(
+    w: ServeWorkload,
+    n_rows: int,
+    s_bytes: float,
+    costs: StreamCosts,
+    candidates: Sequence[float] = (1 / 8, 1 / 4, 3 / 8, 1 / 2, 5 / 8, 3 / 4),
+) -> DisaggPlan:
+    """When does a prefill/decode split beat the colocated engine?
+
+    Combines the qualitative Sec. II-E screen (`recommend_decoupling`
+    over `prefill_traits`) with the quantitative Eq.-4 comparison over
+    an alpha grid, mirroring how `optimal_alpha` sizes the training
+    service groups.
+    """
+    traits_ok = recommend_decoupling(prefill_traits(w))
+    profile = serve_profile(w)
+    alpha, t_best = optimal_alpha(profile, n_rows, s_bytes, costs, candidates)
+    gain = t_colocated_serve(w, n_rows) / t_best
+    return DisaggPlan(
+        disaggregate=traits_ok and gain > 1.0,
+        alpha=alpha,
+        speedup=gain,
+        criteria=decoupling_criteria(prefill_traits(w)),
+    )
+
+
 # -- Sec. II-E suitability criteria ---------------------------------------------
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,1 @@
+"""Synthetic LM data pipeline with injectable length skew."""

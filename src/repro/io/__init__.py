@@ -1,0 +1,1 @@
+"""Decoupled I/O group and checkpointing."""

@@ -11,7 +11,6 @@ fills.
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,1 @@
+"""Flash-attention kernel (Pallas) with reference fallback."""

@@ -1,0 +1,1 @@
+"""SSD chunked-scan kernel (Pallas) with reference fallback."""

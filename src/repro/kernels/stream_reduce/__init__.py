@@ -1,0 +1,1 @@
+"""Stream-reduce kernel (Pallas) with reference fallback."""

@@ -1,0 +1,1 @@
+"""Mesh construction, dry-run, elastic restart launchers."""

@@ -1,2 +1,14 @@
 from repro.models import encdec, layers, model_zoo, moe, ssm, transformer
 from repro.models.model_zoo import Model, build, synthetic_batch
+
+__all__ = [
+    "Model",
+    "build",
+    "encdec",
+    "layers",
+    "model_zoo",
+    "moe",
+    "ssm",
+    "synthetic_batch",
+    "transformer",
+]

@@ -16,7 +16,6 @@ from repro.models.transformer import (
     _init_attn,
     chunked_softmax_xent,
     lm_logits,
-    unembed_table,
 )
 
 Params = dict

@@ -66,13 +66,15 @@ def _build_lm(cfg) -> Model:
     def init_cache(batch_size, max_len, **kw):
         return transformer.init_cache(cfg, batch_size, max_len)
 
-    def prefill(params, tokens, cache=None, **kw):
+    def prefill(params, tokens, cache=None, length=None, **kw):
         extra = kw.get(fkey) if fkey else None
         if cache is None:
             # frontend tokens (patches/frames) occupy cache slots too
             n_extra = extra.shape[1] if extra is not None else 0
             cache = init_cache(tokens.shape[0], tokens.shape[1] + n_extra)
-        return transformer.prefill_lm(cfg, params, tokens, cache, extra_embeds=extra)
+        return transformer.prefill_lm(
+            cfg, params, tokens, cache, extra_embeds=extra, length=length
+        )
 
     def decode_step(params, cache, token):
         return transformer.decode_step_lm(cfg, params, cache, token)

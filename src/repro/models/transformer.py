@@ -12,7 +12,6 @@ DESIGN.md §4) and the sequence dim shards for long contexts.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -251,16 +250,34 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
     return cache
 
 
-def prefill_lm(cfg, params: Params, tokens: jax.Array, cache: dict, *, extra_embeds=None):
+def prefill_lm(
+    cfg, params: Params, tokens: jax.Array, cache: dict, *, extra_embeds=None, length=None
+):
     """Run the full-sequence forward, fill the cache, return last-token
     logits and the updated cache. SSM/hybrid state prefill recomputes the
-    recurrence via the chunked scan's final state."""
+    recurrence via the chunked scan's final state.
+
+    ``length`` (scalar, may be traced) marks the true prompt length of a
+    right-padded ``tokens`` buffer: logits come from position length-1
+    and KV beyond ``length`` is zeroed, so a padded prefill is exactly
+    equivalent to an unpadded one (causality makes the padded tail
+    invisible to the prefix). Used by the disaggregated serving step,
+    where SPMD needs a uniform prompt shape across prefill rows.
+    Unsupported for SSM/hybrid caches (their recurrent state would have
+    consumed the padding) and for frontend-extended sequences.
+    """
+    if length is not None and extra_embeds is not None:
+        raise ValueError("length-masked prefill does not support extra_embeds")
     hidden, aux, kv, sstate = forward_lm(
         cfg, params, tokens, extra_embeds=extra_embeds, want_kv=True
     )
     s = hidden.shape[1]
     if kv is not None:
         kf, vf = kv  # (L, B, S, d_kv)
+        if length is not None:
+            keep = (jnp.arange(s) < length)[None, None, :, None]
+            kf = jnp.where(keep, kf, 0)
+            vf = jnp.where(keep, vf, 0)
         cache["k"] = jax.lax.dynamic_update_slice(
             cache["k"], kf.astype(cache["k"].dtype), (0, 0, 0, 0)
         )
@@ -268,10 +285,17 @@ def prefill_lm(cfg, params: Params, tokens: jax.Array, cache: dict, *, extra_emb
             cache["v"], vf.astype(cache["v"].dtype), (0, 0, 0, 0)
         )
     if sstate is not None:  # SSM / hybrid recurrent state after the seq
+        if length is not None:
+            raise ValueError("length-masked prefill needs an attention-only cache")
         cache["ssm_state"] = sstate["state"].astype(cache["ssm_state"].dtype)
         cache["ssm_conv"] = sstate["conv"].astype(cache["ssm_conv"].dtype)
-    cache["pos"] = jnp.full((), s, jnp.int32)
-    logits = lm_logits(cfg, params, hidden[:, -1:])
+    if length is None:
+        cache["pos"] = jnp.full((), s, jnp.int32)
+        last = hidden[:, -1:]
+    else:
+        cache["pos"] = jnp.asarray(length, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(hidden, cache["pos"] - 1, 1, axis=1)
+    logits = lm_logits(cfg, params, last)
     return logits, cache, aux
 
 

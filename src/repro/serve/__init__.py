@@ -1,0 +1,1 @@
+"""Serving: colocated engine, disaggregated engine, jitted steps."""

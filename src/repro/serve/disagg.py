@@ -1,0 +1,411 @@
+"""Disaggregated prefill/decode serving: the paper's decoupling strategy
+applied to LLM inference.
+
+Prefill (throughput-bound, whole prompts, FLOP-limited) and decode
+(latency-bound, one token per step, bandwidth-limited) are exactly the
+"diverse operations" of Sec. II: a colocated engine makes every worker
+do both, so one long prompt stalls every decode slot behind it (the
+conventional construction, `repro/serve/engine.py`). Here the two
+operations get dedicated groups on a `GroupedMesh` and the KV cache of
+every finished prefill flows producer -> consumer through a
+`StreamChannel` with a cache-migration operator attached — the paper's
+Listing-1 dataflow with "KV handoff" as the attached operator.
+
+Two realizations share the same operators:
+
+* `DisaggEngine` — host-level engine (any device count). A
+  `PrefillScheduler` admits requests to prefill rows by load (prompt
+  tokens pending, so `skewed_partition`-style prompt skew stays
+  balanced), finished prefills queue their per-request caches on the
+  handoff channel, and the decode group refills free slots at step
+  boundaries via `migrate_cache_into_slot`. Bit-for-bit equivalent to
+  the colocated engine under an aligned schedule (same jitted prefill /
+  migrate / decode programs).
+* `build_disagg_spmd_step` — one jitted `shard_map` tick over the
+  grouped mesh: prefill rows run a length-masked batch-1 prefill,
+  `StreamChannel.stream_fold` (one wave at a time) streams the packed
+  cache to decode rows, which unpack-and-migrate it into a free slot
+  and take `decode_steps` decode steps. `select_by_role` keeps the
+  MPMD divergence inside one SPMD program.
+
+`repro/core/perfmodel.recommend_disaggregation` predicts when this
+split beats the colocated engine (Eqs. 1-4 with Op1 = prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import COMPUTE, GroupedMesh, StreamChannel
+from repro.core.decouple import group_psum, select_by_role
+from repro.core.operators import (
+    cache_migration_op,
+    cache_stream_plan,
+    migrate_cache_into_slot,
+    pack_cache,
+)
+from repro.serve.engine import PrefillRunner, Request
+from repro.utils.compat import shard_map
+
+PREFILL = "prefill"
+
+
+# ---------------------------------------------------------------------------
+# host-level engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DisaggConfig:
+    n_prefill_rows: int = 2
+    decode_slots: int = 8
+    max_len: int = 512
+    eos_id: int = -1  # -1: never stop early
+    # scheduler granularity: prompt tokens one prefill row retires per
+    # tick (chunked prefill at the schedule level). 0 = whole prompt in
+    # a single tick.
+    prefill_chunk: int = 0
+
+
+class PrefillScheduler:
+    """Load-balanced admission of prompts to prefill rows.
+
+    Load = pending prompt tokens per row; a new request goes to the
+    least-loaded row, so Zipf-skewed prompt lengths (imbalance.py's
+    `skewed_partition` traffic) do not pile onto one row. Rows retire
+    `chunk` tokens of their head-of-queue prompt per tick.
+    """
+
+    def __init__(self, n_rows: int, chunk: int = 0):
+        self.n_rows = n_rows
+        self.chunk = chunk
+        self.rows: list[deque[Request]] = [deque() for _ in range(n_rows)]
+        self.remaining = [0] * n_rows  # tokens left on each row's head request
+
+    def load(self) -> list[int]:
+        out = []
+        for r in range(self.n_rows):
+            pending = sum(int(q.prompt.shape[0]) for q in self.rows[r])
+            # head request already has part of its work retired
+            head = self.rows[r][0] if self.rows[r] else None
+            if head is not None:
+                pending -= int(head.prompt.shape[0]) - self.remaining[r]
+            out.append(pending)
+        return out
+
+    def admit(self, req: Request) -> int:
+        loads = self.load()
+        row = int(np.argmin(loads))
+        if not self.rows[row]:
+            self.remaining[row] = int(req.prompt.shape[0])
+        self.rows[row].append(req)
+        return row
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.rows)
+
+    def tick(self) -> tuple[list[Request], list[int]]:
+        """Advance every row by one chunk; return (finished requests in
+        row order, prompt tokens retired per row this tick)."""
+        finished: list[Request] = []
+        work = [0] * self.n_rows
+        for r in range(self.n_rows):
+            if not self.rows[r]:
+                continue
+            step = self.remaining[r] if self.chunk <= 0 else min(
+                self.chunk, self.remaining[r]
+            )
+            self.remaining[r] -= step
+            work[r] = step
+            if self.remaining[r] <= 0:
+                finished.append(self.rows[r].popleft())
+                if self.rows[r]:
+                    self.remaining[r] = int(self.rows[r][0].prompt.shape[0])
+        return finished, work
+
+
+class DisaggEngine:
+    """Prefill group + decode group with a KV-handoff queue in between.
+
+    The engine tick mirrors `Engine.step` so the two are comparable on
+    the same tick clock: (1) prefill rows advance and finished prefills
+    enqueue their cache on the handoff channel, (2) the decode group
+    refills free slots from the channel at the step boundary, (3) one
+    decode step runs over the whole slot batch.
+    """
+
+    def __init__(self, model, params, cfg: DisaggConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: deque[Request] = deque()
+        self.sched = PrefillScheduler(cfg.n_prefill_rows, cfg.prefill_chunk)
+        self.handoff: deque[tuple[Request, dict, jax.Array]] = deque()
+        self.slots: list[Request | None] = [None] * cfg.decode_slots
+        self.finished: list[Request] = []
+        self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
+        self._decode = jax.jit(model.decode_step)
+        self._migrate = jax.jit(migrate_cache_into_slot)
+        self.cache = model.init_cache(cfg.decode_slots, cfg.max_len)
+        self.tokens = jnp.zeros((cfg.decode_slots, 1), jnp.int32)
+        self.last_logits = None
+        self.tick = 0
+        self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0, "handoffs": 0}
+        self.last_tick: dict = {}
+
+    def submit(self, req: Request) -> None:
+        req.submitted_tick = self.tick
+        self.queue.append(req)
+
+    def _prefill_tick(self) -> list[int]:
+        while self.queue:
+            self.sched.admit(self.queue.popleft())
+        finished, work = self.sched.tick()
+        for req in finished:
+            logits, cache1 = self._prefill(req.prompt)
+            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            self.handoff.append((req, cache1, first))
+            self.stats["prefills"] += 1
+        return work
+
+    def _refill_slots(self) -> int:
+        n = 0
+        for slot, occupant in enumerate(self.slots):
+            if occupant is not None or not self.handoff:
+                continue
+            req, cache1, first = self.handoff.popleft()
+            self.slots[slot] = req
+            self.cache = self._migrate(self.cache, cache1, slot)
+            self.tokens = self.tokens.at[slot, 0].set(first)
+            self.stats["handoffs"] += 1
+            n += 1
+        return n
+
+    def step(self) -> None:
+        work = self._prefill_tick()
+        handoffs = self._refill_slots()
+        self.tick += 1
+        self.last_tick = {
+            "prefill_tokens_per_row": work,
+            "handoffs": handoffs,
+            "decode_batch": sum(s is not None for s in self.slots),
+        }
+        if self.last_tick["decode_batch"] == 0:
+            return
+        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        self.last_logits = logits
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        next_np = np.asarray(next_tok)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(next_np[i])
+            if req.first_token_tick < 0:
+                req.first_token_tick = self.tick
+            req.out_tokens.append(tok)
+            self.stats["tokens_out"] += 1
+            if tok == self.cfg.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                req.done_tick = self.tick
+                self.finished.append(req)
+                self.slots[i] = None
+        self.tokens = next_tok[:, None]
+        self.stats["steps"] += 1
+
+    def idle(self) -> bool:
+        return (
+            not self.queue
+            and self.sched.pending() == 0
+            and not self.handoff
+            and all(s is None for s in self.slots)
+        )
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.idle():
+                return
+            self.step()
+
+    def workload_sample(self) -> dict:
+        return {
+            "active_slots": sum(s is not None for s in self.slots),
+            "queue_depth": len(self.queue) + self.sched.pending(),
+            "handoff_depth": len(self.handoff),
+            "tokens_out": self.stats["tokens_out"],
+        }
+
+
+# ---------------------------------------------------------------------------
+# SPMD step over a GroupedMesh (the paper's producer/consumer groups)
+# ---------------------------------------------------------------------------
+
+def serving_mesh(mesh, alpha: float, axis: str = "data") -> GroupedMesh:
+    """Partition `axis` into a decode (compute) group and a prefill
+    service group of alpha * rows."""
+    return GroupedMesh.build(mesh, axis=axis, services={PREFILL: alpha})
+
+
+def kv_handoff_channel(gmesh: GroupedMesh) -> StreamChannel:
+    """The prefill -> decode dataflow channel."""
+    return StreamChannel(gmesh=gmesh, producer=PREFILL, consumer=COMPUTE)
+
+
+def build_disagg_spmd_step(
+    model,
+    gmesh: GroupedMesh,
+    *,
+    max_prompt: int,
+    slots_per_row: int,
+    max_len: int,
+    chunk_elems: int = 4096,
+    decode_steps: int = 1,
+):
+    """One jitted disaggregated serving tick over the grouped mesh.
+
+    Per tick every prefill row takes (at most) one request — a
+    right-padded ``(max_prompt,)`` prompt plus its true length — and
+    every decode row exposes ``slots_per_row`` decode slots:
+
+      1. prefill rows run the length-masked batch-1 prefill and pack
+         the resulting per-request cache into granularity-S stream
+         elements (`pack_cache`);
+      2. the channel streams each wave to the decode group, where the
+         attached `cache_migration_op` re-assembles it and
+         `migrate_cache_into_slot` installs it in that wave's free slot
+         (`dst_slot`), zero-extended to ``max_len``;
+      3. decode rows take ``decode_steps`` greedy decode steps over
+         their slot batch; prefill rows hold their (dummy) state.
+
+    Returns ``(jitted_step, plan)``. The jitted step signature is
+    ``(params, prompts (R, max_prompt), plen (R,), dst_slot
+    (R, n_waves), cache, tokens (R*slots, 1)) -> (cache, tokens,
+    out_tokens (R*slots, decode_steps), stats (R, 2))`` where R is the
+    grouped-axis size, `cache` holds k/v over the global slot batch and
+    a per-row `pos`, and stats rows carry (handoffs, lockstep decode
+    slot-steps — slots * decode_steps per decode row, occupied or not)
+    summed over the decode group via `group_psum`.
+
+    Restricted to attention-family LMs: the length-masked prefill
+    cannot rewind an SSM recurrence past padding.
+    """
+    cfg = model.cfg
+    if getattr(cfg, "ssm_state", 0) or getattr(cfg, "hybrid", False) or (
+        getattr(cfg, "family", "") == "encdec"
+    ):
+        raise ValueError("disaggregated SPMD step needs an attention-only LM cache")
+    channel = kv_handoff_channel(gmesh)
+    mesh = gmesh.mesh
+    axis = gmesh.axis
+    cache_like = jax.eval_shape(lambda: model.init_cache(1, max_prompt))
+    plan = cache_stream_plan(cache_like, chunk_elems)
+    op = cache_migration_op(plan)
+    n_waves = channel.n_waves
+
+    def step(params, prompts, plen, dst_slot, cache, tokens):
+        # per-device views: prompts (1, max_prompt), plen (1,),
+        # dst_slot (1, n_waves), cache k/v (L, slots, max_len, d),
+        # cache pos (1,), tokens (slots, 1)
+        row_cache = {k: v for k, v in cache.items() if k != "pos"}
+        row_cache["pos"] = cache["pos"][0]
+
+        # -- 1. prefill rows produce (packed cache, first token, length)
+        def prefill_branch():
+            logits, c1, _ = model.prefill(params, prompts, length=plen[0])
+            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            return pack_cache(c1, plan), first, plen[0]
+
+        def idle_branch():
+            return (
+                jnp.zeros((plan.n_chunks, plan.chunk_elems), plan.dtype),
+                jnp.zeros((), jnp.int32),
+                jnp.zeros((), jnp.int32),
+            )
+
+        elems, first, length = select_by_role(
+            gmesh, {COMPUTE: idle_branch, PREFILL: prefill_branch}
+        )
+
+        # -- 2. stream each wave through the channel, migrating into a slot
+        is_cons = channel.is_member(COMPUTE)
+        cons_rank = channel.member_rank(COMPUTE)
+        handoffs = jnp.zeros((), jnp.int32)
+        for wave in range(n_waves):
+            perm = channel.wave_perm(wave)
+            if not perm:
+                continue
+            staged = channel.stream_fold(elems, op.apply, op.init(), waves=[wave])
+            first_arr = lax.ppermute(first, axis, perm)
+            len_arr = lax.ppermute(length, axis, perm)
+            slot = dst_slot[0, wave]
+            ok = is_cons & (cons_rank < len(perm)) & (slot >= 0) & (len_arr > 0)
+            src = plan.unpack(staged)
+            src["pos"] = len_arr
+            row_cache = migrate_cache_into_slot(
+                row_cache, src, jnp.maximum(slot, 0), ok=ok
+            )
+            lane = jnp.arange(tokens.shape[0]) == slot
+            tokens = jnp.where((ok & lane)[:, None], first_arr, tokens)
+            handoffs = handoffs + ok.astype(jnp.int32)
+
+        # -- 3. decode rows advance their slot batch
+        def decode_branch():
+            # decode_step mutates the cache dict it is handed; a branch
+            # must not mutate closure state (lax.switch traces both
+            # branches), so give it its own shallow copy.
+            c, toks, outs = dict(row_cache), tokens, []
+            for _ in range(decode_steps):
+                logits, c = model.decode_step(params, c, toks)
+                toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                outs.append(toks[:, 0])
+            return c, toks, jnp.stack(outs, axis=1)
+
+        def hold_branch():
+            zero = jnp.zeros((tokens.shape[0], decode_steps), jnp.int32)
+            return row_cache, tokens, zero
+
+        row_cache, tokens, out_toks = select_by_role(
+            gmesh, {COMPUTE: decode_branch, PREFILL: hold_branch}
+        )
+
+        # -- 4. decode-group analytics (handoffs, lockstep slot-steps;
+        # the host tracks per-request liveness, so this intentionally
+        # counts every slot of every decode row, occupied or not)
+        emitted = jnp.where(is_cons, tokens.shape[0] * decode_steps, 0)
+        stats = group_psum(
+            jnp.stack([handoffs, emitted.astype(jnp.int32)]), gmesh, COMPUTE
+        )
+
+        out_cache = {k: v for k, v in row_cache.items() if k != "pos"}
+        out_cache["pos"] = row_cache["pos"][None]
+        return out_cache, tokens, out_toks, stats[None]
+
+    cache_specs = {
+        "k": P(None, axis, None, None),
+        "v": P(None, axis, None, None),
+        "pos": P(axis),
+    }
+    in_specs = (
+        P(),  # params, replicated
+        P(axis, None),  # prompts
+        P(axis),  # plen
+        P(axis, None),  # dst_slot
+        cache_specs,
+        P(axis, None),  # tokens
+    )
+    out_specs = (cache_specs, P(axis, None), P(axis, None), P(axis, None))
+    jitted = jax.jit(shard_map(step, mesh, in_specs, out_specs))
+    return jitted, plan
+
+
+def init_disagg_state(model, gmesh: GroupedMesh, *, slots_per_row: int, max_len: int):
+    """Global (sharded-layout) cache + tokens for the SPMD step."""
+    rows = gmesh.axis_size
+    cache = model.init_cache(rows * slots_per_row, max_len)
+    cache["pos"] = jnp.zeros((rows,), jnp.int32)
+    tokens = jnp.zeros((rows * slots_per_row, 1), jnp.int32)
+    return cache, tokens

@@ -4,8 +4,16 @@ model zoo's prefill/decode interface.
 A fixed pool of B slots holds active requests; when a request finishes
 (EOS or max_tokens) its slot is refilled from the queue at the next
 step boundary. Decode steps are a single jitted call over the whole
-slot batch; prefill runs per incoming request batch (chunked prefill is
-exposed for the 32k shapes).
+slot batch. Admission runs a real batch-1 ``model.prefill`` per request
+and migrates the resulting KV cache into the free slot with the same
+``migrate_cache_into_slot`` operator the disaggregated engine streams
+through its channel — the colocated engine is the disaggregated one
+with a zero-length wire, which is what makes the two bit-for-bit
+comparable (tests/test_serve_disagg.py).
+
+This is the paper's *conventional* construction (every process performs
+every operation): a long prefill stalls every decode slot for the whole
+tick. `repro/serve/disagg.py` is the decoupled construction.
 
 The decoupled-analytics hook streams per-step serving stats (tokens/s,
 active slots, queue depth) through a `workload_stats` operator — the
@@ -15,11 +23,61 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.operators import migrate_cache_into_slot
+
+
+def prefill_bucket(n: int, minimum: int = 8) -> int:
+    """Round a prompt length up to a power-of-two bucket so admission
+    compiles O(log max_len) prefill programs instead of one per
+    distinct length. The length-masked prefill makes the padding
+    invisible (exact logits at n-1, zero KV beyond n)."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def supports_length_masked_prefill(cfg) -> bool:
+    """Attention-only LMs can prefill right-padded prompts exactly;
+    SSM/hybrid/enc-dec caches cannot rewind past padding."""
+    return not (
+        getattr(cfg, "ssm_state", 0)
+        or getattr(cfg, "hybrid", False)
+        or getattr(cfg, "family", "") == "encdec"
+    )
+
+
+class PrefillRunner:
+    """Jitted batch-1 prefill shared by both engines.
+
+    Attention-only LMs go through the power-of-two padded bucket with
+    the length-masked prefill (a constant number of compiled prefill
+    programs); other families compile per distinct prompt length.
+    """
+
+    def __init__(self, model, params, max_len: int | None = None):
+        self.params = params
+        self.max_len = max_len  # bucket cap: migrated KV must fit the slot cache
+        self._exact = jax.jit(lambda p, t: model.prefill(p, t)[:2])
+        self._masked = jax.jit(lambda p, t, n: model.prefill(p, t, length=n)[:2])
+        self._bucketed = supports_length_masked_prefill(model.cfg)
+
+    def __call__(self, prompt: np.ndarray) -> tuple:
+        """prompt (n,) int32 -> (last-token logits, per-request cache)."""
+        if not self._bucketed:
+            return self._exact(self.params, prompt[None, :])
+        n = int(prompt.shape[0])
+        b = prefill_bucket(n)
+        if self.max_len is not None:
+            b = min(b, self.max_len)
+        padded = np.zeros((1, b), prompt.dtype)
+        padded[0, :n] = prompt
+        return self._masked(self.params, padded, n)
 
 
 @dataclasses.dataclass
@@ -29,6 +87,10 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # tick-clock bookkeeping (time-to-first-token / drain analytics)
+    submitted_tick: int = -1
+    first_token_tick: int = -1
+    done_tick: int = -1
 
 
 @dataclasses.dataclass
@@ -45,15 +107,23 @@ class Engine:
         self.cfg = cfg
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * cfg.max_batch
+        self.finished: list[Request] = []
         self._decode = jax.jit(model.decode_step)
-        arch = model.cfg
+        self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
+        self._migrate = jax.jit(migrate_cache_into_slot)
         self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
         self.tokens = jnp.zeros((cfg.max_batch, 1), jnp.int32)
-        self.pos = np.zeros(cfg.max_batch, np.int64)
+        self.last_logits = None  # (B, 1, V) of the latest decode step
+        self.tick = 0
         self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0}
+        self.last_tick: dict = {"prefill_lens": [], "decode_batch": 0}
 
     def submit(self, req: Request) -> None:
+        req.submitted_tick = self.tick
         self.queue.append(req)
+
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
 
     # -- prefill one request into a free slot ------------------------------------
     def _admit(self) -> None:
@@ -62,39 +132,46 @@ class Engine:
             slot = free.pop(0)
             req = self.queue.popleft()
             self.slots[slot] = req
-            # single-request prefill: run decode_step over the prompt
-            # (keeps one compiled program; production would batch these)
-            for tok in req.prompt:
-                t = self.tokens.at[slot, 0].set(int(tok))
-                logits, self.cache = self._decode(self.params, self.cache, t)
-            self.tokens = self.tokens.at[slot, 0].set(
-                int(jnp.argmax(logits[slot, -1]))
-            )
+            # batch-1 prefill, then migrate the per-request cache into
+            # the slot (zero-extended to max_len)
+            logits, cache1 = self._prefill(req.prompt)
+            self.cache = self._migrate(self.cache, cache1, slot)
+            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            self.tokens = self.tokens.at[slot, 0].set(first)
             self.stats["prefills"] += 1
+            self.last_tick["prefill_lens"].append(int(req.prompt.shape[0]))
 
     def step(self) -> None:
         """One engine tick: admit, decode one token for every slot."""
+        self.last_tick = {"prefill_lens": [], "decode_batch": 0}
         self._admit()
+        self.tick += 1
         if all(s is None for s in self.slots):
             return
         logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        self.last_logits = logits
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         next_np = np.asarray(next_tok)
+        self.last_tick["decode_batch"] = sum(s is not None for s in self.slots)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             tok = int(next_np[i])
+            if req.first_token_tick < 0:
+                req.first_token_tick = self.tick
             req.out_tokens.append(tok)
             self.stats["tokens_out"] += 1
             if tok == self.cfg.eos_id or len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
+                req.done_tick = self.tick
+                self.finished.append(req)
                 self.slots[i] = None
         self.tokens = next_tok[:, None]
         self.stats["steps"] += 1
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.queue and all(s is None for s in self.slots):
+            if self.idle():
                 return
             self.step()
 

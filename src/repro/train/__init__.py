@@ -1,0 +1,1 @@
+"""Decoupled training: train step, optimizer, sharding, trainer."""

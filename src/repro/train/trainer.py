@@ -17,9 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import time
-from typing import Any, Callable
 
 import jax
 import numpy as np

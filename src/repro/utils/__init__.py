@@ -1,0 +1,1 @@
+"""Utilities: pytree/flat-buffer, HLO analysis, roofline, compat."""

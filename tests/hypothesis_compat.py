@@ -1,0 +1,81 @@
+"""Property-testing shim: use hypothesis when installed, else a tiny
+deterministic fallback.
+
+CI installs the real `hypothesis` via `pip install -e .[dev]`; minimal
+environments (no network) still collect and run every test — the
+fallback draws a fixed number of seeded pseudo-random examples per
+`@given` test, covering the same strategies the suite actually uses
+(integers, floats, lists, tuples, `.map`). It is NOT a general
+hypothesis replacement: no shrinking, no example database.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:  # pragma: no cover - exercised implicitly by which env runs
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _FALLBACK_EXAMPLES = 25
+
+    class _Strategy:
+        """A draw(rng) -> value sampler with hypothesis' .map combinator."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(**_kwargs):  # max_examples/deadline knobs are no-ops
+        return lambda fn: fn
+
+    def given(**named_strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for i in range(_FALLBACK_EXAMPLES):
+                    rng = np.random.default_rng(i)
+                    drawn = {k: s.draw(rng) for k, s in named_strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            kept = [p for n, p in sig.parameters.items() if n not in named_strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+
+        return decorate

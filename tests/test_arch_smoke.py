@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_NAMES, SHAPES, cells, get, get_smoke
+from repro.configs import ARCH_NAMES, cells, get, get_smoke
 from repro.models import build, synthetic_batch
 from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
 

@@ -1,7 +1,6 @@
 """Fault-tolerance: atomic commits, torn-write recovery, retention,
 async writer, restore-into-structure."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -3,9 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
-from repro.core.groups import GroupedMesh, GroupSpec, batch_rows_padding
+from repro.core.groups import GroupedMesh, batch_rows_padding
 from repro.core.imbalance import ImbalanceModel, skewed_partition
 from repro.core.stream import StreamChunker, granularity_from_bytes
 from repro.utils import treeutil

@@ -117,6 +117,64 @@ print("OK")
 """)
 
 
+def test_disagg_spmd_kv_handoff(multidevice):
+    """Disaggregated serving tick on the grouped mesh: prefill rows
+    stream their KV caches through the channel into decode slots, and
+    the decode rows' state matches a host-side replay bit-for-bit."""
+    multidevice("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke
+from repro.models import build
+from repro.utils.compat import make_mesh
+from repro.core.operators import migrate_cache_into_slot
+from repro.serve.disagg import (serving_mesh, build_disagg_spmd_step,
+                                init_disagg_state, kv_handoff_channel)
+
+cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+mesh = make_mesh((8,), ("data",))
+gm = serving_mesh(mesh, alpha=2/8)          # rows 6,7 prefill; 0..5 decode
+ch = kv_handoff_channel(gm)
+assert ch.n_waves == 1 and ch.wave_perm(0) == [(6, 0), (7, 1)]
+MAX_PROMPT, SLOTS, MAX_LEN, STEPS = 8, 2, 32, 2
+step, plan = build_disagg_spmd_step(model, gm, max_prompt=MAX_PROMPT,
+    slots_per_row=SLOTS, max_len=MAX_LEN, chunk_elems=1024, decode_steps=STEPS)
+cache, tokens = init_disagg_state(model, gm, slots_per_row=SLOTS, max_len=MAX_LEN)
+
+rng = np.random.default_rng(0)
+prompts = np.zeros((8, MAX_PROMPT), np.int32)
+plen = np.zeros((8,), np.int32)
+p6 = rng.integers(0, cfg.vocab_size, 3).astype(np.int32)
+p7 = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+prompts[6, :3] = p6; plen[6] = 3
+prompts[7, :5] = p7; plen[7] = 5
+dst = -np.ones((8, ch.n_waves), np.int32)
+dst[0, 0] = 0; dst[1, 0] = 1
+cache, tokens, out, stats = step(params, jnp.asarray(prompts), jnp.asarray(plen),
+                                 jnp.asarray(dst), cache, tokens)
+assert list(np.asarray(stats)[0]) == [2, 6 * SLOTS * STEPS], np.asarray(stats)[0]
+for row, prompt, slot in [(0, p6, 0), (1, p7, 1)]:
+    # host replay: exact-length prefill, local migration, STEPS decodes
+    logits, c1, _ = model.prefill(params, jnp.asarray(prompt)[None, :])
+    first = int(jnp.argmax(logits[0, -1]))
+    full = migrate_cache_into_slot(model.init_cache(SLOTS, MAX_LEN), c1, slot)
+    t = jnp.zeros((SLOTS, 1), jnp.int32).at[slot, 0].set(first)
+    toks = []
+    for _ in range(STEPS):
+        lg, full = model.decode_step(params, full, t)
+        t = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        toks.append(int(t[slot, 0]))
+    b = row * SLOTS + slot
+    assert list(np.asarray(out)[b]) == toks, (row, np.asarray(out)[b], toks)
+    np.testing.assert_array_equal(
+        np.asarray(cache["k"])[:, row * SLOTS:(row + 1) * SLOTS],
+        np.asarray(full["k"]))
+    assert int(np.asarray(cache["pos"])[row]) == int(full["pos"])
+print("OK")
+""")
+
+
 def test_trainer_crash_resume_and_elastic(multidevice):
     multidevice("""
 import shutil, jax, numpy as np

@@ -1,12 +1,12 @@
 """The paper's performance model (Eqs. 1-4) — limiting behaviour and
 properties from Sec. II-D."""
-import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core.perfmodel import (
     OperationTraits,
+    ServeWorkload,
     StreamCosts,
     WorkloadProfile,
     decoupling_criteria,
@@ -14,8 +14,13 @@ from repro.core.perfmodel import (
     memory_bytes,
     optimal_alpha,
     optimal_granularity,
+    prefill_traits,
+    recommend_disaggregation,
+    serve_speedup,
+    t_colocated_serve,
     t_conventional,
     t_decoupled,
+    t_disagg_serve,
     t_sigma,
 )
 
@@ -87,6 +92,79 @@ def test_criteria():
     traits = OperationTraits(complexity_grows_with_p=True, high_variance=True)
     hits = decoupling_criteria(traits)
     assert "complexity-grows-with-P" in hits and "high-variance" in hits
+
+
+# -- serving specialization (prefill/decode disaggregation) ---------------------
+
+SERVE = ServeWorkload(
+    prompt_tokens=2048.0,
+    decode_tokens=128.0,
+    t_prefill_token=2e-6,
+    t_decode_token=5e-4,
+    kv_bytes_per_token=4096.0,
+    prompt_cv=1.2,
+    slots=8.0,
+)
+SERVE_COSTS = StreamCosts(o_seconds=2e-6)
+
+
+def test_colocated_serve_pays_serial_prefill():
+    """Eq. 1 for serving: batch-1 prefill does not data-parallelize, so
+    the colocated fleet pays the whole slot batch's prefill serially."""
+    w = dataclasses_replace_serve(SERVE, prompt_cv=0.0)
+    serial_prefill = w.slots * w.prompt_tokens * w.t_prefill_token
+    decode = w.decode_tokens * w.t_decode_token
+    assert t_colocated_serve(w, 64) == pytest.approx(serial_prefill + decode)
+
+
+def test_disagg_wins_on_prefill_heavy_skewed_traffic():
+    plan = recommend_disaggregation(SERVE, 64, 64e3, SERVE_COSTS)
+    assert plan.disaggregate
+    assert plan.speedup > 1.0
+    assert 0 < plan.alpha < 1
+    assert "high-variance" in plan.criteria and "continuous-dataflow" in plan.criteria
+
+
+def test_colocated_wins_on_tiny_prompts():
+    """Near-zero prefill work: dedicating rows to it can only lose."""
+    w = dataclasses_replace_serve(
+        SERVE, prompt_tokens=1.0, prompt_cv=0.0, kv_bytes_per_token=64.0
+    )
+    plan = recommend_disaggregation(w, 64, 64e3, SERVE_COSTS)
+    assert plan.speedup < 1.0
+    assert not plan.disaggregate
+
+
+def test_disagg_serve_never_hides_prefill_itself():
+    """Both Eq. 2 and Eq. 4 are bounded below by the service side: the
+    prefill group's own work (slot batch spread over alpha*P rows) can
+    be overlapped with decode but never compressed."""
+    for alpha in (1 / 8, 1 / 4, 1 / 2):
+        n_service = round(alpha * 64)
+        service = SERVE.slots * SERVE.prompt_tokens * SERVE.t_prefill_token / n_service
+        for pessimistic in (False, True):
+            t = t_disagg_serve(SERVE, 64, alpha, 64e3, SERVE_COSTS, pessimistic)
+            assert t >= service - 1e-12
+
+
+def test_serve_speedup_grows_with_prompt_skew_share():
+    """Longer prompts (more decoupleable work + more skew) help disagg."""
+    w_short = dataclasses_replace_serve(SERVE, prompt_tokens=256.0)
+    s_short = serve_speedup(w_short, 64, 1 / 4, 64e3, SERVE_COSTS)
+    s_long = serve_speedup(SERVE, 64, 1 / 4, 64e3, SERVE_COSTS)
+    assert s_long > s_short
+
+
+def test_prefill_traits_gate_on_variance():
+    calm = dataclasses_replace_serve(SERVE, prompt_cv=0.0)
+    assert "high-variance" not in decoupling_criteria(prefill_traits(calm))
+    assert "high-variance" in decoupling_criteria(prefill_traits(SERVE))
+
+
+def dataclasses_replace_serve(w, **kw):
+    import dataclasses
+
+    return dataclasses.replace(w, **kw)
 
 
 @given(

@@ -1,5 +1,4 @@
 """Data pipeline determinism/skew + optimizer correctness."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

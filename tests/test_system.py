@@ -1,9 +1,7 @@
 """End-to-end behaviour: a short single-device training run must reduce
 the loss, and the quickstart example must run."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
