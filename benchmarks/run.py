@@ -1,15 +1,31 @@
 import os
+import sys
+
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 # 8 fake CPU devices for the measured app benchmarks (set before jax).
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_REPO, os.path.join(_REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+# self-sufficient invocation: `python benchmarks/run.py` from anywhere.
 
 """Benchmark harness: one module per paper figure + the roofline table.
 Prints ``name,us_per_call,derived`` CSV (see EXPERIMENTS.md for the
-interpretation and the measured-vs-model methodology)."""
-import sys
+interpretation and the measured-vs-model methodology).
+
+``--quick`` runs each module's ``run_quick`` (small configs, one rep)
+when it defines one — the CI smoke that keeps the drivers from rotting.
+"""
+import argparse
 import traceback
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--quick", action="store_true",
+                        help="small configs / single rep where supported")
+    args = parser.parse_args()
+
     from repro.utils.compat import make_mesh
 
     from benchmarks import (
@@ -18,6 +34,7 @@ def main() -> None:
         fig7_particle_comm,
         fig8_particle_io,
         fig9_disagg_serve,
+        fig10_pipeline,
         roofline_table,
     )
 
@@ -25,9 +42,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
-                fig9_disagg_serve, roofline_table):
+                fig9_disagg_serve, fig10_pipeline, roofline_table):
+        runner = mod.run
+        if args.quick and hasattr(mod, "run_quick"):
+            runner = mod.run_quick
         try:
-            for line in mod.run(mesh):
+            for line in runner(mesh):
                 print(line)
         except Exception:
             failures += 1

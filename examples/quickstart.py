@@ -14,23 +14,27 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import (
-    GroupedMesh,
+    ServiceGraph,
     finalize_workload_stats,
-    make_channel,
     workload_stats_op,
 )
+from repro.utils.compat import make_mesh, shard_map
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-    # 1) form the groups: 7 compute rows, 1 analytics row (alpha = 1/8)
-    gmesh = GroupedMesh.build(mesh, services={"analytics": 1 / 8})
-    print(gmesh.describe())
-    # 2) establish the channel (MPIStream_CreateChannel)
-    channel = make_channel(gmesh, "analytics")
+    mesh = make_mesh((8,), ("data",))
+    # 1) declare the topology: 7 compute rows, 1 analytics row
+    #    (alpha = 1/8) and the compute -> analytics channel, resolved
+    #    onto one GroupedMesh (MPIStream_CreateChannel)
+    graph = ServiceGraph.build(
+        mesh, stages={"analytics": 1 / 8}, edges=[("compute", "analytics")]
+    )
+    print(graph.describe())
+    # 2) fetch the declared channel
+    channel = graph.channel("compute", "analytics")
     # 3) define the operator attached to the stream (MPIStream_Attach)
     op = workload_stats_op(max_samples=64)
 
@@ -43,9 +47,8 @@ def main():
         stats = channel.stream_fold(elements, op.apply, op.init())
         return local[None], stats[0][None], stats[1][None]
 
-    sm = jax.shard_map(
-        per_row, mesh=mesh, in_specs=P("data"),
-        out_specs=(P("data"), P("data"), P("data")), check_vma=False,
+    sm = shard_map(
+        per_row, mesh, P("data"), (P("data"), P("data"), P("data"))
     )
     rng = np.random.default_rng(0)
     # imbalanced workloads (the reason the paper decouples the analysis)

@@ -35,7 +35,8 @@ def main():
     import shutil
 
     import jax
-    from jax.sharding import AxisType
+
+    from repro.utils.compat import make_mesh
 
     from repro.configs.base import ArchConfig
     from repro.data.pipeline import DataConfig, Pipeline
@@ -54,7 +55,7 @@ def main():
     n_params = cfg.param_count()
     print(f"model: {n_params/1e6:.1f}M params, mode={args.mode}")
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     pipe = Pipeline(DataConfig(
         vocab_size=args.vocab, seq_len=args.seq, global_batch=args.batch,
         kind="zipf", skew=0.4,  # imbalanced docs: what decoupling absorbs

@@ -28,7 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import GroupedMesh, make_channel
+from repro.core import GroupedMesh, ServiceGraph
+from repro.core.dataflow import COMPUTE
+from repro.utils.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,8 +174,11 @@ def run_cg(mesh, cfg: CGCfg, alpha: float = 0.125):
 
     n_rows = mesh.shape["data"]
     if cfg.mode == "decoupled":
-        gmesh = GroupedMesh.build(mesh, services={"halo": alpha})
-        channel = make_channel(gmesh, "halo")
+        graph = ServiceGraph.build(
+            mesh, stages={"halo": alpha}, edges=[(COMPUTE, "halo")]
+        )
+        gmesh = graph.gmesh
+        channel = graph.channel(COMPUTE, "halo")
         work_rows = gmesh.compute.size
     else:
         gmesh = GroupedMesh.trivial(mesh)
@@ -199,10 +204,8 @@ def run_cg(mesh, cfg: CGCfg, alpha: float = 0.125):
         u, res, hist = cg_solve(b_local[0], cfg, gmesh, channel)
         return u[None], res[None], hist[None]
 
-    sm = jax.shard_map(
-        per_row, mesh=mesh,
-        in_specs=P("data"), out_specs=(P("data"), P("data"), P("data")),
-        check_vma=False,
+    sm = shard_map(
+        per_row, mesh, P("data"), (P("data"), P("data"), P("data"))
     )
     u, res, hist = jax.jit(sm)(rhs)
     return np.asarray(u), float(np.asarray(res)[0]), np.asarray(hist)[0]

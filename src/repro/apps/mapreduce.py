@@ -5,14 +5,26 @@ MPI_Iallgatherv + MPI_Ireduce): every row maps its documents to a local
 histogram, then a global all-reduce combines them — the reduce
 operation's complexity grows with P.
 
-Decoupled implementation (paper: map group + reduce group + master):
-map rows stream (key, count) elements of granularity S as they are
-produced; reducer rows fold `histogram_op` on arrival; a small
-intra-group aggregation (the "master" step) completes the reduction.
-Map and reduce progress in pipeline; reducer complexity is O(alpha*P).
+Decoupled implementations (paper: map group + reduce group + master)
+are built on a `ServiceGraph`:
 
-Both run under `shard_map` over the grouped data axis and must produce
-identical histograms (tests/test_apps_mapreduce.py).
+  decoupled   two groups, one edge (compute -> reduce). Map rows stream
+              (key, count) elements of granularity S as they are
+              produced; reducer rows fold `histogram_op` on arrival; a
+              small intra-group aggregation (the "master" step)
+              completes the reduction.
+  pipelined   a CHAIN of groups (compute -> reduce -> ... -> io,
+              paper Fig. 3c). Each intermediate stage forwards its
+              per-wave histogram *delta* onward while the upstream
+              stage produces the next wave, so every channel of the
+              chain has an element in flight at once; the sink stage
+              accumulates the grand total (the master aggregation moves
+              to the sink) and can drain it to host storage via the
+              decoupled I/O group (io/iogroup.py).
+
+All variants run under `shard_map` over the grouped data axis and must
+produce bit-identical histograms: counts are integer-valued float32, so
+every summation order is exact (tests/test_dataflow.py).
 """
 from __future__ import annotations
 
@@ -22,9 +34,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GroupedMesh, make_channel
+from repro.core import GroupedMesh, ServiceGraph, Stage, delta_emitter, sink_sum_stage
+from repro.core.dataflow import COMPUTE
 from repro.core.decouple import group_psum
 from repro.core.imbalance import skewed_partition
+from repro.utils.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +93,32 @@ def _local_histogram(tokens, mask, vocab: int) -> jax.Array:
     return jnp.zeros((vocab,), jnp.float32).at[flat].add(m)
 
 
+def _pack_word_elements(tokens, mask, granularity_words: int):
+    """Flatten one row's documents into [keys|counts] stream elements."""
+    flat = tokens.reshape(-1)
+    m = mask.reshape(-1)
+    n = flat.shape[0]
+    s = min(granularity_words, n)
+    n_chunks = -(-n // s)
+    pad = n_chunks * s - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad), constant_values=-1)
+        m = jnp.pad(m, (0, pad))
+    keys = jnp.where(m > 0, flat, -1).reshape(n_chunks, s).astype(jnp.float32)
+    counts = m.reshape(n_chunks, s)
+    return jnp.concatenate([keys, counts], axis=1), s  # (n_chunks, 2S)
+
+
+def _hist_operator(vocab: int, s: int):
+    def hist_op(acc, elem, k):
+        kk = elem[:s].astype(jnp.int32)
+        cc = elem[s:]
+        valid = kk >= 0
+        return acc.at[jnp.clip(kk, 0, vocab - 1)].add(jnp.where(valid, cc, 0.0))
+
+    return hist_op
+
+
 # -- reference: all rows map AND reduce (coupled) -------------------------------
 
 def reference_wordcount(tokens, mask, vocab: int, gmesh: GroupedMesh) -> jax.Array:
@@ -93,53 +133,105 @@ def decoupled_wordcount(
     tokens,  # (docs, words) local slice; service rows receive padding
     mask,
     vocab: int,
-    gmesh: GroupedMesh,
+    graph: ServiceGraph,
     granularity_words: int = 256,
 ) -> jax.Array:
     """Per-device code. Map rows stream [keys|counts] elements per S
     words; reducer rows fold histograms on the fly (first available
     element — no waiting on a specific map peer), then the intra-group
     psum completes the reduction (the paper's master aggregation)."""
-    channel = make_channel(gmesh, "reduce")
-    flat = tokens.reshape(-1)
-    m = mask.reshape(-1)
-    n = flat.shape[0]
-    s = min(granularity_words, n)
-    n_chunks = -(-n // s)
-    pad = n_chunks * s - n
-    if pad:
-        flat = jnp.pad(flat, (0, pad), constant_values=-1)
-        m = jnp.pad(m, (0, pad))
-    keys = jnp.where(m > 0, flat, -1).reshape(n_chunks, s).astype(jnp.float32)
-    counts = m.reshape(n_chunks, s)
-    elements = jnp.concatenate([keys, counts], axis=1)  # (n_chunks, 2S)
-
-    def hist_op(acc, elem, k):
-        kk = elem[:s].astype(jnp.int32)
-        cc = elem[s:]
-        valid = kk >= 0
-        return acc.at[jnp.clip(kk, 0, vocab - 1)].add(jnp.where(valid, cc, 0.0))
-
-    partial = channel.stream_fold(elements, hist_op, jnp.zeros((vocab,), jnp.float32))
-    total = group_psum(partial, gmesh, "reduce")
+    channel = graph.channel(COMPUTE, "reduce")
+    elements, s = _pack_word_elements(tokens, mask, granularity_words)
+    partial = channel.stream_fold(
+        elements, _hist_operator(vocab, s), jnp.zeros((vocab,), jnp.float32)
+    )
+    total = group_psum(partial, graph.gmesh, "reduce")
     # return the result to every row (so callers can verify anywhere)
     return channel.broadcast_from_consumer(total)
 
 
+# -- pipelined: a chain of service groups (paper Fig. 3c) ------------------------
+
+def pipelined_wordcount(
+    tokens,
+    mask,
+    vocab: int,
+    graph: ServiceGraph,
+    chain: tuple[str, ...],
+    granularity_words: int = 256,
+) -> jax.Array:
+    """Per-device code for a chained graph compute -> chain[0] -> ... ->
+    chain[-1]. The head stage folds word histograms per wave; each
+    following stage consumes the previous stage's per-wave delta while
+    the upstream stage produces its next wave (`ServiceGraph.run`'s
+    skewed schedule). The sink's intra-group psum (master aggregation)
+    completes the grand total, returned to every row bit-exactly.
+    """
+    elements, s = _pack_word_elements(tokens, mask, granularity_words)
+    zero_hist = jnp.zeros((vocab,), jnp.float32)
+    stages = [
+        Stage(
+            src=COMPUTE,
+            dst=chain[0],
+            operator=_hist_operator(vocab, s),
+            init=zero_hist,
+            elements=elements,
+            emit=delta_emitter(zero_hist) if len(chain) > 1 else None,
+        )
+    ]
+    for i in range(1, len(chain)):
+        relay = sink_sum_stage(chain[i - 1], chain[i], vocab)
+        if i < len(chain) - 1:
+            relay = dataclasses.replace(relay, emit=delta_emitter(relay.init))
+        stages.append(relay)
+    accs = graph.run_chain(stages)
+    total = group_psum(accs[-1], graph.gmesh, chain[-1])
+    return graph.broadcast_from(chain[-1], total)
+
+
+def wordcount_graph(
+    mesh, mode: str, alpha: float, chain_alphas: dict[str, float] | None = None
+) -> tuple[ServiceGraph | None, GroupedMesh, tuple[str, ...]]:
+    """Resolve the ServiceGraph for one wordcount mode.
+
+    Returns (graph, gmesh, chain); graph is None for the reference mode.
+    ``chain_alphas`` names the downstream stages of the pipelined mode
+    in chain order (default: one io sink of alpha/2).
+    """
+    if mode == "reference":
+        gmesh = GroupedMesh.trivial(mesh)
+        return None, gmesh, ()
+    if mode == "decoupled":
+        graph = ServiceGraph.build(
+            mesh, stages={"reduce": alpha}, edges=[(COMPUTE, "reduce")]
+        )
+        return graph, graph.gmesh, ("reduce",)
+    if mode == "pipelined":
+        downstream = dict(chain_alphas or {"io": alpha / 2})
+        chain = ("reduce", *downstream)
+        stages = {"reduce": alpha, **downstream}
+        edges = [(COMPUTE, "reduce")] + [
+            (chain[i - 1], chain[i]) for i in range(1, len(chain))
+        ]
+        graph = ServiceGraph.build(mesh, stages=stages, edges=edges)
+        return graph, graph.gmesh, chain
+    raise ValueError(mode)
+
+
 def run_wordcount(mesh, mode: str, corpus_cfg: CorpusCfg, alpha: float = 0.25,
-                  granularity_words: int = 256):
-    """Host-level driver: builds the grouped mesh, lays out the corpus
-    (map workload on compute rows only in decoupled mode — same total
-    work, paper Sec. IV-A), runs one histogram pass."""
+                  granularity_words: int = 256,
+                  chain_alphas: dict[str, float] | None = None):
+    """Host-level driver: builds the service graph, lays out the corpus
+    (map workload on compute rows only in decoupled modes — same total
+    work, paper Sec. IV-A), runs one histogram pass.
+
+    mode: "reference" | "decoupled" | "pipelined" (chained groups).
+    """
     from jax.sharding import PartitionSpec as P
 
     n_rows = mesh.shape["data"]
-    if mode == "decoupled":
-        gmesh = GroupedMesh.build(mesh, services={"reduce": alpha})
-        work_rows = gmesh.compute.size
-    else:
-        gmesh = GroupedMesh.trivial(mesh)
-        work_rows = n_rows
+    graph, gmesh, chain = wordcount_graph(mesh, mode, alpha, chain_alphas)
+    work_rows = gmesh.compute.size
     cfg = corpus_cfg
     total_docs = cfg.n_docs_per_row * n_rows
     all_tokens, all_mask = make_corpus(cfg, total_docs)
@@ -147,16 +239,19 @@ def run_wordcount(mesh, mode: str, corpus_cfg: CorpusCfg, alpha: float = 0.25,
 
     if mode == "reference":
         fn = lambda t, mk: reference_wordcount(t, mk, cfg.vocab, gmesh)
-    else:
+    elif mode == "decoupled":
         fn = lambda t, mk: decoupled_wordcount(
-            t, mk, cfg.vocab, gmesh, granularity_words
+            t, mk, cfg.vocab, graph, granularity_words
         )
-    sm = jax.shard_map(
+    else:
+        fn = lambda t, mk: pipelined_wordcount(
+            t, mk, cfg.vocab, graph, chain, granularity_words
+        )
+    sm = shard_map(
         lambda t, mk: fn(t[0], mk[0])[None],  # strip/re-add the row dim
-        mesh=mesh,
-        in_specs=(P("data"), P("data")),
-        out_specs=P("data"),
-        check_vma=False,
+        mesh,
+        (P("data"), P("data")),
+        P("data"),
     )
     hist_rows = jax.jit(sm)(tokens, mask)  # (rows, vocab): identical rows
     return np.asarray(hist_rows[0]), (tokens, mask)

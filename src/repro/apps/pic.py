@@ -20,8 +20,12 @@ Particle I/O variants (paper Fig. 8):
   decoupled   rows stream particles to the I/O group which buffers
               aggressively and drains to storage off the critical path.
 
-The GEM-challenge particle skew (paper: current-sheet concentration) is
-modelled with `skewed_partition`.
+With ``io_alpha > 0`` the app declares BOTH services on one
+`ServiceGraph` — a comm group and an io group sharing the mesh
+(compute -> comm for exiting particles, compute -> io for the particle
+trace) — the paper's multi-group layout with two concurrent decoupled
+operations. The GEM-challenge particle skew (paper: current-sheet
+concentration) is modelled with `skewed_partition`.
 """
 from __future__ import annotations
 
@@ -32,8 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import GroupedMesh, make_channel
+from repro.core import GroupedMesh, ServiceGraph, StreamChunker, buffer_op
+from repro.core.dataflow import COMPUTE
 from repro.core.imbalance import skewed_partition
+from repro.utils.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,10 +140,10 @@ def comm_reference(x, v, valid, gmesh: GroupedMesh, width: float, n_rows_active:
 
 # -- decoupled: stream to comm group, bucket, deliver in one hop -----------------------
 
-def comm_decoupled(x, v, valid, gmesh: GroupedMesh, width: float):
+def comm_decoupled(x, v, valid, graph: ServiceGraph, width: float):
     """Exiting particles stream to the comm group; it buckets by
     destination and delivers each bucket directly (<= 2 hops/particle)."""
-    channel = make_channel(gmesh, "comm")
+    gmesh = graph.gmesh
     comp = list(gmesh.rows_of("comm"))
     comm_row = comp[0]
     compute_rows = list(gmesh.rows_of("compute"))
@@ -182,16 +188,46 @@ def comm_decoupled(x, v, valid, gmesh: GroupedMesh, width: float):
     return x, v, valid
 
 
+# -- concurrent particle-trace I/O service -----------------------------------------------
+
+def io_trace_stream(x, v, valid, graph: ServiceGraph, io_state, chunker, op):
+    """Stream this step's particle trace (x, v, validity) from compute
+    rows to the io group's ring buffer — the second concurrent service.
+
+    Runs alongside the comm service on the same mesh: the io fold's
+    waves interleave with the next push in program order, keeping the
+    host drain (io/iogroup.py) entirely off the compute rows' critical
+    path.
+    """
+    elements = chunker.pack({"x": x, "v": v, "m": valid})
+    return graph.channel(COMPUTE, "io").stream_fold(elements, op.apply, io_state)
+
+
+def pic_graph(mesh, mode: str, alpha: float, io_alpha: float) -> ServiceGraph | None:
+    """Resolve the service topology for one PIC mode (None = reference)."""
+    if mode != "decoupled":
+        return None
+    stages, edges = {"comm": alpha}, [(COMPUTE, "comm")]
+    if io_alpha > 0:
+        stages["io"] = io_alpha
+        edges.append((COMPUTE, "io"))
+    return ServiceGraph.build(mesh, stages=stages, edges=edges)
+
+
 # -- drivers ----------------------------------------------------------------------------
 
-def run_pic(mesh, mode: str, cfg: PICCfg, alpha: float = 0.125):
+def run_pic(mesh, mode: str, cfg: PICCfg, alpha: float = 0.125,
+            io_alpha: float = 0.0, io_capacity_chunks: int = 256):
+    """Run the mini-app. mode "decoupled" forms the comm service group;
+    ``io_alpha > 0`` additionally runs the particle-io service on the
+    SAME mesh (two cooperating groups, one ServiceGraph). Returns
+    (x, v, valid, per-step counts[, io chunk count per row])."""
     from jax.sharding import PartitionSpec as P
 
     n_rows = mesh.shape["data"]
-    if mode == "decoupled":
-        gmesh = GroupedMesh.build(mesh, services={"comm": alpha})
-    else:
-        gmesh = GroupedMesh.trivial(mesh)
+    graph = pic_graph(mesh, mode, alpha, io_alpha)
+    gmesh = graph.gmesh if graph is not None else GroupedMesh.trivial(mesh)
+    with_io = graph is not None and gmesh.has("io")
     work_rows = gmesh.compute.size
     xs, vs, valid = init_particles(cfg, work_rows)
     pad = n_rows - work_rows
@@ -200,29 +236,40 @@ def run_pic(mesh, mode: str, cfg: PICCfg, alpha: float = 0.125):
         vs = jnp.concatenate([vs, jnp.zeros((pad, cfg.capacity), jnp.float32)])
         valid = jnp.concatenate([valid, jnp.zeros((pad, cfg.capacity), jnp.float32)])
     width = cfg.domain / work_rows
+    if with_io:
+        chunker = StreamChunker.plan(
+            {"x": xs[0], "v": vs[0], "m": valid[0]}, chunk_elems=cfg.capacity
+        )
+        io_op = buffer_op(io_capacity_chunks, chunker.chunk_elems)
 
     def per_row(x, v, m):
         x, v, m = x[0], v[0], m[0]
 
         def step(state, _):
-            x, v, m = state
+            (x, v, m), io_state = state
             x, v = _push(x, v, m, cfg.dt, cfg.domain)
-            if mode == "decoupled":
-                x, v, m = comm_decoupled(x, v, m, gmesh, width)
+            if graph is not None:
+                x, v, m = comm_decoupled(x, v, m, graph, width)
+                if with_io:
+                    io_state = io_trace_stream(x, v, m, graph, io_state, chunker, io_op)
             else:
                 x, v, m = comm_reference(x, v, m, gmesh, width, work_rows)
-            return (x, v, m), jnp.sum(m)
+            return ((x, v, m), io_state), jnp.sum(m)
 
-        (x, v, m), counts = lax.scan(step, (x, v, m), None, length=cfg.n_steps)
-        return x[None], v[None], m[None], counts[None]
+        init = ((x, v, m), io_op.init() if with_io else ())
+        ((x, v, m), io_state), counts = lax.scan(step, init, None, length=cfg.n_steps)
+        io_chunks = io_state[1] if with_io else jnp.zeros((), jnp.int32)
+        return x[None], v[None], m[None], counts[None], io_chunks[None]
 
-    sm = jax.shard_map(
-        per_row, mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
-        out_specs=(P("data"), P("data"), P("data"), P("data")),
-        check_vma=False,
+    sm = shard_map(
+        per_row, mesh, (P("data"), P("data"), P("data")),
+        (P("data"), P("data"), P("data"), P("data"), P("data")),
     )
-    x, v, m, counts = jax.jit(sm)(xs, vs, valid)
-    return np.asarray(x), np.asarray(v), np.asarray(m), np.asarray(counts)
+    x, v, m, counts, io_chunks = jax.jit(sm)(xs, vs, valid)
+    out = (np.asarray(x), np.asarray(v), np.asarray(m), np.asarray(counts))
+    if with_io:
+        return out + (np.asarray(io_chunks),)
+    return out
 
 
 def histogram_positions(x, m, bins: int, domain: float):

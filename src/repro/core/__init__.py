@@ -4,12 +4,14 @@ Public surface:
   GroupedMesh, GroupSpec           (groups.py)   — operation-to-group mapping
   StreamChunker                    (stream.py)   — granularity-S elements
   StreamChannel, make_channel      (channel.py)  — group-to-group dataflow
+  ServiceGraph, Stage              (dataflow.py) — multi-group pipelined graphs
   StreamOperator + operators       (operators.py)
   group_psum / stream_reduce / ... (decouple.py) — decoupled collectives
   WorkloadProfile, t_decoupled ... (perfmodel.py)— Eqs. 1-4
   ImbalanceModel, skewed_partition (imbalance.py)
 """
 from repro.core.channel import StreamChannel, make_channel
+from repro.core.dataflow import ServiceGraph, Stage, delta_emitter, sink_sum_stage
 from repro.core.decouple import (
     conventional_allreduce,
     group_all_gather,
@@ -38,24 +40,30 @@ from repro.core.operators import (
     workload_stats_op,
 )
 from repro.core.perfmodel import (
+    AllocationPlan,
     DisaggPlan,
     OperationTraits,
     ServeWorkload,
+    StageWorkload,
     StreamCosts,
     WorkloadProfile,
+    chain_speedup,
     decoupling_criteria,
     default_beta,
     memory_bytes,
     optimal_alpha,
     optimal_granularity,
     prefill_traits,
+    recommend_allocation,
     recommend_decoupling,
     recommend_disaggregation,
     serve_speedup,
     speedup,
     t_colocated_serve,
     t_conventional,
+    t_conventional_chain,
     t_decoupled,
+    t_decoupled_chain,
     t_disagg_serve,
     t_sigma,
 )
@@ -63,12 +71,16 @@ from repro.core.stream import StreamChunker, granularity_from_bytes
 
 __all__ = [
     "COMPUTE",
+    "AllocationPlan",
     "DisaggPlan",
     "GroupSpec",
     "GroupedMesh",
     "ImbalanceModel",
     "OperationTraits",
     "ServeWorkload",
+    "ServiceGraph",
+    "Stage",
+    "StageWorkload",
     "StreamChannel",
     "StreamChunker",
     "StreamCosts",
@@ -78,9 +90,11 @@ __all__ = [
     "buffer_op",
     "cache_migration_op",
     "cache_stream_plan",
+    "chain_speedup",
     "conventional_allreduce",
     "decoupling_criteria",
     "default_beta",
+    "delta_emitter",
     "finalize_workload_stats",
     "granularity_from_bytes",
     "group_all_gather",
@@ -96,11 +110,13 @@ __all__ = [
     "pack_cache",
     "pack_kv",
     "prefill_traits",
+    "recommend_allocation",
     "recommend_decoupling",
     "recommend_disaggregation",
     "role_index",
     "select_by_role",
     "serve_speedup",
+    "sink_sum_stage",
     "skewed_partition",
     "speedup",
     "strip_cache_pos",
@@ -109,7 +125,9 @@ __all__ = [
     "sum_op",
     "t_colocated_serve",
     "t_conventional",
+    "t_conventional_chain",
     "t_decoupled",
+    "t_decoupled_chain",
     "t_disagg_serve",
     "t_sigma",
     "workload_stats_op",

@@ -38,6 +38,24 @@ from repro.core.groups import COMPUTE, GroupedMesh
 Operator = Callable[[Any, jax.Array, jax.Array], Any]  # (acc, element, k) -> acc
 
 
+def broadcast_from_row(gmesh: GroupedMesh, src_row: int, value: Any) -> Any:
+    """Exact broadcast of one row's pytree to every row of the axis.
+
+    Only ``src_row`` contributes to a masked psum, so every leaf keeps
+    its dtype and exact bits (integer ids, f64 accumulators and bf16
+    payloads all survive; bool goes through int32 and back).
+    """
+    is_src = lax.axis_index(gmesh.axis) == src_row
+
+    def one(x):
+        as_int = x.dtype == jnp.bool_
+        y = x.astype(jnp.int32) if as_int else x
+        out = lax.psum(jnp.where(is_src, y, jnp.zeros_like(y)), gmesh.axis)
+        return out.astype(x.dtype) if as_int else out
+
+    return jax.tree.map(one, value)
+
+
 @dataclasses.dataclass(frozen=True)
 class StreamChannel:
     """A directed channel ``producer -> consumer`` over ``gmesh.axis``."""
@@ -126,14 +144,9 @@ class StreamChannel:
             perm = self.wave_perm(wave)
             if not perm:
                 continue
-            n_pairs = len(perm)
             # does this consumer row receive during this wave?
-            receives = is_cons & (cons_rank < n_pairs)
-            # the producer rank active on this row this wave
-            my_rank = self.member_rank(self.producer)
-            active = self.is_member(self.producer) & (
-                my_rank // max(self.n_consumers, 1) == wave
-            )
+            # (producers need no masking: ppermute ignores non-sources)
+            receives = is_cons & (cons_rank < len(perm))
 
             # stream the producer's valid-count alongside (prefix exchange)
             sent_count = lax.ppermute(count, axis, perm)
@@ -149,7 +162,6 @@ class StreamChannel:
                 return acc, None
 
             acc, _ = lax.scan(body, acc, jnp.arange(n_chunks))
-            del active  # producers need no masking: ppermute ignores non-sources
         return acc
 
     def stream_fold_tree(
@@ -199,18 +211,14 @@ class StreamChannel:
     def broadcast_from_consumer(self, value: Any) -> Any:
         """Broadcast consumer-row result to every row of the axis.
 
-        Implemented as a masked psum over the axis: rows outside the
-        consumer group contribute zeros. For R consumer rows holding
-        *identical* values, the result is scaled back by 1/R.
+        Consumer rows hold *identical* values by contract, so only the
+        group's first row contributes to a masked psum over the axis —
+        every leaf keeps its dtype and exact bits (the old float32
+        round-trip with a 1/R rescale did not).
         """
-        is_cons = self.is_member(self.consumer)
-        scale = 1.0 / max(self.n_consumers, 1)
-
-        def one(x):
-            contrib = jnp.where(is_cons, x.astype(jnp.float32), 0.0)
-            return (lax.psum(contrib, self.gmesh.axis) * scale).astype(x.dtype)
-
-        return jax.tree.map(one, value)
+        return broadcast_from_row(
+            self.gmesh, self.gmesh.group(self.consumer).start, value
+        )
 
     def scatter_back(self, value: Any, *, wave_of_target: int = 0) -> Any:
         """Reverse-direction transfer: consumer rows send to the
@@ -224,4 +232,12 @@ class StreamChannel:
 def make_channel(
     gmesh: GroupedMesh, consumer: str, producer: str = COMPUTE
 ) -> StreamChannel:
+    """One ad-hoc channel on a bare `GroupedMesh`.
+
+    Migration note: new code should declare its topology once with
+    `repro.core.dataflow.ServiceGraph` (stages + edges on one mesh) and
+    obtain channels via ``graph.channel(src, dst)``; this one-liner is
+    kept as a thin wrapper for single-channel constructions and older
+    call sites.
+    """
     return StreamChannel(gmesh=gmesh, producer=producer, consumer=consumer)

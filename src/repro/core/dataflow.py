@@ -1,0 +1,273 @@
+"""ServiceGraph: the paper's multi-group dataflow paradigm (Sec. II-C, Fig. 3c)
+as a first-class runtime.
+
+The paper's central claim is not one decoupled operation but a *dataflow
+processing paradigm among groups*: several operations (reduce, particle
+communication, halo exchange, I/O) each mapped to its own process group,
+with stream channels chaining the groups so that downstream groups
+consume element ``k`` while upstream groups produce element ``k+1``.
+Until now every app in this repo hand-built a single-service
+`GroupedMesh` and wired one ad-hoc `StreamChannel`; a `ServiceGraph`
+declares the whole topology once —
+
+    graph = ServiceGraph.build(
+        mesh,
+        stages={"reduce": 1 / 8, "io": 1 / 8},
+        edges=[("compute", "reduce"), ("reduce", "io")],
+    )
+
+— resolves it onto ONE `GroupedMesh` (one row-partition of the mesh
+axis hosting every service), hands out the declared channels, and runs
+a software-pipelined SPMD schedule over arbitrary chains of stages.
+
+Pipelined schedule
+------------------
+`run()` executes one or more *chains* of `Stage`s inside a single
+traced step. The head stage of a chain drains its channel one wave at
+a time (the `waves=` hook of `StreamChannel.stream_fold`); after wave
+``k`` folds on the stage's consumer group, the stage's ``emit``
+callback produces the element forwarded on the next edge. The
+scheduler skews stages by one wave: at tick ``t`` the head produces
+wave ``t`` while stage ``i`` consumes emission ``t - i``. In program
+order the upstream collective for wave ``k+1`` is issued *before* the
+downstream fold of wave ``k``; the two touch different channels, so
+XLA's latency-hiding scheduler overlaps them — the paper's inter-group
+pipelining under the lockstep-SPMD caveat of DESIGN.md §2.
+
+Multiple chains passed to one `run()` call are interleaved tick by
+tick, which is how an application runs *concurrent* services (e.g. the
+PIC app's particle-comm and particle-io groups) on one mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import Operator, StreamChannel, broadcast_from_row
+from repro.core.groups import COMPUTE, GroupedMesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One hop of a dataflow chain: a declared edge plus the operator
+    folded on the destination group as elements arrive.
+
+    ``elements`` (with optional per-producer ``count``) feeds the HEAD
+    stage of a chain: a ``(n_chunks, S)`` producer-local buffer.
+    Downstream stages receive their elements from the previous stage's
+    ``emit(acc, k)`` — called on the (SPMD-replicated) trace after wave
+    ``k`` folds, returning the ``(S_next,)`` element forwarded on this
+    stage's outgoing edge. Only the values on the stage's consumer rows
+    are meaningful; the channel never reads other rows.
+    """
+
+    src: str
+    dst: str
+    operator: Operator
+    init: Any
+    elements: jax.Array | None = None  # head stage only
+    count: jax.Array | None = None  # head stage only
+    emit: Callable[[Any, int], jax.Array] | None = None  # non-tail stages
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceGraph:
+    """Named service stages + directed channels, resolved on one mesh.
+
+    ``gmesh`` hosts every stage as a row-range of the partitioned axis
+    (compute keeps the head rows); ``edges`` are the declared channels.
+    Any (src, dst) pair of groups may be connected — compute→reduce→io,
+    compute→comm plus compute→io, etc.
+    """
+
+    gmesh: GroupedMesh
+    edges: tuple[tuple[str, str], ...]
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def build(
+        mesh,
+        *,
+        stages: Mapping[str, float],
+        edges: Sequence[tuple[str, str]],
+        axis: str = "data",
+        min_compute_rows: int = 1,
+    ) -> "ServiceGraph":
+        """Resolve fractional per-stage alphas onto one `GroupedMesh`
+        and validate the declared edges against the resulting groups."""
+        gmesh = GroupedMesh.build(
+            mesh, axis=axis, services=dict(stages), min_compute_rows=min_compute_rows
+        )
+        return ServiceGraph.from_grouped(gmesh, edges)
+
+    @staticmethod
+    def from_grouped(
+        gmesh: GroupedMesh, edges: Sequence[tuple[str, str]]
+    ) -> "ServiceGraph":
+        """Adopt an existing `GroupedMesh` (migration path for code that
+        still builds its own) and declare the channels on it."""
+        seen = set()
+        for src, dst in edges:
+            if src == dst:
+                raise ValueError(f"self-edge {src!r} -> {dst!r}")
+            for name in (src, dst):
+                if not gmesh.has(name):
+                    raise KeyError(
+                        f"edge ({src!r}, {dst!r}) references unknown group {name!r}; "
+                        f"mesh has {[g.name for g in gmesh.groups]}"
+                    )
+            if (src, dst) in seen:
+                raise ValueError(f"duplicate edge {src!r} -> {dst!r}")
+            seen.add((src, dst))
+        return ServiceGraph(gmesh=gmesh, edges=tuple((s, d) for s, d in edges))
+
+    # -- queries ----------------------------------------------------------
+    def has_edge(self, src: str, dst: str) -> bool:
+        return (src, dst) in self.edges
+
+    def channel(self, src: str, dst: str) -> StreamChannel:
+        """The `StreamChannel` for a declared edge."""
+        if not self.has_edge(src, dst):
+            raise KeyError(f"edge ({src!r}, {dst!r}) not declared; have {self.edges}")
+        return StreamChannel(gmesh=self.gmesh, producer=src, consumer=dst)
+
+    @property
+    def alphas(self) -> dict[str, float]:
+        """Realized per-stage alpha vector (Eq. 2 generalized)."""
+        return {g.name: self.gmesh.alpha(g.name) for g in self.gmesh.service_groups}
+
+    def describe(self) -> str:
+        arrows = ", ".join(f"{s}->{d}" for s, d in self.edges)
+        return f"ServiceGraph({self.gmesh.describe()}, edges=[{arrows}])"
+
+    # -- per-device helpers (inside shard_map) -----------------------------
+    def broadcast_from(self, group: str, value: Any) -> Any:
+        """Exact broadcast of ``group``'s (replicated) result to every
+        row of the axis: only the group's first row contributes to a
+        masked psum, so any dtype survives bit-for-bit."""
+        return broadcast_from_row(self.gmesh, self.gmesh.group(group).start, value)
+
+    # -- the pipelined executor (per-device code inside shard_map) ---------
+    def run_chain(self, stages: Sequence[Stage]) -> list[Any]:
+        """Pipeline one chain of stages; returns per-stage folded accs."""
+        return self.run([stages])[0]
+
+    def run(self, chains: Sequence[Sequence[Stage]]) -> list[list[Any]]:
+        """Run chains of stages under the software-pipelined schedule.
+
+        Returns, per chain, the list of folded operator states (each
+        valid on its stage's consumer rows). All chains advance
+        together: tick ``t`` issues, for every chain, the head stage's
+        wave ``t`` and then stage ``i``'s fold of emission ``t - i`` —
+        so every in-flight wave of every channel interleaves in one
+        SPMD program.
+        """
+        plans = [self._plan_chain(list(chain)) for chain in chains]
+        n_ticks = max(
+            (p["n_waves"] + len(p["stages"]) - 1) for p in plans
+        ) if plans else 0
+        for t in range(n_ticks):
+            for plan in plans:
+                self._tick_chain(plan, t)
+        return [p["accs"] for p in plans]
+
+    def _plan_chain(self, stages: list[Stage]) -> dict:
+        if not stages:
+            raise ValueError("empty chain")
+        for i, st in enumerate(stages):
+            if not self.has_edge(st.src, st.dst):
+                raise KeyError(f"stage {i}: edge ({st.src!r}, {st.dst!r}) not declared")
+            if i == 0:
+                if st.elements is None:
+                    raise ValueError("head stage needs producer-local `elements`")
+            else:
+                if st.elements is not None:
+                    raise ValueError(f"stage {i}: only the head stage takes `elements`")
+                if stages[i - 1].dst != st.src:
+                    raise ValueError(
+                        f"broken chain: stage {i - 1} ends at {stages[i - 1].dst!r} "
+                        f"but stage {i} starts at {st.src!r}"
+                    )
+            if i < len(stages) - 1 and st.emit is None:
+                raise ValueError(f"stage {i}: non-tail stages need an `emit` hook")
+        channels = [self.channel(st.src, st.dst) for st in stages]
+        return {
+            "stages": stages,
+            "channels": channels,
+            "accs": [st.init for st in stages],
+            "n_waves": channels[0].n_waves,
+            # emissions[i][k]: element forwarded to stage i for head wave k
+            "emissions": {i: {} for i in range(1, len(stages))},
+        }
+
+    def _tick_chain(self, plan: dict, t: int) -> None:
+        stages: list[Stage] = plan["stages"]
+        channels: list[StreamChannel] = plan["channels"]
+        for i, (stage, ch) in enumerate(zip(stages, channels)):
+            k = t - i  # the head-wave index this stage handles at tick t
+            if not 0 <= k < plan["n_waves"]:
+                continue
+            if i == 0:
+                plan["accs"][0] = ch.stream_fold(
+                    stage.elements,
+                    stage.operator,
+                    plan["accs"][0],
+                    count=stage.count,
+                    waves=[k],
+                )
+            else:
+                elem = plan["emissions"][i].pop(k)
+                # single-emission fold: drain every wave of this edge for
+                # element k, re-indexing the operator's stream step to k
+                op = stage.operator
+                plan["accs"][i] = ch.stream_fold(
+                    elem[None, :],
+                    lambda acc, e, _j, _op=op, _k=k: _op(acc, e, jnp.int32(_k)),
+                    plan["accs"][i],
+                )
+            if i < len(stages) - 1:
+                plan["emissions"][i + 1][k] = stage.emit(plan["accs"][i], k)
+
+
+def delta_emitter(init: Any) -> Callable[[Any, int], Any]:
+    """An ``emit`` hook forwarding per-wave *deltas* of an additive acc.
+
+    For additive operators (sums, histograms) the emissions of every
+    wave sum to the stage's final state, so a downstream stage folding
+    ``acc + element`` reconstructs the total while consuming wave ``k``
+    as the upstream stage produces wave ``k+1``. Exact for
+    integer-valued float payloads (counts, histograms).
+
+    The emitter carries trace-local state (the previous acc): build a
+    fresh one per `run()`/`run_chain()` invocation.
+    """
+    prev = {"acc": init}
+
+    def emit(acc, k):
+        delta = jax.tree.map(lambda a, p: a - p, acc, prev["acc"])
+        prev["acc"] = acc
+        return delta
+
+    return emit
+
+
+def sink_sum_stage(src: str, dst: str, width: int, dtype=jnp.float32) -> Stage:
+    """A sink stage accumulating forwarded ``(width,)`` elements by sum."""
+    return Stage(
+        src=src,
+        dst=dst,
+        operator=lambda acc, elem, k: acc + elem.astype(dtype),
+        init=jnp.zeros((width,), dtype),
+    )
+
+
+__all__ = [
+    "COMPUTE",
+    "ServiceGraph",
+    "Stage",
+    "delta_emitter",
+    "sink_sum_stage",
+]

@@ -10,6 +10,11 @@ service group.
 to the decoupled operation; here it resolves to an integer number of
 rows of the partitioned axis (>= 1 when requested > 0).
 
+A mesh may host SEVERAL cooperating service groups at once (tail rows,
+declaration order); multi-group topologies with channels between them
+are declared through ``repro.core.dataflow.ServiceGraph``, which builds
+one ``GroupedMesh`` from a per-stage alpha vector.
+
 Example
 -------
 >>> gm = GroupedMesh.build(mesh, axis="data",
@@ -149,30 +154,6 @@ class GroupedMesh:
     def subgroup_only(self, name: str) -> list[list[int]]:
         """Partition where `name`'s rows form one group, all others singletons."""
         return self.axis_index_groups(name)
-
-    def producer_consumer_perm(
-        self, producer: str, consumer: str, shift: int = 0
-    ) -> list[tuple[int, int]]:
-        """A partial permutation pairing producer rows to consumer rows.
-
-        Producer row ``p_i`` sends to consumer row ``c_{(i+shift) % R}``.
-        When producers outnumber consumers only ``R`` producers send per
-        call; the stream layer cycles ``shift`` over scan steps so every
-        producer row is drained round-robin — the SPMD analogue of the
-        paper's first-come-first-served consumption.
-        """
-        prod = list(self.rows_of(producer))
-        cons = list(self.rows_of(consumer))
-        if not prod or not cons:
-            return []
-        r = len(cons)
-        pairs = []
-        # choose up to r distinct producers this round, rotating by shift
-        for j in range(min(r, len(prod))):
-            src = prod[(shift + j) % len(prod)]
-            dst = cons[j % r]
-            pairs.append((src, dst))
-        return pairs
 
     def role_mask(self, name: str) -> np.ndarray:
         """Boolean per-row mask (host-side) for group membership."""

@@ -16,12 +16,19 @@ Sec. II-E. The model is used three ways:
      multi-device runs and evaluate the model at P = 32..8192 to compare
      against the paper's Cray XC40 speedups;
   3. the trainer uses `optimal_alpha` to auto-size service groups.
+
+Chained multi-stage graphs (`ServiceGraph`) generalize the single
+alpha to a per-stage alpha vector: `t_decoupled_chain` (Eq. 4') models
+a pipeline of decoupled stages whose service side is the SLOWEST
+stage, and `recommend_allocation` jointly assigns rows to every stage
+under a fixed row budget.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +165,154 @@ def optimal_granularity(
             best = (s, t)
     assert best is not None
     return best
+
+
+# -- multi-stage generalization: per-stage alpha vector (ServiceGraph) ----------
+#
+# Eqs. 1-4 model ONE decoupled operation. A `ServiceGraph` chains
+# several (compute -> reduce -> io, ...), each with its own alpha; the
+# generalization keeps Eq. 4's structure:
+#
+#   T_c  = T_W0 + T_sigma + sum_i T_Wi                         (Eq. 1')
+#   T_d  = beta * [ T_W0/(1-sum_i alpha_i) + T_sigma
+#                   + sum_i (D_i/S)*o ]
+#          + max_i T'_Wi/alpha_i                               (Eq. 4')
+#
+# The service side is a MAX, not a sum: chained stages pipeline (stage
+# i+1 consumes wave k while stage i produces wave k+1), so the chain's
+# steady-state cost is its slowest stage. With one stage Eq. 4' is
+# exactly Eq. 4 (pinned by tests/test_perfmodel.py). The compute side
+# pays every stage's injection overhead: each (D_i/S)*o term is the
+# paper's per-element cost on the producer group of edge i.
+
+
+@dataclasses.dataclass(frozen=True)
+class StageWorkload:
+    """One decoupled stage of a chained application.
+
+    ``t_op`` is the stage's per-process time in the coupled baseline
+    (its share of Eq. 1); ``d_bytes`` the dataflow streamed into the
+    stage; ``t_prime`` its complexity when run by a group of n_i rows
+    (receives (t_op_total, P, n_i); default: perfectly divisible).
+    """
+
+    name: str
+    t_op: float
+    d_bytes: float
+    t_prime: Callable[[float, int, int], float] | None = None
+
+    def service_time(self, n_procs: int, n_rows: int) -> float:
+        if self.t_prime is not None:
+            return self.t_prime(self.t_op * n_procs, n_procs, n_rows)
+        return self.t_op * n_procs / max(n_rows, 1)
+
+
+def t_conventional_chain(
+    t_w0: float, stages: Sequence[StageWorkload], sigma: float, n_procs: int
+) -> float:
+    """Eq. 1 generalized: every process performs every operation."""
+    return t_w0 + t_sigma(sigma, n_procs) + sum(s.t_op for s in stages)
+
+
+def t_decoupled_chain(
+    t_w0: float,
+    stages: Sequence[StageWorkload],
+    sigma: float,
+    n_procs: int,
+    rows: Mapping[str, int],
+    s_bytes: float,
+    costs: StreamCosts,
+    pessimistic_max: bool = False,
+) -> float:
+    """Eq. 4 generalized to a per-stage row vector ``rows``.
+
+    ``rows[name]`` is the integer row count of each stage's group; the
+    compute group keeps the rest. Reduces exactly to `t_decoupled` for
+    a single stage."""
+    if not stages:
+        raise ValueError("no stages")
+    for s in stages:
+        if rows.get(s.name, 0) < 1:
+            raise ValueError(f"stage {s.name!r} needs >= 1 row")
+    n_service = sum(rows[s.name] for s in stages)
+    n_compute = n_procs - n_service
+    if n_compute < 1:
+        raise ValueError("no compute processes left")
+    compute_side = (
+        t_w0 * n_procs / n_compute
+        + t_sigma(sigma, n_compute)
+        + sum((s.d_bytes / max(s_bytes, 1.0)) * costs.o_seconds for s in stages)
+    )
+    service_side = max(s.service_time(n_procs, rows[s.name]) for s in stages)
+    if pessimistic_max:
+        return max(compute_side, service_side)  # Eq. 2'
+    beta_fn = costs.beta or default_beta
+    d_total = sum(s.d_bytes for s in stages)
+    beta = beta_fn(s_bytes, d_total)
+    return beta * compute_side + service_side  # Eq. 4'
+
+
+def chain_speedup(
+    t_w0: float,
+    stages: Sequence[StageWorkload],
+    sigma: float,
+    n_procs: int,
+    rows: Mapping[str, int],
+    s_bytes: float,
+    costs: StreamCosts,
+) -> float:
+    return t_conventional_chain(t_w0, stages, sigma, n_procs) / t_decoupled_chain(
+        t_w0, stages, sigma, n_procs, rows, s_bytes, costs
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationPlan:
+    """Output of recommend_allocation: a joint per-stage row assignment."""
+
+    rows: dict[str, int]
+    alphas: dict[str, float]
+    t: float
+    speedup: float
+
+
+def recommend_allocation(
+    t_w0: float,
+    stages: Sequence[StageWorkload],
+    sigma: float,
+    n_procs: int,
+    s_bytes: float,
+    costs: StreamCosts,
+    row_budget: int,
+) -> AllocationPlan:
+    """Joint alpha assignment under a fixed row budget.
+
+    Exhaustively searches integer row vectors (>= 1 row per stage,
+    total <= row_budget < P) minimizing Eq. 4' — the planner behind
+    `ServiceGraph` sizing, generalizing `optimal_alpha`'s grid search
+    to several cooperating stages."""
+    k = len(stages)
+    if k == 0:
+        raise ValueError("no stages")
+    budget = min(row_budget, n_procs - 1)
+    if budget < k:
+        raise ValueError(f"row budget {row_budget} < {k} stages")
+    best: tuple[dict[str, int], float] | None = None
+    for combo in itertools.product(range(1, budget - k + 2), repeat=k):
+        if sum(combo) > budget:
+            continue
+        rows = {s.name: r for s, r in zip(stages, combo)}
+        t = t_decoupled_chain(t_w0, stages, sigma, n_procs, rows, s_bytes, costs)
+        if best is None or t < best[1]:
+            best = (rows, t)
+    assert best is not None
+    rows, t = best
+    return AllocationPlan(
+        rows=rows,
+        alphas={name: r / n_procs for name, r in rows.items()},
+        t=t,
+        speedup=t_conventional_chain(t_w0, stages, sigma, n_procs) / t,
+    )
 
 
 # -- serving specialization: prefill/decode disaggregation ----------------------

@@ -1,5 +1,5 @@
 """Decoupled I/O group: the paper's particle-I/O pattern (Sec. IV-D2)
-as a reusable primitive.
+as a reusable `ServiceGraph` sink stage.
 
 Compute rows stream state chunks to the io service rows; the io rows
 accumulate them in a device-side ring buffer (`buffer_op` — the paper's
@@ -7,6 +7,15 @@ accumulate them in a device-side ring buffer (`buffer_op` — the paper's
 `jax.experimental.io_callback` OFF the compute rows' critical path:
 only the io rows execute a host round-trip, and only when the buffer
 fills.
+
+The io group is no longer a bespoke channel owner: callers declare it
+as one stage of a `ServiceGraph` (``edges=[... , (src, "io")]``) and
+either chain it behind other services (`io_sink_stage` is a tail stage
+for `ServiceGraph.run_chain` that ring-buffers each upstream emission
+of e.g. a compute -> reduce -> io graph for the host drain;
+tests/test_dataflow.py) or stream to it directly
+(`stream_to_io_group`). A bare `GroupedMesh` is still accepted for
+migration and wrapped in a single-edge graph.
 """
 from __future__ import annotations
 
@@ -17,8 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import io_callback
 
-from repro.core import GroupedMesh, StreamChunker, make_channel
+from repro.core import GroupedMesh, ServiceGraph, Stage, StreamChunker
+from repro.core.dataflow import COMPUTE
 from repro.core.operators import buffer_op
+
+IO = "io"
 
 
 class HostSink:
@@ -38,11 +50,46 @@ class HostSink:
         return np.zeros((), np.int32)
 
 
+def _as_graph(graph: ServiceGraph | GroupedMesh, src: str) -> ServiceGraph:
+    """Accept a ServiceGraph with a declared (src, io) edge, or wrap a
+    bare GroupedMesh (migration path) into a single-edge graph."""
+    if isinstance(graph, GroupedMesh):
+        return ServiceGraph.from_grouped(graph, [(src, IO)])
+    return graph
+
+
+def io_sink_stage(
+    src: str, *, granularity_elems: int, capacity_chunks: int = 64
+) -> Stage:
+    """An io sink `Stage` for `ServiceGraph.run_chain`: upstream stages
+    emit ``(granularity_elems,)`` elements; the io rows append each into
+    the ring buffer. The folded state is `buffer_op` state
+    ``(buffer, count)`` — pass it to `drain_to_sink` after the step."""
+    op = buffer_op(capacity_chunks, granularity_elems)
+    return Stage(src=src, dst=IO, operator=op.apply, init=op.init())
+
+
+def drain_to_sink(graph: ServiceGraph | GroupedMesh, sink: HostSink, buf, count):
+    """Drain a `buffer_op` state to `sink` via io_callback on io rows
+    only (other rows contribute a zeroed no-op drain)."""
+    g = _as_graph(graph, COMPUTE)
+    is_io = jax.lax.axis_index(g.gmesh.axis) >= g.gmesh.group(IO).start
+    is_io &= jax.lax.axis_index(g.gmesh.axis) < g.gmesh.group(IO).stop
+    return io_callback(
+        sink.drain,
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jnp.where(is_io, 1.0, 0.0)[..., None, None] * buf,
+        jnp.where(is_io, count, 0),
+        ordered=True,
+    )
+
+
 def stream_to_io_group(
     tree,
-    gmesh: GroupedMesh,
+    graph: ServiceGraph | GroupedMesh,
     sink: HostSink,
     *,
+    src: str = COMPUTE,
     granularity_elems: int = 8192,
     capacity_chunks: int = 64,
 ):
@@ -50,21 +97,11 @@ def stream_to_io_group(
     the io rows, buffer there, and drain to `sink` via io_callback.
 
     Returns the number of chunks written (on io rows)."""
-    channel = make_channel(gmesh, "io")
+    g = _as_graph(graph, src)
+    channel = g.channel(src, IO)
     chunker = StreamChunker.plan(tree, granularity_elems)
     elements = chunker.pack(tree)
     op = buffer_op(capacity_chunks, chunker.chunk_elems)
     buf, count = channel.stream_fold(elements, op.apply, op.init())
-
-    is_io = channel.is_member("io")
-
-    def maybe_drain(buf, count, flag):
-        # only io rows carry a meaningful buffer; others pass zeros
-        return io_callback(
-            sink.drain, jax.ShapeDtypeStruct((), jnp.int32),
-            jnp.where(flag, 1.0, 0.0)[..., None, None] * buf, count,
-            ordered=True,
-        )
-
-    _ = maybe_drain(buf, jnp.where(is_io, count, 0), is_io)
+    _ = drain_to_sink(g, sink, buf, count)
     return count

@@ -15,7 +15,12 @@ Three selectable modes (``--decouple``):
                  broadcasts the reduced gradient back. Service rows skip
                  fwd/bwd at runtime via role-gated cond. Implemented with
                  partial-auto shard_map: manual over (pod, data), GSPMD
-                 over model.
+                 over model. With ``analytics_alpha > 0`` the topology is
+                 a CHAIN (compute -> reduce -> analytics on one
+                 `ServiceGraph`): the reducer streams the reduced
+                 gradient onward to an analytics/logging service that
+                 computes gradient statistics (norm, abs-max) off the
+                 optimizer's critical path and feeds them into metrics.
 
   overlap        beyond-paper hillclimb: all devices compute; ZeRO-1
                  sharding constraints turn the gradient all-reduce into
@@ -33,10 +38,15 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import GroupedMesh, make_channel
+from repro.core import ServiceGraph
+from repro.core.dataflow import COMPUTE
 from repro.core.decouple import group_psum
 from repro.train import grad_compress, sharding
 from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+from repro.utils.compat import partial_shard_map
+
+REDUCE = "reduce"
+ANALYTICS = "analytics"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,10 +116,21 @@ def build_overlap_step(model, opt_cfg: OptConfig, mesh, params_like, data_axes):
     return step
 
 
+def train_service_graph(mesh, ts_cfg: TrainStepConfig, axis: str = "data") -> ServiceGraph:
+    """The decoupled train topology: compute -> reduce, chained onward
+    to an analytics service when ``analytics_alpha > 0`` (Fig. 3c)."""
+    stages = {REDUCE: ts_cfg.reduce_alpha}
+    edges = [(COMPUTE, REDUCE)]
+    if ts_cfg.analytics_alpha > 0:
+        stages[ANALYTICS] = ts_cfg.analytics_alpha
+        edges.append((REDUCE, ANALYTICS))
+    return ServiceGraph.build(mesh, stages=stages, edges=edges, axis=axis)
+
+
 def build_decoupled_step(
     model,
     opt_cfg: OptConfig,
-    gmesh: GroupedMesh,
+    graph: ServiceGraph,
     ts_cfg: TrainStepConfig,
     manual_axes: tuple[str, ...],
 ):
@@ -119,7 +140,8 @@ def build_decoupled_step(
     multi-pod mesh; streams flow over `gmesh.axis` ("data") within each
     pod, and reducer partial results psum over "pod".
     """
-    channel = make_channel(gmesh, "reduce")
+    gmesh = graph.gmesh
+    channel = graph.channel(COMPUTE, REDUCE)
     pods = [a for a in manual_axes if a != gmesh.axis]
     use_int8 = ts_cfg.compress == "int8"
 
@@ -171,13 +193,35 @@ def build_decoupled_step(
         else:
             acc = channel.stream_fold_tree(grads)
         # master aggregation within the service group (cheap: alpha*P rows)
-        acc = group_psum(acc, gmesh, "reduce")
+        acc = group_psum(acc, gmesh, REDUCE)
         for pod_axis in pods:
             acc = jax.tree.map(lambda x: lax.psum(x, pod_axis), acc)
         # token-count normalization (global mean over real tokens)
         total_cnt = lax.psum(cnt, gmesh.axis)
         for pod_axis in pods:
             total_cnt = lax.psum(total_cnt, pod_axis)
+        # ---- chained stage: reducer streams the reduced grads onward to the
+        # analytics service (paper Fig. 3c inter-group pipelining); the
+        # grad-statistics reductions leave the optimizer's critical path
+        grad_stats = None
+        if graph.has_edge(REDUCE, ANALYTICS):
+            a_channel = graph.channel(REDUCE, ANALYTICS)
+            arrived = a_channel.stream_fold_tree(
+                acc,
+                acc_init=jax.tree.map(jnp.zeros_like, acc),
+                # reduce rows hold identical post-psum grads: overwrite, not sum
+                combine=lambda a, new, ok: jax.tree.map(
+                    lambda x, y: jnp.where(ok, y, x), a, new
+                ),
+            )
+            leaves = jax.tree.leaves(arrived)
+            gn2 = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+            gmax = jnp.max(
+                jnp.stack([jnp.max(jnp.abs(l)) for l in leaves])
+            ).astype(jnp.float32)
+            grad_stats = graph.broadcast_from(
+                ANALYTICS, jnp.stack([jnp.sqrt(gn2), gmax])
+            )
         # broadcast the reduced gradient back to every row
         reduced = channel.broadcast_from_consumer(acc)
         reduced = jax.tree.map(lambda x: x / jnp.maximum(total_cnt, 1.0), reduced)
@@ -192,6 +236,11 @@ def build_decoupled_step(
         for pod_axis in pods:
             n_compute = lax.psum(n_compute, pod_axis)
         out_metrics = {"loss": loss_tot / jnp.maximum(total_cnt, 1.0)}
+        if grad_stats is not None:
+            # statistics of the token-normalized gradient, computed on
+            # the analytics group and broadcast into the metrics
+            out_metrics["grad_norm"] = grad_stats[0] / jnp.maximum(total_cnt, 1.0)
+            out_metrics["grad_absmax"] = grad_stats[1] / jnp.maximum(total_cnt, 1.0)
         for k, v in metrics.items():
             vv = lax.psum(jnp.where(is_compute, v, 0.0), gmesh.axis)
             for pod_axis in pods:
@@ -252,22 +301,19 @@ def make_jitted_step(
     elif ts_cfg.mode == "overlap":
         step = build_overlap_step(model, opt_cfg, mesh, params_like, data_axes)
     elif ts_cfg.mode == "decoupled":
-        gmesh = GroupedMesh.build(
-            mesh, axis="data", services={"reduce": ts_cfg.reduce_alpha}
-        )
-        inner = build_decoupled_step(model, opt_cfg, gmesh, ts_cfg, data_axes)
+        graph = train_service_graph(mesh, ts_cfg)
+        inner = build_decoupled_step(model, opt_cfg, graph, ts_cfg, data_axes)
         # manual over the data axes; model stays GSPMD-auto
         manual_batch = {
             k: P(*((batch_axes,) + (None,) * (len(batch_like[k].shape) - 1)))
             for k in batch_like
         }
-        step = jax.shard_map(
+        step = partial_shard_map(
             inner,
-            mesh=mesh,
-            in_specs=(P(), P(), manual_batch),
-            out_specs=(P(), P(), P()),
-            axis_names=set(data_axes),
-            check_vma=False,
+            mesh,
+            (P(), P(), manual_batch),
+            (P(), P(), P()),
+            data_axes,
         )
     else:
         raise ValueError(ts_cfg.mode)

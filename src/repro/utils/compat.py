@@ -24,6 +24,31 @@ def shard_map(f, mesh, in_specs, out_specs):
     )
 
 
+def partial_shard_map(f, mesh, in_specs, out_specs, manual_axes):
+    """Partial-auto shard_map: manual over ``manual_axes``, GSPMD-auto
+    over the rest (the decoupled train step's model axis)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis_names=set(manual_axes),
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        auto=auto,
+        check_rep=False,
+    )
+
+
 def make_mesh(axis_shapes, axis_names):
     """jax.make_mesh with Auto axis types when the API supports them."""
     axis_type = getattr(jax.sharding, "AxisType", None)

@@ -65,12 +65,106 @@ def test_group_partition_property(rows, frac):
         cursor = grp.stop
 
 
-def test_producer_consumer_perm_partial_permutation():
+def test_wave_perm_partial_permutation():
+    from repro.core import StreamChannel
+
     g = gm(8, reduce=0.25)
-    pairs = g.producer_consumer_perm("compute", "reduce", shift=0)
-    srcs = [s for s, _ in pairs]
-    dsts = [d for _, d in pairs]
-    assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+    ch = StreamChannel(gmesh=g, producer="compute", consumer="reduce")
+    assert ch.n_waves == 3  # 6 producers over 2 consumers
+    seen_srcs = []
+    for wave in range(ch.n_waves):
+        pairs = ch.wave_perm(wave)
+        srcs = [s for s, _ in pairs]
+        dsts = [d for _, d in pairs]
+        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+        assert set(dsts) <= set(g.rows_of("reduce"))
+        seen_srcs += srcs
+    assert sorted(seen_srcs) == list(g.rows_of("compute"))  # every producer drained
+
+
+# -- multi-service meshes ----------------------------------------------------------
+
+def test_multi_service_rounding_and_tail_layout():
+    g = gm(16, reduce=1 / 8, analytics=0.001, io=1 / 4)
+    # rounding: 1/8 of 16 -> 2 rows; tiny positive alpha -> floor of 1 row
+    assert g.group("reduce").size == 2
+    assert g.group("analytics").size == 1
+    assert g.group("io").size == 4
+    assert g.compute.size == 16 - 7
+    # tail rows in declaration order, contiguous
+    assert list(g.rows_of("reduce")) == [9, 10]
+    assert list(g.rows_of("analytics")) == [11]
+    assert list(g.rows_of("io")) == [12, 13, 14, 15]
+    assert [grp.name for grp in g.service_groups] == ["reduce", "analytics", "io"]
+
+
+def test_multi_service_no_room_raises():
+    with pytest.raises(ValueError):
+        gm(8, a=0.5, b=0.25, c=0.25)
+
+
+@given(rows=st.integers(4, 64), f1=st.floats(0.01, 0.3), f2=st.floats(0.01, 0.3))
+@settings(max_examples=60, deadline=None)
+def test_multi_service_axis_index_groups_full_partition(rows, f1, f2):
+    try:
+        g = gm(rows, svc_a=f1, svc_b=f2)
+    except ValueError:
+        return
+    for wanted in (("svc_a",), ("svc_b",), ("svc_a", "svc_b"), ()):
+        groups = g.axis_index_groups(*wanted)
+        flat = sorted(r for grp in groups for r in grp)
+        assert flat == list(range(rows))  # XLA needs a full partition
+
+
+# -- ServiceGraph construction -----------------------------------------------------
+
+def sg(rows, stages, edges):
+    from repro.core import ServiceGraph
+
+    return ServiceGraph.build(FakeMesh(rows), stages=stages, edges=edges)
+
+
+def test_servicegraph_build_and_channels():
+    g = sg(8, {"reduce": 0.25, "io": 0.125}, [("compute", "reduce"), ("reduce", "io")])
+    assert g.has_edge("compute", "reduce") and g.has_edge("reduce", "io")
+    assert not g.has_edge("compute", "io")
+    ch = g.channel("reduce", "io")
+    assert ch.producer == "reduce" and ch.consumer == "io"
+    assert ch.n_producers == 2 and ch.n_consumers == 1
+    assert g.alphas == {"reduce": 0.25, "io": 0.125}
+    assert "reduce->io" in g.describe()
+
+
+def test_servicegraph_rejects_bad_edges():
+    from repro.core import ServiceGraph
+
+    with pytest.raises(KeyError):
+        sg(8, {"reduce": 0.25}, [("compute", "oops")])
+    with pytest.raises(ValueError):
+        sg(8, {"reduce": 0.25}, [("reduce", "reduce")])
+    with pytest.raises(ValueError):
+        sg(8, {"reduce": 0.25}, [("compute", "reduce"), ("compute", "reduce")])
+    g = sg(8, {"reduce": 0.25}, [("compute", "reduce")])
+    with pytest.raises(KeyError):
+        g.channel("reduce", "compute")  # reverse edge was not declared
+    # adopting an existing mesh (migration path) validates the same way
+    gmesh = gm(8, io=0.25)
+    graph = ServiceGraph.from_grouped(gmesh, [("compute", "io")])
+    assert graph.channel("compute", "io").n_consumers == 2
+    with pytest.raises(KeyError):
+        ServiceGraph.from_grouped(gmesh, [("compute", "reduce")])
+
+
+def test_servicegraph_chain_validation():
+    from repro.core import Stage
+
+    g = sg(8, {"reduce": 0.25, "io": 0.125}, [("compute", "reduce"), ("reduce", "io")])
+    noop = lambda acc, e, k: acc
+    head = Stage(src="compute", dst="reduce", operator=noop, init=0.0)
+    with pytest.raises(ValueError, match="elements"):
+        g.run([[head]])  # head stage without elements
+    with pytest.raises(ValueError, match="empty"):
+        g.run([[]])
 
 
 def test_batch_rows_padding():

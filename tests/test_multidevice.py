@@ -9,16 +9,17 @@ pytestmark = pytest.mark.slow
 def test_stream_reduce_roundtrip(multidevice):
     multidevice("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.core import GroupedMesh, make_channel, stream_reduce, stream_reduce_and_return
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("data",))
 gm = GroupedMesh.build(mesh, services={"reduce": 2/8})
 ch = make_channel(gm, "reduce")
 def f(x):
     red = stream_reduce(x[0], ch)
     back = stream_reduce_and_return(x[0], ch, transform=lambda r: r * 2.0)
     return red[None], back[None]
-sf = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P("data")), check_vma=False))
+sf = jax.jit(shard_map(f, mesh, P("data"), (P("data"), P("data"))))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 4, 16)).astype(np.float32))
 red, back = sf(x)
 expected = np.asarray(x[:6].sum(0))
@@ -32,12 +33,12 @@ print("OK")
 def test_decoupled_equals_conventional_grads(multidevice):
     multidevice("""
 import jax, jax.numpy as jnp, numpy as np, dataclasses
-from jax.sharding import AxisType
 from repro.configs import get_smoke
 from repro.models import build, synthetic_batch
 from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train.train_step import TrainStepConfig, make_jitted_step
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.utils.compat import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
 model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
@@ -66,10 +67,10 @@ print("OK")
 
 def test_mapreduce_equivalence(multidevice):
     multidevice("""
-import jax, numpy as np
-from jax.sharding import AxisType
+import numpy as np
 from repro.apps.mapreduce import CorpusCfg, run_wordcount
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 cfg = CorpusCfg(n_docs_per_row=4, words_per_doc=256, vocab=500, skew=0.7)
 h_ref, _ = run_wordcount(mesh, "reference", cfg)
 h_dec, _ = run_wordcount(mesh, "decoupled", cfg, alpha=0.25)
@@ -81,10 +82,10 @@ print("OK")
 
 def test_cg_variants_agree(multidevice):
     multidevice("""
-import jax, numpy as np, dataclasses
-from jax.sharding import AxisType
+import numpy as np, dataclasses
 from repro.apps.cg import CGCfg, run_cg
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 base = CGCfg(nx_local=14, ny=12, nz=12, n_iters=20)
 hists = {}
 for mode in ["blocking", "nonblocking", "decoupled"]:
@@ -101,10 +102,10 @@ print("OK")
 
 def test_pic_conservation_and_ownership(multidevice):
     multidevice("""
-import jax, numpy as np
-from jax.sharding import AxisType
+import numpy as np
 from repro.apps.pic import PICCfg, run_pic
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.utils.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 cfg = PICCfg(capacity=1024, n_particles_total=1024, n_steps=3, dt=0.15)
 for mode, rows, alpha in [("reference", 8, 0.0), ("decoupled", 7, 0.125)]:
     x, v, m, counts = run_pic(mesh, mode, cfg, alpha=alpha or 0.125)
@@ -178,7 +179,7 @@ print("OK")
 def test_trainer_crash_resume_and_elastic(multidevice):
     multidevice("""
 import shutil, jax, numpy as np
-from jax.sharding import AxisType
+from repro.utils.compat import make_mesh
 from repro.configs import get_smoke
 from repro.models import build
 from repro.data.pipeline import Pipeline, DataConfig
@@ -191,7 +192,7 @@ cfg = get_smoke("qwen2.5-3b"); model = build(cfg)
 pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8))
 opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
 
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 with jax.set_mesh(mesh):
     tr = Trainer(model, mesh, pipe, opt, TrainStepConfig(mode="decoupled", reduce_alpha=0.25),
                  TrainerConfig(total_steps=8, ckpt_every=3, ckpt_dir=ckdir, log_every=100, fail_at_step=5))
@@ -202,7 +203,7 @@ with jax.set_mesh(mesh):
     tr.close()
 
 # elastic: resume the SAME checkpoint on a DIFFERENT mesh shape
-mesh2 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh2 = make_mesh((2, 4), ("data", "model"))
 with jax.set_mesh(mesh2):
     tr2 = Trainer(model, mesh2, pipe, opt, TrainStepConfig(mode="conventional"),
                   TrainerConfig(total_steps=8, ckpt_every=3, ckpt_dir=ckdir, log_every=100))

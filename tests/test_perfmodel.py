@@ -180,3 +180,98 @@ def test_decoupled_time_bounded_below_by_service_side(alpha, s, sigma):
     n_service = max(1, round(alpha * P))
     service = p.t_w1 * P / n_service
     assert t_decoupled(p, P, alpha, s, COSTS) >= service - 1e-9
+
+
+# -- multi-stage generalization (Eq. 4', ServiceGraph alpha vectors) --------------
+
+def _chain_imports():
+    from repro.core.perfmodel import (
+        StageWorkload,
+        recommend_allocation,
+        t_conventional_chain,
+        t_decoupled_chain,
+    )
+
+    return StageWorkload, recommend_allocation, t_conventional_chain, t_decoupled_chain
+
+
+def test_chain_reduces_to_single_stage_eq4():
+    StageWorkload, _, t_conv_chain, t_dec_chain = _chain_imports()
+    p = PROFILE
+    stage = StageWorkload(name="w1", t_op=p.t_w1, d_bytes=p.d_bytes)
+    n_rows = max(1, round(0.125 * P))
+    for pessimistic in (False, True):
+        chained = t_dec_chain(
+            p.t_w0, [stage], p.sigma, P, {"w1": n_rows}, 64e3, COSTS,
+            pessimistic_max=pessimistic,
+        )
+        single = t_decoupled(p, P, n_rows / P, 64e3, COSTS, pessimistic_max=pessimistic)
+        assert chained == pytest.approx(single)
+    assert t_conv_chain(p.t_w0, [stage], p.sigma, P) == pytest.approx(
+        t_conventional(p, P)
+    )
+
+
+def test_chain_service_side_is_slowest_stage():
+    StageWorkload, _, _, t_dec_chain = _chain_imports()
+    fast = StageWorkload(name="fast", t_op=0.01, d_bytes=1e6)
+    slow = StageWorkload(name="slow", t_op=0.5, d_bytes=1e6)
+    rows = {"fast": 8, "slow": 8}
+    both = t_dec_chain(1.0, [fast, slow], 0.0, P, rows, 64e3, COSTS,
+                       pessimistic_max=True)
+    alone = t_dec_chain(1.0, [slow], 0.0, P, {"slow": 8}, 64e3, COSTS,
+                        pessimistic_max=True)
+    # pipelined chain: adding a faster stage does not add its service time
+    assert both == pytest.approx(alone, rel=1e-3)
+
+
+def test_chain_validates_rows():
+    StageWorkload, _, _, t_dec_chain = _chain_imports()
+    s = StageWorkload(name="a", t_op=0.1, d_bytes=1e6)
+    with pytest.raises(ValueError):
+        t_dec_chain(1.0, [s], 0.0, P, {}, 64e3, COSTS)  # no rows for stage
+    with pytest.raises(ValueError):
+        t_dec_chain(1.0, [s], 0.0, 4, {"a": 4}, 64e3, COSTS)  # no compute left
+    with pytest.raises(ValueError):
+        t_dec_chain(1.0, [], 0.0, P, {}, 64e3, COSTS)
+
+
+def test_recommend_allocation_joint_assignment():
+    StageWorkload, recommend_allocation, _, _ = _chain_imports()
+    # heavy reduce, light io: the planner must give reduce more rows.
+    # Both stages have reduced complexity on a dedicated group (the
+    # paper's criterion 2) — service time ~ coupled-share / group rows.
+    stages = [
+        StageWorkload(name="reduce", t_op=0.5, d_bytes=1e9,
+                      t_prime=lambda tot, n, n1: tot * 8.0 / (n * max(n1, 1))),
+        StageWorkload(name="io", t_op=0.05, d_bytes=1e8,
+                      t_prime=lambda tot, n, n1: tot * 16.0 / (n * max(n1, 1))),
+    ]
+    plan = recommend_allocation(1.0, stages, 0.02, P, 64e3, COSTS, row_budget=64)
+    assert set(plan.rows) == {"reduce", "io"}
+    assert all(r >= 1 for r in plan.rows.values())
+    assert sum(plan.rows.values()) <= 64
+    assert plan.rows["reduce"] > plan.rows["io"]
+    assert plan.alphas["reduce"] == pytest.approx(plan.rows["reduce"] / P)
+    assert plan.speedup > 1.0
+    # the planner's choice is optimal over the searched lattice: nudging
+    # a row from reduce to io cannot be better
+    from repro.core.perfmodel import t_decoupled_chain
+
+    nudged = dict(plan.rows)
+    nudged["reduce"] -= 1
+    nudged["io"] += 1
+    if nudged["reduce"] >= 1:
+        assert plan.t <= t_decoupled_chain(
+            1.0, stages, 0.02, P, nudged, 64e3, COSTS
+        ) + 1e-12
+
+
+def test_recommend_allocation_budget_too_small():
+    StageWorkload, recommend_allocation, _, _ = _chain_imports()
+    stages = [
+        StageWorkload(name="a", t_op=0.1, d_bytes=1e6),
+        StageWorkload(name="b", t_op=0.1, d_bytes=1e6),
+    ]
+    with pytest.raises(ValueError):
+        recommend_allocation(1.0, stages, 0.0, P, 64e3, COSTS, row_budget=1)
