@@ -1,0 +1,175 @@
+"""Fig. 11 (beyond-paper): the ChannelWire — chunked double-buffered
+streaming and wire codecs on the 8-device train-reduce chain.
+
+Measured: a gradient-like payload pytree streamed compute -> reduce
+(6 producers, 2 consumers, 3 waves) through `stream_fold_tree` under
+
+  * the seed *barrier* schedule (``chunk_bytes=None``): whole payload
+    per wave, waves serialized by ``optimization_barrier``;
+  * the ChannelWire *chunked* schedule at several wire granularities S
+    (the paper's Eq. 4 tradeoff: pipelining ``beta(S)`` against
+    per-element overhead ``(D/S) * o`` — on fake CPU devices the
+    per-collective overhead dominates, so large S wins; on real async
+    interconnects smaller S buys overlap);
+  * the bf16 and int8 codecs on the same chunked wire.
+
+Reported per variant: wall time and bytes-on-wire per producer payload
+send (from the `WirePacker` accounting — the int8 wire must be >= 2x
+smaller than raw). The identity-codec chunked result is asserted
+bit-identical to the seed path at every granularity.
+
+``collect()`` returns the structured result; ``benchmarks/run.py``
+writes it to ``BENCH_channel.json`` at the repo root as the perf
+trajectory baseline for future PRs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.util import bench, csv_row
+from repro.core import COMPUTE, ServiceGraph, WireSpec
+from repro.core.wire import WirePacker, get_codec, leaf_encoded_bytes
+from repro.utils.compat import shard_map
+
+REDUCE = "reduce"
+ALPHA = 0.25  # 6 producers -> 2 consumers -> 3 waves on 8 devices
+
+#: module-global structured result of the last collect() (for run.py)
+LAST: dict = {}
+
+
+def _payload(rows: int, n_elems: int, seed: int = 0):
+    """Gradient-like f32 pytree, ~n_elems elements per row."""
+    rng = np.random.default_rng(seed)
+    d = max(16, int(np.sqrt(n_elems * 0.9)))
+    sizes = {"w": (d, d), "b": (max(n_elems - d * d, 64),)}
+    return {
+        k: jnp.asarray(rng.normal(size=(rows,) + s).astype(np.float32))
+        for k, s in sizes.items()
+    }
+
+
+def _build_fold(mesh, codec: str, chunk_bytes, wave_fold=None):
+    graph = ServiceGraph.build(
+        mesh,
+        stages={REDUCE: ALPHA},
+        edges=[(COMPUTE, REDUCE)],
+        wire={(COMPUTE, REDUCE): WireSpec(codec=codec, chunk_bytes=chunk_bytes)},
+    )
+    channel = graph.channel(COMPUTE, REDUCE)
+
+    def f(tree):
+        tree = jax.tree.map(lambda x: x[0], tree)
+        acc = channel.stream_fold_tree(tree, wave_fold=wave_fold)
+        return jax.tree.map(lambda x: x[None], acc)
+
+    return jax.jit(shard_map(f, mesh, P("data"), P("data"))), channel
+
+
+def collect(mesh, *, n_elems: int = 1 << 20, reps: int = 3) -> dict:
+    """Measure every wire variant; returns the structured record."""
+    rows = mesh.shape["data"]
+    payload = _payload(rows, n_elems)
+    row_like = jax.tree.map(lambda x: x[0], payload)
+    raw_bytes = sum(
+        int(np.prod(l.shape)) * 4 for l in jax.tree.leaves(row_like)
+    )
+    chunk_grid = [raw_bytes, raw_bytes // 2, raw_bytes // 8]
+
+    variants: dict[str, dict] = {}
+
+    def measure(name, codec, chunk_bytes, wave_fold=None):
+        fn, channel = _build_fold(mesh, codec, chunk_bytes, wave_fold)
+        t = bench(fn, payload, reps=reps)
+        if chunk_bytes is None:
+            wire_bytes = leaf_encoded_bytes(row_like, codec)
+        else:
+            packer = WirePacker.plan(row_like, chunk_bytes)
+            wire_bytes = packer.encoded_bytes(get_codec(codec))
+        variants[name] = {
+            "codec": codec,
+            "chunk_bytes": chunk_bytes,
+            "wave_fold": wave_fold,
+            "seconds": t,
+            "wire_bytes_per_send": wire_bytes,
+            "n_waves": channel.n_waves,
+        }
+        return fn
+
+    seed_fn = measure("seed_barrier", "identity", None)
+    ref = seed_fn(payload)
+    for cb in chunk_grid:
+        fn = measure(f"chunked_S{cb}", "identity", cb)
+        # the identity-codec chunked schedule must be bit-identical
+        got = fn(payload)
+        for k in ref:
+            a, b = np.asarray(ref[k]), np.asarray(got[k])
+            cons = rows - int(round(ALPHA * rows))
+            if not (a[cons:] == b[cons:]).all():
+                raise AssertionError(
+                    f"chunked identity (S={cb}) differs from seed path on {k}"
+                )
+    measure(f"chunked_S{chunk_grid[0]}_staged", "identity", chunk_grid[0], "add")
+    measure("bf16_chunked", "bf16", chunk_grid[0])
+    measure("int8_chunked", "int8", chunk_grid[0])
+    measure("int8_barrier", "int8", None)
+
+    seed_t = variants["seed_barrier"]["seconds"]
+    best_chunked = min(
+        (v for k, v in variants.items() if k.startswith("chunked_")),
+        key=lambda v: v["seconds"],
+    )
+    int8_ratio = raw_bytes / variants["int8_chunked"]["wire_bytes_per_send"]
+    record = {
+        "figure": "fig11_channel",
+        "topology": f"{rows - int(round(ALPHA * rows))}p->{int(round(ALPHA * rows))}c",
+        "payload_bytes_per_row": raw_bytes,
+        "variants": variants,
+        "claims": {
+            "identity_chunked_bit_identical": True,
+            "chunked_speedup_over_barrier": seed_t / best_chunked["seconds"],
+            "int8_wire_bytes_ratio": int8_ratio,
+        },
+    }
+    global LAST
+    LAST = record
+    return record
+
+
+def _report(record: dict) -> list[str]:
+    out = []
+    raw = record["payload_bytes_per_row"]
+    for name, v in record["variants"].items():
+        out.append(
+            csv_row(
+                f"fig11_channel_{name}",
+                v["seconds"] * 1e6,
+                wire_bytes=v["wire_bytes_per_send"],
+                bytes_ratio=f"{raw / v['wire_bytes_per_send']:.2f}",
+                n_waves=v["n_waves"],
+            )
+        )
+    c = record["claims"]
+    out.append(
+        csv_row(
+            "fig11_claim_check",
+            0.0,
+            chunked_speedup_over_barrier=f"{c['chunked_speedup_over_barrier']:.2f}",
+            int8_wire_bytes_ratio=f"{c['int8_wire_bytes_ratio']:.2f}",
+            identity_bit_identical=str(c["identity_chunked_bit_identical"]),
+        )
+    )
+    return out
+
+
+def run(mesh) -> list[str]:
+    return _report(collect(mesh, n_elems=1 << 21, reps=3))
+
+
+def run_quick(mesh) -> list[str]:
+    """CI smoke: small payload, one rep — exercises every wire variant."""
+    return _report(collect(mesh, n_elems=1 << 16, reps=1))

@@ -15,8 +15,15 @@ interpretation and the measured-vs-model methodology).
 
 ``--quick`` runs each module's ``run_quick`` (small configs, one rep)
 when it defines one — the CI smoke that keeps the drivers from rotting.
+
+Every run also writes ``BENCH_channel.json`` at the repo root: the
+machine-readable perf trajectory (per-figure wall seconds + CSV rows,
+plus the structured ChannelWire record from ``fig11_channel``) that
+future PRs diff against as a baseline. CI uploads it as an artifact.
 """
 import argparse
+import json
+import time
 import traceback
 
 
@@ -24,7 +31,11 @@ def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--quick", action="store_true",
                         help="small configs / single rep where supported")
+    parser.add_argument("--json", default=os.path.join(_REPO, "BENCH_channel.json"),
+                        help="where to write the machine-readable trajectory")
     args = parser.parse_args()
+
+    import jax
 
     from repro.utils.compat import make_mesh
 
@@ -35,24 +46,51 @@ def main() -> None:
         fig8_particle_io,
         fig9_disagg_serve,
         fig10_pipeline,
+        fig11_channel,
         roofline_table,
     )
 
     mesh = make_mesh((8,), ("data",))
     print("name,us_per_call,derived")
     failures = 0
+    figures: dict[str, dict] = {}
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
-                fig9_disagg_serve, fig10_pipeline, roofline_table):
+                fig9_disagg_serve, fig10_pipeline, fig11_channel,
+                roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
+        name = mod.__name__.rsplit(".", 1)[-1]
+        t0 = time.perf_counter()
+        rows = []
         try:
             for line in runner(mesh):
-                print(line)
+                print(line)  # stream: keep partial rows on mid-failure
+                rows.append(line)
+            figures[name] = {
+                "seconds": time.perf_counter() - t0,
+                "rows": rows,
+            }
         except Exception:
             failures += 1
             print(f"{mod.__name__},0.0,ERROR")
             traceback.print_exc(file=sys.stderr)
+            figures[name] = {
+                "seconds": time.perf_counter() - t0,
+                "rows": rows,
+                "error": traceback.format_exc().strip().rsplit("\n", 1)[-1],
+            }
+    trajectory = {
+        "quick": bool(args.quick),
+        "jax": jax.__version__,
+        "devices": jax.device_count(),
+        "figures": figures,
+        "channel": fig11_channel.LAST,  # structured ChannelWire record
+    }
+    with open(args.json, "w") as f:
+        json.dump(trajectory, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

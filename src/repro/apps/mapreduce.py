@@ -190,20 +190,30 @@ def pipelined_wordcount(
 
 
 def wordcount_graph(
-    mesh, mode: str, alpha: float, chain_alphas: dict[str, float] | None = None
+    mesh,
+    mode: str,
+    alpha: float,
+    chain_alphas: dict[str, float] | None = None,
+    wire_codec: str = "identity",
 ) -> tuple[ServiceGraph | None, GroupedMesh, tuple[str, ...]]:
     """Resolve the ServiceGraph for one wordcount mode.
 
     Returns (graph, gmesh, chain); graph is None for the reference mode.
     ``chain_alphas`` names the downstream stages of the pipelined mode
-    in chain order (default: one io sink of alpha/2).
+    in chain order (default: one io sink of alpha/2). ``wire_codec``
+    is declared on the map -> reduce edge and applied by the channel to
+    the [keys|counts] elements — the one-argument wire opt-in (identity
+    keeps the histogram bit-exact; lossy codecs trade key fidelity for
+    bytes, so they suit counts-only payloads).
     """
     if mode == "reference":
         gmesh = GroupedMesh.trivial(mesh)
         return None, gmesh, ()
+    head_wire = {(COMPUTE, "reduce"): wire_codec}
     if mode == "decoupled":
         graph = ServiceGraph.build(
-            mesh, stages={"reduce": alpha}, edges=[(COMPUTE, "reduce")]
+            mesh, stages={"reduce": alpha}, edges=[(COMPUTE, "reduce")],
+            wire=head_wire,
         )
         return graph, graph.gmesh, ("reduce",)
     if mode == "pipelined":
@@ -213,14 +223,15 @@ def wordcount_graph(
         edges = [(COMPUTE, "reduce")] + [
             (chain[i - 1], chain[i]) for i in range(1, len(chain))
         ]
-        graph = ServiceGraph.build(mesh, stages=stages, edges=edges)
+        graph = ServiceGraph.build(mesh, stages=stages, edges=edges, wire=head_wire)
         return graph, graph.gmesh, chain
     raise ValueError(mode)
 
 
 def run_wordcount(mesh, mode: str, corpus_cfg: CorpusCfg, alpha: float = 0.25,
                   granularity_words: int = 256,
-                  chain_alphas: dict[str, float] | None = None):
+                  chain_alphas: dict[str, float] | None = None,
+                  wire_codec: str = "identity"):
     """Host-level driver: builds the service graph, lays out the corpus
     (map workload on compute rows only in decoupled modes — same total
     work, paper Sec. IV-A), runs one histogram pass.
@@ -230,7 +241,7 @@ def run_wordcount(mesh, mode: str, corpus_cfg: CorpusCfg, alpha: float = 0.25,
     from jax.sharding import PartitionSpec as P
 
     n_rows = mesh.shape["data"]
-    graph, gmesh, chain = wordcount_graph(mesh, mode, alpha, chain_alphas)
+    graph, gmesh, chain = wordcount_graph(mesh, mode, alpha, chain_alphas, wire_codec)
     work_rows = gmesh.compute.size
     cfg = corpus_cfg
     total_docs = cfg.n_docs_per_row * n_rows

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core.channel import Operator, StreamChannel, broadcast_from_row
 from repro.core.groups import COMPUTE, GroupedMesh
+from repro.core.wire import WireSpec, get_codec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +86,11 @@ class ServiceGraph:
 
     gmesh: GroupedMesh
     edges: tuple[tuple[str, str], ...]
+    # per-edge wire declarations: ((src, dst), WireSpec) pairs. Edges not
+    # listed use the identity wire. Declared once here, every consumer of
+    # ``graph.channel(src, dst)`` — train grads, KV migration, mapreduce
+    # elements — gets the codec + chunked schedule with no extra plumbing.
+    wires: tuple[tuple[tuple[str, str], WireSpec], ...] = ()
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -95,17 +101,20 @@ class ServiceGraph:
         edges: Sequence[tuple[str, str]],
         axis: str = "data",
         min_compute_rows: int = 1,
+        wire: Mapping[tuple[str, str], "WireSpec | str"] | None = None,
     ) -> "ServiceGraph":
         """Resolve fractional per-stage alphas onto one `GroupedMesh`
         and validate the declared edges against the resulting groups."""
         gmesh = GroupedMesh.build(
             mesh, axis=axis, services=dict(stages), min_compute_rows=min_compute_rows
         )
-        return ServiceGraph.from_grouped(gmesh, edges)
+        return ServiceGraph.from_grouped(gmesh, edges, wire=wire)
 
     @staticmethod
     def from_grouped(
-        gmesh: GroupedMesh, edges: Sequence[tuple[str, str]]
+        gmesh: GroupedMesh,
+        edges: Sequence[tuple[str, str]],
+        wire: Mapping[tuple[str, str], "WireSpec | str"] | None = None,
     ) -> "ServiceGraph":
         """Adopt an existing `GroupedMesh` (migration path for code that
         still builds its own) and declare the channels on it."""
@@ -122,17 +131,41 @@ class ServiceGraph:
             if (src, dst) in seen:
                 raise ValueError(f"duplicate edge {src!r} -> {dst!r}")
             seen.add((src, dst))
-        return ServiceGraph(gmesh=gmesh, edges=tuple((s, d) for s, d in edges))
+        wires = []
+        for edge, spec in (wire or {}).items():
+            if tuple(edge) not in seen:
+                raise KeyError(f"wire for undeclared edge {edge!r}")
+            wires.append((tuple(edge), WireSpec.of(spec)))
+        return ServiceGraph(
+            gmesh=gmesh,
+            edges=tuple((s, d) for s, d in edges),
+            wires=tuple(wires),
+        )
 
     # -- queries ----------------------------------------------------------
     def has_edge(self, src: str, dst: str) -> bool:
         return (src, dst) in self.edges
 
+    def wire_spec(self, src: str, dst: str) -> WireSpec:
+        """The wire declaration of an edge (identity if undeclared)."""
+        for edge, spec in self.wires:
+            if edge == (src, dst):
+                return spec
+        return WireSpec()
+
     def channel(self, src: str, dst: str) -> StreamChannel:
-        """The `StreamChannel` for a declared edge."""
+        """The `StreamChannel` for a declared edge, carrying the edge's
+        declared wire codec + chunk granularity."""
         if not self.has_edge(src, dst):
             raise KeyError(f"edge ({src!r}, {dst!r}) not declared; have {self.edges}")
-        return StreamChannel(gmesh=self.gmesh, producer=src, consumer=dst)
+        spec = self.wire_spec(src, dst)
+        return StreamChannel(
+            gmesh=self.gmesh,
+            producer=src,
+            consumer=dst,
+            codec=get_codec(spec.codec),
+            chunk_bytes=spec.chunk_bytes,
+        )
 
     @property
     def alphas(self) -> dict[str, float]:

@@ -1,0 +1,398 @@
+"""ChannelWire: the wire format of a `StreamChannel` (packer + codecs).
+
+The paper prescribes aggregation and application-specific optimization
+*on the decoupled operation itself* (Sec. II-E); MPI Streams and the
+decoupled MapReduce strategy both win by shipping compacted stream
+elements in a fine-grained pipeline. This module owns that concern once,
+for every service:
+
+* `WirePacker`   — flattens an arbitrary payload pytree into fixed-size
+  wire chunks. Dtype-preserving: leaves are grouped by dtype and each
+  group gets its own ``(n_chunks, chunk_elems)`` buffer, so bf16 KV
+  caches, int32 ids and f32 gradients all cross the wire in their native
+  width (the old `StreamChunker` cast everything to one dtype). The
+  ragged tail chunk is zero-padded; padding never reaches the unpacked
+  tree.
+* `WireCodec`    — an encode/decode hook applied to the packed buffers
+  (chunk-wise) or to whole payload leaves (the unchunked fallback path).
+  Built-ins: `identity` (bit-exact), `bf16` (2x, exact for
+  bf16-representable values), `int8` (≈4x, symmetric quantization with
+  optional error feedback — lifted out of ``train/grad_compress.py`` so
+  any channel can use it).
+* byte accounting — `raw_bytes` / `encoded_bytes` report bytes-on-wire
+  per payload send, which `benchmarks/fig11_channel.py` uses to verify
+  the codec wins.
+
+Codecs transform floating-point data only (int8 any float, bf16 floats
+wider than 2 bytes); integer/bool groups pass through unchanged
+(quantizing ids would corrupt them). Error feedback
+(`compress_with_feedback`) runs producer-side in payload space, so it
+composes with any channel: the residual of step t is added to the
+payload of step t+1 and the quantization bias vanishes over time. Pass
+it the channel's ``chunk_bytes`` so the recorded residual matches the
+per-chunk quantization the chunked wire actually applies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Identity codec and the base of the codec hierarchy.
+
+    ``encode_leaf``/``decode_leaf`` act on whole arrays (the unchunked
+    `stream_fold_tree` fallback path); ``encode_chunks``/``decode_chunk``
+    act on a packed ``(n_chunks, S)`` buffer, producing a wire pytree
+    whose leaves keep the leading chunk axis (so chunk ``k`` of every
+    wire leaf travels together). ``applies(dtype)`` gates which packed
+    dtype groups the codec transforms — the rest pass through.
+    """
+
+    name: str = "identity"
+
+    def applies(self, dtype) -> bool:
+        return False  # identity: nothing to transform
+
+    # -- whole-leaf form (unchunked fallback path) -------------------------
+    def encode_leaf(self, x: jax.Array) -> Any:
+        return x
+
+    def decode_leaf(self, wire: Any) -> jax.Array:
+        return wire
+
+    # -- chunk form (chunked wire path) ------------------------------------
+    def encode_chunks(self, buf: jax.Array) -> Any:
+        """(n_chunks, S) buffer -> wire pytree with leading chunk axis."""
+        return buf
+
+    def decode_chunk(self, wire: Any) -> jax.Array:
+        """One wire chunk (leading axis indexed away) -> (S,) data."""
+        return wire
+
+    def encoded_chunk_bytes(self, chunk_elems: int, itemsize: int) -> int:
+        return chunk_elems * itemsize
+
+    # -- whole-payload-tree form (maps the leaf form over a pytree) --------
+    def encode_tree(self, payload: Any) -> Any:
+        return jax.tree.map(self.encode_leaf, payload)
+
+    def decode_tree(self, wire_tree: Any) -> Any:
+        return jax.tree.map(self.decode_leaf, wire_tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bf16Codec(WireCodec):
+    """Truncate f32 to bfloat16 on the wire: 2x fewer bytes, exact for
+    values already representable in bf16 (e.g. bf16-master caches)."""
+
+    name: str = "bf16"
+
+    def applies(self, dtype) -> bool:
+        dt = jnp.dtype(dtype)
+        return jnp.issubdtype(dt, jnp.floating) and dt.itemsize > 2
+
+    def encode_leaf(self, x):
+        return x.astype(jnp.bfloat16) if self.applies(x.dtype) else x
+
+    def decode_leaf(self, wire):
+        return wire.astype(jnp.float32) if wire.dtype == jnp.bfloat16 else wire
+
+    def encode_chunks(self, buf):
+        return buf.astype(jnp.bfloat16)
+
+    def decode_chunk(self, wire):
+        return wire.astype(jnp.float32)
+
+    def encoded_chunk_bytes(self, chunk_elems, itemsize):
+        return chunk_elems * 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(WireCodec):
+    """Symmetric int8 quantization: q = round(x / scale), scale =
+    max|x| / 127. Whole-leaf form keeps one scale per leaf (the historic
+    ``grad_compress`` wire format); chunk form keeps one scale per chunk,
+    which tracks local magnitude and is what the chunked schedule ships.
+    ≈4x fewer bytes (+4 bytes of scale per leaf/chunk)."""
+
+    name: str = "int8"
+
+    def applies(self, dtype) -> bool:
+        return jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+
+    def encode_leaf(self, x):
+        if not self.applies(x.dtype):
+            return x
+        xf = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+
+    def decode_leaf(self, wire):
+        if not is_int8_payload(wire):
+            return wire
+        return wire["q"].astype(jnp.float32) * wire["scale"]
+
+    def encode_chunks(self, buf):
+        buf = buf.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(buf), axis=-1, keepdims=True) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(buf / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+
+    def decode_chunk(self, wire):
+        return wire["q"].astype(jnp.float32) * wire["scale"]
+
+    def encoded_chunk_bytes(self, chunk_elems, itemsize):
+        return chunk_elems * 1 + 4  # int8 data + one f32 scale
+
+    def decode_tree(self, wire_tree):
+        return jax.tree.map(
+            self.decode_leaf, wire_tree, is_leaf=is_int8_payload
+        )
+
+
+def is_int8_payload(x: Any) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+CODECS = {
+    "identity": WireCodec(),
+    "bf16": Bf16Codec(),
+    "int8": Int8Codec(),
+}
+
+
+def get_codec(codec: "str | WireCodec | None") -> WireCodec:
+    """Resolve a codec argument: name, instance, or None (identity)."""
+    if codec is None:
+        return CODECS["identity"]
+    if isinstance(codec, WireCodec):
+        return codec
+    try:
+        return CODECS[codec]
+    except KeyError:
+        raise KeyError(f"unknown codec {codec!r}; have {sorted(CODECS)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Per-edge wire declaration on a `ServiceGraph`: which codec the
+    edge's channel uses and (for tree folds) the chunked-schedule wire
+    granularity in bytes (None keeps the unchunked fallback)."""
+
+    codec: "str | WireCodec" = "identity"
+    chunk_bytes: "int | None" = None
+
+    @staticmethod
+    def of(spec: "str | WireCodec | WireSpec | None") -> "WireSpec":
+        """Normalize a per-edge wire declaration (a codec name or
+        instance is shorthand for a WireSpec with that codec)."""
+        if spec is None:
+            return WireSpec()
+        if isinstance(spec, WireSpec):
+            return spec
+        if isinstance(spec, WireCodec):
+            return WireSpec(codec=spec)  # keep custom instances intact
+        return WireSpec(codec=get_codec(spec).name)
+
+
+# ---------------------------------------------------------------------------
+# error feedback (producer-side, payload space)
+# ---------------------------------------------------------------------------
+
+def init_residual(payload_like: Any) -> Any:
+    """Zero residual with the payload's float structure (f32 leaves)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), payload_like)
+
+
+def compress_with_feedback(
+    payload: Any,
+    residual: Any,
+    codec: "str | WireCodec" = "int8",
+    chunk_bytes: "int | None" = None,
+) -> tuple[Any, Any]:
+    """Error feedback for a lossy codec: correct the payload with last
+    step's residual, and make this step's round-trip error the next
+    residual — the compression bias vanishes over time.
+
+    Returns ``(corrected_payload, new_residual)``. Stream the corrected
+    payload through a channel whose wire uses the same ``codec`` AND the
+    same ``chunk_bytes``: the round trip computed here must match what
+    the wire applies (whole-leaf scales when ``chunk_bytes=None``,
+    per-chunk scales on the chunked schedule), otherwise the recorded
+    residual diverges from the actual compression error and the bias
+    never cancels.
+    """
+    codec = get_codec(codec)
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, payload, residual
+    )
+    if chunk_bytes is None:
+        roundtrip = jax.tree.map(
+            lambda c: codec.decode_leaf(codec.encode_leaf(c)), corrected
+        )
+    else:
+        packer = WirePacker.plan(corrected, chunk_bytes)
+        bufs = []
+        for g, buf in zip(packer.groups, packer.pack(corrected)):
+            if codec.applies(g.dtype):
+                # decode_chunk broadcasts over the leading chunk axis
+                buf = codec.decode_chunk(codec.encode_chunks(buf))
+            bufs.append(buf)
+        roundtrip = packer.unpack(bufs)
+    new_residual = jax.tree.map(lambda c, d: c - d, corrected, roundtrip)
+    return corrected, new_residual
+
+
+# ---------------------------------------------------------------------------
+# the packer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireGroup:
+    """One dtype group of a packed payload: which leaves it holds and
+    the static chunk geometry of its buffer."""
+
+    dtype: Any
+    leaf_idx: tuple[int, ...]
+    total: int  # unpadded element count
+    chunk_elems: int
+    n_chunks: int
+
+    @property
+    def itemsize(self) -> int:
+        return int(jnp.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePacker:
+    """Static, dtype-preserving chunking plan for a payload pytree.
+
+    ``chunk_bytes`` sets the wire granularity S in BYTES; each dtype
+    group chunks its own flat buffer into ``(n_chunks, chunk_bytes /
+    itemsize)`` rows (bool travels as uint8). ``pack`` -> tuple of group
+    buffers, ``unpack`` restores the exact pytree bit-for-bit (padding
+    dropped, dtypes untouched).
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    groups: tuple[WireGroup, ...]
+
+    @staticmethod
+    def plan(payload_like: Any, chunk_bytes: int) -> "WirePacker":
+        leaves, treedef = jax.tree.flatten(payload_like)
+        shapes = tuple(tuple(l.shape) for l in leaves)
+        dtypes = tuple(l.dtype for l in leaves)
+        by_dtype: dict[Any, list[int]] = {}
+        for i, l in enumerate(leaves):
+            wd = _wire_dtype(l.dtype)
+            by_dtype.setdefault(jnp.dtype(wd).name, []).append(i)
+        groups = []
+        for name, idx in by_dtype.items():
+            dtype = jnp.dtype(name)
+            total = int(sum(np.prod(shapes[i]) if shapes[i] else 1 for i in idx))
+            total = max(total, 1)
+            chunk_elems = max(1, int(chunk_bytes) // dtype.itemsize)
+            chunk_elems = min(chunk_elems, total)
+            n_chunks = -(-total // chunk_elems)
+            groups.append(WireGroup(dtype, tuple(idx), total, chunk_elems, n_chunks))
+        return WirePacker(treedef, shapes, dtypes, tuple(groups))
+
+    # -- pack / unpack ------------------------------------------------------
+    def pack(self, payload: Any) -> tuple[jax.Array, ...]:
+        leaves = jax.tree.leaves(payload)
+        out = []
+        for g in self.groups:
+            flat = jnp.concatenate(
+                [jnp.ravel(leaves[i]).astype(g.dtype) for i in g.leaf_idx]
+            )
+            pad = g.n_chunks * g.chunk_elems - g.total
+            if pad:
+                flat = jnp.concatenate([flat, jnp.zeros((pad,), g.dtype)])
+            out.append(flat.reshape(g.n_chunks, g.chunk_elems))
+        return tuple(out)
+
+    def unpack(self, buffers: "tuple[jax.Array, ...] | list[jax.Array]") -> Any:
+        leaves: list = [None] * len(self.shapes)
+        for g, buf in zip(self.groups, buffers):
+            flat = buf.reshape(-1)[: g.total].astype(g.dtype)
+            off = 0
+            for i in g.leaf_idx:
+                size = int(np.prod(self.shapes[i])) if self.shapes[i] else 1
+                leaves[i] = (
+                    flat[off : off + size]
+                    .reshape(self.shapes[i])
+                    .astype(self.dtypes[i])
+                )
+                off += size
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    def zeros(self) -> tuple[jax.Array, ...]:
+        return tuple(
+            jnp.zeros((g.n_chunks, g.chunk_elems), g.dtype) for g in self.groups
+        )
+
+    # -- byte accounting ----------------------------------------------------
+    def raw_bytes(self) -> int:
+        """Bytes per full payload send with the identity wire."""
+        return sum(g.n_chunks * g.chunk_elems * g.itemsize for g in self.groups)
+
+    def encoded_bytes(self, codec: "str | WireCodec") -> int:
+        """Bytes per full payload send after the codec."""
+        codec = get_codec(codec)
+        total = 0
+        for g in self.groups:
+            if codec.applies(g.dtype):
+                total += g.n_chunks * codec.encoded_chunk_bytes(
+                    g.chunk_elems, g.itemsize
+                )
+            else:
+                total += g.n_chunks * g.chunk_elems * g.itemsize
+        return total
+
+
+def _wire_dtype(dtype):
+    """Dtype a leaf travels as: itself, except bool -> uint8 (collectives
+    over bool are not portable; uint8 round-trips exactly)."""
+    return jnp.uint8 if jnp.dtype(dtype) == jnp.bool_ else jnp.dtype(dtype)
+
+
+def leaf_encoded_bytes(payload_like: Any, codec: "str | WireCodec") -> int:
+    """Bytes per payload send for the UNCHUNKED (whole-leaf) wire."""
+    codec = get_codec(codec)
+    total = 0
+    for l in jax.tree.leaves(payload_like):
+        n = int(np.prod(l.shape)) if l.shape else 1
+        if codec.applies(l.dtype):
+            total += codec.encoded_chunk_bytes(n, jnp.dtype(l.dtype).itemsize)
+        else:
+            total += n * jnp.dtype(_wire_dtype(l.dtype)).itemsize
+    return total
+
+
+__all__ = [
+    "CODECS",
+    "Bf16Codec",
+    "Int8Codec",
+    "WireCodec",
+    "WireGroup",
+    "WirePacker",
+    "WireSpec",
+    "compress_with_feedback",
+    "get_codec",
+    "init_residual",
+    "is_int8_payload",
+    "leaf_encoded_bytes",
+]

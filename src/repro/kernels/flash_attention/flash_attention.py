@@ -22,6 +22,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -85,9 +87,11 @@ def flash_attention(
     scale: float | None = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Fused attention; `interpret=True` on CPU, False on real TPUs."""
+    """Fused attention; interpret=None auto-resolves: compiled on TPU,
+    interpreter elsewhere (repro.kernels.runtime)."""
+    interpret = resolve_interpret(interpret)
     b, h, sq, d = q.shape
     kv = k.shape[1]
     sk = k.shape[2]

@@ -1,8 +1,9 @@
 """Jitted public wrapper for the flash attention kernel.
 
 `mha(q, k, v)` accepts the model-layout (B, S, H, d) tensors used by
-repro.models.layers and transposes to the kernel layout. On a real TPU
-pass interpret=False; this container validates in interpret mode.
+repro.models.layers and transposes to the kernel layout. The default
+``interpret=None`` auto-resolves per backend (compiled on TPU,
+interpreter elsewhere — see repro.kernels.runtime).
 """
 from __future__ import annotations
 
@@ -25,7 +26,7 @@ def mha(
     window: int = 0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     qt = q.swapaxes(1, 2)
     kt = k.swapaxes(1, 2)

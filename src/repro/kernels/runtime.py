@@ -1,0 +1,30 @@
+"""Kernel runtime policy shared by every Pallas kernel family.
+
+Every kernel wrapper takes ``interpret: bool | None = None`` and resolves
+it here: ``None`` means "compiled on a real TPU, interpreter everywhere
+else" — so CPU CI keeps validating through the interpreter while real
+hardware stops silently running interpreted kernels (the old hardcoded
+``interpret=True`` default). Pass an explicit bool to override either
+way (e.g. ``interpret=True`` on TPU to debug a kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def on_tpu() -> bool:
+    """True when the default JAX backend is a real TPU."""
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # backend init can fail in exotic sandboxes
+        return False
+
+
+def resolve_interpret(interpret: "bool | None") -> bool:
+    """Resolve a kernel's interpret argument against the backend."""
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

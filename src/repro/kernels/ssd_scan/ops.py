@@ -9,5 +9,5 @@ from repro.kernels.ssd_scan.ssd_scan import ssd_scan
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool | None = None):
     return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel(
     x_ref,   # (1, 1, Q, P)
@@ -86,8 +88,9 @@ def ssd_scan(
     Cm: jax.Array,  # (B, S, N)
     *,
     chunk: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, s, h, p = x.shape
     n = Bm.shape[-1]
     chunk = min(chunk, s)

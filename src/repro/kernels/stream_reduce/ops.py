@@ -9,10 +9,10 @@ from repro.kernels.stream_reduce.stream_reduce import chunk_accumulate, histogra
 
 
 @functools.partial(jax.jit, static_argnames=("n_bins", "interpret"))
-def keyed_histogram(keys, counts, n_bins: int, *, interpret: bool = True):
+def keyed_histogram(keys, counts, n_bins: int, *, interpret: bool | None = None):
     return histogram(keys, counts, n_bins, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def accumulate(elements, *, interpret: bool = True):
+def accumulate(elements, *, interpret: bool | None = None):
     return chunk_accumulate(elements, interpret=interpret)

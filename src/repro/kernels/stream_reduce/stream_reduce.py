@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _hist_kernel(keys_ref, counts_ref, o_ref, acc_scr, *, tile_elems, tile_bins, n_tiles_e):
     bi = pl.program_id(0)
@@ -53,8 +55,9 @@ def histogram(
     *,
     tile_elems: int = 512,
     tile_bins: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     n = keys.shape[0]
     tile_elems = min(tile_elems, max(n, 1))
     n_e = -(-n // tile_elems)
@@ -102,10 +105,11 @@ def chunk_accumulate(
     elements: jax.Array,  # (n_chunks, S)
     *,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Sum stream elements: out[j] = sum_k elements[k, j] (the reducer
     group's gradient-chunk fold), tiled over S."""
+    interpret = resolve_interpret(interpret)
     n_chunks, s = elements.shape
     tile = min(tile, s)
     n_t = -(-s // tile)

@@ -42,7 +42,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import COMPUTE, GroupedMesh, StreamChannel
+from repro.core import COMPUTE, GroupedMesh, ServiceGraph, StreamChannel, WireSpec
 from repro.core.decouple import group_psum, select_by_role
 from repro.core.operators import (
     cache_migration_op,
@@ -250,9 +250,40 @@ def serving_mesh(mesh, alpha: float, axis: str = "data") -> GroupedMesh:
     return GroupedMesh.build(mesh, axis=axis, services={PREFILL: alpha})
 
 
-def kv_handoff_channel(gmesh: GroupedMesh) -> StreamChannel:
+def serving_graph(
+    mesh_or_gmesh,
+    alpha: float | None = None,
+    axis: str = "data",
+    *,
+    codec: str = "identity",
+    wire_chunk_bytes: int | None = None,
+) -> ServiceGraph:
+    """The disaggregated serving topology as a `ServiceGraph`: one
+    prefill -> decode edge whose wire declaration (codec + chunking)
+    covers the KV-cache migration stream — the one-argument opt-in.
+    Accepts either a bare mesh (with ``alpha``) or an existing
+    `GroupedMesh` from `serving_mesh`."""
+    if isinstance(mesh_or_gmesh, GroupedMesh):
+        if alpha is not None:
+            raise ValueError(
+                "alpha is resolved by the GroupedMesh already; pass a bare "
+                "mesh to let serving_graph partition it"
+            )
+        gmesh = mesh_or_gmesh
+    else:
+        if alpha is None:
+            raise ValueError("serving_graph(mesh, alpha) needs alpha")
+        gmesh = serving_mesh(mesh_or_gmesh, alpha, axis)
+    return ServiceGraph.from_grouped(
+        gmesh,
+        [(PREFILL, COMPUTE)],
+        wire={(PREFILL, COMPUTE): WireSpec(codec=codec, chunk_bytes=wire_chunk_bytes)},
+    )
+
+
+def kv_handoff_channel(gmesh: GroupedMesh, codec: str = "identity") -> StreamChannel:
     """The prefill -> decode dataflow channel."""
-    return StreamChannel(gmesh=gmesh, producer=PREFILL, consumer=COMPUTE)
+    return serving_graph(gmesh, codec=codec).channel(PREFILL, COMPUTE)
 
 
 def build_disagg_spmd_step(
@@ -264,6 +295,7 @@ def build_disagg_spmd_step(
     max_len: int,
     chunk_elems: int = 4096,
     decode_steps: int = 1,
+    codec: str = "identity",
 ):
     """One jitted disaggregated serving tick over the grouped mesh.
 
@@ -298,7 +330,7 @@ def build_disagg_spmd_step(
         getattr(cfg, "family", "") == "encdec"
     ):
         raise ValueError("disaggregated SPMD step needs an attention-only LM cache")
-    channel = kv_handoff_channel(gmesh)
+    channel = kv_handoff_channel(gmesh, codec=codec)
     mesh = gmesh.mesh
     axis = gmesh.axis
     cache_like = jax.eval_shape(lambda: model.init_cache(1, max_prompt))

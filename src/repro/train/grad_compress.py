@@ -1,44 +1,51 @@
-"""Gradient compression for stream elements: symmetric int8 quantization
-with error feedback. Applied on the wire of the decoupled reduce stream
-(transform/untransform hooks of `StreamChannel.stream_fold_tree`), it
-cuts the stream's collective bytes ~4x — one of the "application-specific
+"""Gradient compression for stream elements — compatibility shim.
+
+The int8-with-error-feedback wire compression that used to live here is
+now a first-class channel codec in ``repro.core.wire`` (`Int8Codec`),
+declared per `ServiceGraph` edge and applied inside
+`StreamChannel.stream_fold_tree` — one of the "application-specific
 optimizations on the decoupled operation" the paper calls for
-(Sec. II-E, "aggregate data ... on communication-intensive operations").
+(Sec. II-E), available to every service instead of being hand-wired
+into the train step. These wrappers keep the historic per-leaf API
+(the ``{"q", "scale"}`` wire format) for existing callers and tests.
 """
 from __future__ import annotations
 
 from typing import Any
 
 import jax
-import jax.numpy as jnp
+
+from repro.core import wire as wirelib
+
+_INT8 = wirelib.CODECS["int8"]
 
 
 def quantize_leaf(x: jax.Array) -> dict:
     """Symmetric per-leaf int8: q = round(x / scale), scale = max|x|/127."""
-    xf = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
-    return {"q": q, "scale": scale.astype(jnp.float32)}
+    return _INT8.encode_leaf(x)
 
 
 def dequantize_leaf(payload: dict) -> jax.Array:
-    return payload["q"].astype(jnp.float32) * payload["scale"]
+    return _INT8.decode_leaf(payload)
 
 
 def is_payload(x: Any) -> bool:
-    return isinstance(x, dict) and set(x) == {"q", "scale"}
+    return wirelib.is_int8_payload(x)
 
 
 def compress_with_feedback(grads: Any, residual: Any) -> tuple[Any, Any]:
     """Error feedback: compress (g + r); the quantization error becomes
-    the next step's residual, so compression bias vanishes over time."""
-    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
-    payload = jax.tree.map(quantize_leaf, corrected)
-    new_residual = jax.tree.map(
-        lambda p, c: c - dequantize_leaf(p), payload, corrected, is_leaf=is_payload
+    the next step's residual, so compression bias vanishes over time.
+
+    Historic contract: returns the QUANTIZED payload tree. Channel-level
+    callers should prefer `repro.core.wire.compress_with_feedback`,
+    which returns the corrected payload for the wire codec to encode.
+    """
+    corrected, new_residual = wirelib.compress_with_feedback(
+        grads, residual, codec=_INT8
     )
-    return payload, new_residual
+    return _INT8.encode_tree(corrected), new_residual
 
 
 def init_residual(grads_like: Any) -> Any:
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    return wirelib.init_residual(grads_like)

@@ -38,10 +38,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import ServiceGraph
+from repro.core import ServiceGraph, WireSpec
 from repro.core.dataflow import COMPUTE
 from repro.core.decouple import group_psum
-from repro.train import grad_compress, sharding
+from repro.train import sharding
 from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
 from repro.utils.compat import partial_shard_map
 
@@ -54,7 +54,15 @@ class TrainStepConfig:
     mode: str = "conventional"  # conventional | decoupled | overlap
     reduce_alpha: float = 1 / 16
     analytics_alpha: float = 0.0
-    compress: str = "none"  # none | int8
+    # wire codec of the decoupled grad stream: none | int8 | bf16
+    # (declared on the ServiceGraph edge; the channel en/decodes)
+    compress: str = "none"
+    # wire granularity of the grad stream in bytes. None keeps the
+    # unchunked whole-payload-per-wave fold (required when grad leaves
+    # stay GSPMD-sharded over the model axis — packing would reshard);
+    # set it on replicated/fully-manual setups to get the chunked
+    # double-buffered schedule.
+    wire_chunk_bytes: int | None = None
     zero1: bool = True  # overlap mode
     runtime_skip: bool = True  # cond-gate fwd/bwd off service rows
     # FSDP: shard params over the data axes too (all-gathered per layer
@@ -118,13 +126,21 @@ def build_overlap_step(model, opt_cfg: OptConfig, mesh, params_like, data_axes):
 
 def train_service_graph(mesh, ts_cfg: TrainStepConfig, axis: str = "data") -> ServiceGraph:
     """The decoupled train topology: compute -> reduce, chained onward
-    to an analytics service when ``analytics_alpha > 0`` (Fig. 3c)."""
+    to an analytics service when ``analytics_alpha > 0`` (Fig. 3c). The
+    grad stream's wire (codec + chunk granularity) is declared on the
+    compute -> reduce edge — this is the one-argument opt-in."""
     stages = {REDUCE: ts_cfg.reduce_alpha}
     edges = [(COMPUTE, REDUCE)]
+    codec = "identity" if ts_cfg.compress in ("none", "") else ts_cfg.compress
+    wire = {
+        (COMPUTE, REDUCE): WireSpec(
+            codec=codec, chunk_bytes=ts_cfg.wire_chunk_bytes
+        )
+    }
     if ts_cfg.analytics_alpha > 0:
         stages[ANALYTICS] = ts_cfg.analytics_alpha
         edges.append((REDUCE, ANALYTICS))
-    return ServiceGraph.build(mesh, stages=stages, edges=edges, axis=axis)
+    return ServiceGraph.build(mesh, stages=stages, edges=edges, axis=axis, wire=wire)
 
 
 def build_decoupled_step(
@@ -143,7 +159,6 @@ def build_decoupled_step(
     gmesh = graph.gmesh
     channel = graph.channel(COMPUTE, REDUCE)
     pods = [a for a in manual_axes if a != gmesh.axis]
-    use_int8 = ts_cfg.compress == "int8"
 
     def step(params, opt_state, batch):
         row = lax.axis_index(gmesh.axis)
@@ -172,26 +187,10 @@ def build_decoupled_step(
         else:
             loss_sum, cnt, metrics, grads = compute_branch()
 
-        # ---- the decoupled reduce: stream grad leaves to the reducer group ----
-        if use_int8:
-            payload = jax.tree.map(grad_compress.quantize_leaf, grads)
-            acc = channel.stream_fold_tree(
-                payload,
-                acc_init=jax.tree.map(
-                    lambda g: jnp.zeros(g.shape, jnp.float32), grads
-                ),
-                combine=lambda a, new, ok: jax.tree.map(
-                    lambda x, y: jnp.where(ok, x + y, x),
-                    a,
-                    jax.tree.map(
-                        grad_compress.dequantize_leaf,
-                        new,
-                        is_leaf=grad_compress.is_payload,
-                    ),
-                ),
-            )
-        else:
-            acc = channel.stream_fold_tree(grads)
+        # ---- the decoupled reduce: stream grad leaves to the reducer group.
+        # The channel's wire (declared on the graph edge) owns compression
+        # and chunking; raw grads in, decoded fold out.
+        acc = channel.stream_fold_tree(grads)
         # master aggregation within the service group (cheap: alpha*P rows)
         acc = group_psum(acc, gmesh, REDUCE)
         for pod_axis in pods:

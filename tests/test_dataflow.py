@@ -140,6 +140,141 @@ print("OK")
 """)
 
 
+def test_channel_wire_chunked_vs_unchunked_equivalence(multidevice):
+    """Acceptance: the ChannelWire chunked double-buffered schedule must
+    reproduce the seed barrier path bit-for-bit with the identity codec
+    (every wave_fold mode, ragged tail included); bf16/int8 must stay
+    close on floats and exact on integer groups."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import GroupedMesh, make_channel
+from repro.utils.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("data",))
+gm = GroupedMesh.build(mesh, services={"reduce": 2/8})
+rng = np.random.default_rng(0)
+payload = {
+    "w": jnp.asarray(rng.normal(size=(8, 33, 7)).astype(np.float32)),
+    "b": jnp.asarray(rng.normal(size=(8, 11)).astype(np.float32)),
+    "ids": jnp.asarray(rng.integers(0, 100, size=(8, 5)), jnp.int32),
+}
+def run(codec, chunk_bytes, wave_fold="add"):
+    ch = make_channel(gm, "reduce", codec=codec, chunk_bytes=chunk_bytes)
+    def f(tree):
+        tree = jax.tree.map(lambda x: x[0], tree)
+        acc = ch.stream_fold_tree(tree, wave_fold=wave_fold)
+        return jax.tree.map(lambda x: x[None], acc)
+    return jax.jit(shard_map(f, mesh, P("data"), P("data")))(payload)
+seed = run(None, None)
+# reducer rows 6+7 together hold the sum of the 6 producer rows
+expected = jax.tree.map(lambda x: np.asarray(x[:6]).sum(0), payload)
+got = jax.tree.map(lambda x: np.asarray(x[6] + x[7]), seed)
+for k in expected:
+    np.testing.assert_allclose(got[k], expected[k], rtol=1e-5)
+# 252-byte chunks do not divide the 33*7=231(+11) f32 group: ragged tail
+for wf in ("kernel", "add", "scan"):
+    ch = run("identity", 252, wf)
+    for k in payload:
+        a, b = np.asarray(seed[k]), np.asarray(ch[k])
+        assert (a[6:] == b[6:]).all(), (wf, k)
+for codec, tol in [("bf16", 0.05), ("int8", 0.2)]:
+    c = run(codec, 252)
+    for k in ("w", "b"):
+        d = np.abs(np.asarray(c[k][6:]) - np.asarray(seed[k][6:])).max()
+        assert d < tol, (codec, k, d)
+    # int32 group must cross the lossy wire untouched
+    assert (np.asarray(c["ids"][6:]) == np.asarray(seed["ids"][6:])).all(), codec
+print("OK")
+""")
+
+
+def test_channel_wire_int8_error_feedback_converges(multidevice):
+    """int8 wire + error feedback on the train-reduce chain: SGD over the
+    compute -> reduce graph with a quantized grad stream must track the
+    exact-gradient trajectory (the paper's aggregate-on-the-operation
+    optimization, lifted to the channel)."""
+    multidevice("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import ServiceGraph, WireSpec
+from repro.core.decouple import group_psum
+from repro.core.wire import compress_with_feedback, init_residual
+from repro.utils.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("data",))
+graph = ServiceGraph.build(
+    mesh, stages={"reduce": 2/8}, edges=[("compute", "reduce")],
+    wire={("compute", "reduce"): WireSpec(codec="int8", chunk_bytes=256)})
+channel = graph.channel("compute", "reduce")
+rng = np.random.default_rng(0)
+target = jnp.asarray(rng.normal(size=(8, 96)).astype(np.float32))
+row_w = jnp.asarray((np.arange(8) < 6).astype(np.float32))  # compute rows only
+def step(params, tgt, residual, w):
+    tgt, residual, w = tgt[0], residual[0], w[0]
+    grads = (params - tgt) * w  # local grad (zero on service rows)
+    corrected, new_res = compress_with_feedback(grads, residual, "int8",
+                                                   chunk_bytes=256)
+    acc = channel.stream_fold_tree(corrected)
+    acc = group_psum(acc, graph.gmesh, "reduce")
+    g = channel.broadcast_from_consumer(acc) / 6.0
+    return params - 0.1 * g, new_res[None]
+sm = jax.jit(shard_map(step, mesh, (P(), P("data"), P("data"), P("data")), (P(), P("data"))))
+params = jnp.zeros((96,), jnp.float32)
+exact = np.zeros(96)
+tgt_mean = np.asarray(target[:6]).mean(0)
+res = jnp.zeros((8, 96), jnp.float32)
+for _ in range(60):
+    params, res = sm(params, target, res, row_w)
+    exact = exact - 0.1 * (exact - tgt_mean)
+np.testing.assert_allclose(np.asarray(params), exact, atol=2e-3)
+np.testing.assert_allclose(np.asarray(params), tgt_mean, atol=2e-2)
+print("OK")
+""")
+
+
+def test_train_step_int8_chunked_wire(multidevice):
+    """The decoupled train step with compress="int8" +
+    wire_chunk_bytes: the channel-owned codec must land within the
+    historic int8 tolerance of the uncompressed decoupled update."""
+    multidevice("""
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.utils.compat import make_mesh
+from repro.configs import get_smoke
+from repro.models import build, synthetic_batch
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import TrainStepConfig, make_jitted_step
+mesh = make_mesh((8, 1), ("data", "model"))
+cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+opt_cfg = OptConfig(kind="sgdm", lr=1.0, beta1=0.0, warmup_steps=0, grad_clip=0.0,
+                    weight_decay=0.0, min_lr_ratio=1.0, total_steps=1)
+opt_state = init_opt_state(opt_cfg, params)
+batch = synthetic_batch(cfg, 8, 32)
+mask = np.asarray(batch["mask"]).copy(); mask[6:] = 0.0
+batch["mask"] = jnp.asarray(mask)
+params_like = jax.eval_shape(lambda: params)
+outs = {}
+for name, kw in [
+    ("plain", dict(mode="decoupled", reduce_alpha=0.25)),
+    ("int8", dict(mode="decoupled", reduce_alpha=0.25, compress="int8")),
+    ("int8_chunked", dict(mode="decoupled", reduce_alpha=0.25, compress="int8",
+                          wire_chunk_bytes=65536)),
+    ("bf16_chunked", dict(mode="decoupled", reduce_alpha=0.25, compress="bf16",
+                          wire_chunk_bytes=65536)),
+]:
+    step, _ = make_jitted_step(model, mesh, opt_cfg, TrainStepConfig(**kw),
+                               params_like, batch, donate=False)
+    outs[name] = step(params, opt_state, batch)
+ref = jax.tree.leaves(outs["plain"][0])
+for name, tol in [("int8", 0.02), ("int8_chunked", 0.02), ("bf16_chunked", 0.01)]:
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(ref, jax.tree.leaves(outs[name][0])))
+    assert d < tol, (name, d)
+    assert np.isfinite(float(outs[name][2]["loss"]))
+print("OK")
+""")
+
+
 def test_io_sink_stage_drains_to_host(multidevice):
     """iogroup as a ServiceGraph sink: compute rows stream a pytree to
     the io stage; only io rows drain, and the drained bytes round-trip."""

@@ -1,0 +1,216 @@
+"""ChannelWire unit tests (single device): the dtype-preserving packer,
+the codec round trips, byte accounting, error feedback, and the kernel
+interpret auto-detect. Multi-device wire equivalence lives in
+tests/test_dataflow.py."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.wire import (
+    CODECS,
+    WirePacker,
+    WireSpec,
+    compress_with_feedback,
+    get_codec,
+    init_residual,
+    leaf_encoded_bytes,
+)
+
+
+def _mixed_tree(rng):
+    return {
+        "w": jnp.asarray(rng.normal(size=(7, 13)).astype(np.float32)),
+        "h": jnp.asarray(rng.normal(size=(5,)).astype(np.float32)).astype(
+            jnp.bfloat16
+        ),
+        "ids": jnp.asarray(rng.integers(-50, 50, size=(11,)), jnp.int32),
+        "flags": jnp.asarray(rng.integers(0, 2, size=(9,)).astype(bool)),
+    }
+
+
+def test_packer_roundtrip_mixed_dtypes_bit_exact():
+    tree = _mixed_tree(np.random.default_rng(0))
+    packer = WirePacker.plan(tree, chunk_bytes=64)
+    bufs = packer.pack(tree)
+    # one buffer per dtype group, native widths preserved (bool -> u8)
+    assert {b.dtype for b in bufs} == {
+        jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
+        jnp.dtype(jnp.int32), jnp.dtype(jnp.uint8),
+    }
+    out = packer.unpack(bufs)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype, k
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+
+
+def test_packer_ragged_tail():
+    # 91 f32 elements with 16-element (64-byte) chunks: 6 chunks, 5 pad
+    tree = {"w": jnp.arange(91, dtype=jnp.float32)}
+    packer = WirePacker.plan(tree, chunk_bytes=64)
+    (g,) = packer.groups
+    assert (g.chunk_elems, g.n_chunks) == (16, 6)
+    (buf,) = packer.pack(tree)
+    assert buf.shape == (6, 16)
+    assert float(jnp.sum(buf)) == float(jnp.sum(tree["w"]))  # pad is zeros
+    np.testing.assert_array_equal(
+        np.asarray(packer.unpack((buf,))["w"]), np.asarray(tree["w"])
+    )
+
+
+def test_identity_codec_bit_exact():
+    codec = get_codec("identity")
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 32)), jnp.float32)
+    assert codec.decode_leaf(codec.encode_leaf(x)) is x
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode_chunk(codec.encode_chunks(x)[0])),
+        np.asarray(x[0]),
+    )
+
+
+def test_bf16_codec_roundtrip():
+    codec = get_codec("bf16")
+    exact = jnp.asarray([0.5, 1.0, -2.25, 128.0], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode_leaf(codec.encode_leaf(exact))), np.asarray(exact)
+    )
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(3, 64)), jnp.float32)
+    dec = codec.decode_chunk(codec.encode_chunks(x)[1])
+    assert float(jnp.max(jnp.abs(dec - x[1]))) < 0.02
+    # non-f32 leaves pass through untouched
+    ids = jnp.arange(5, dtype=jnp.int32)
+    assert codec.encode_leaf(ids) is ids
+
+
+def test_int8_codec_per_chunk_scales_and_error_bound():
+    codec = get_codec("int8")
+    rng = np.random.default_rng(3)
+    # two chunks of very different magnitude: per-chunk scales keep the
+    # small chunk's relative error bounded
+    x = jnp.asarray(
+        np.stack([rng.normal(size=256) * 100.0, rng.normal(size=256) * 0.01]),
+        jnp.float32,
+    )
+    wire = codec.encode_chunks(x)
+    assert wire["q"].dtype == jnp.int8
+    assert wire["scale"].shape == (2, 1)
+    for k in range(2):
+        chunk = {"q": wire["q"][k], "scale": wire["scale"][k]}
+        dec = np.asarray(codec.decode_chunk(chunk))
+        ref = np.asarray(x[k])
+        assert np.abs(dec - ref).max() <= np.abs(ref).max() / 127.0 * 1.01
+
+
+def test_wire_bytes_accounting():
+    tree = {"w": jnp.zeros((1024,), jnp.float32), "i": jnp.zeros((64,), jnp.int32)}
+    packer = WirePacker.plan(tree, chunk_bytes=1024)
+    raw = packer.raw_bytes()
+    assert raw == 1024 * 4 + 64 * 4
+    assert raw / packer.encoded_bytes("int8") > 2.0  # acceptance floor
+    assert packer.encoded_bytes("bf16") == 1024 * 2 + 64 * 4
+    assert leaf_encoded_bytes(tree, "int8") == 1024 + 4 + 64 * 4
+
+
+def test_error_feedback_tracks_true_sum():
+    rng = np.random.default_rng(4)
+    g = {"w": jnp.asarray(rng.normal(size=128), jnp.float32)}
+    codec = get_codec("int8")
+    res = init_residual(g)
+    total_true = np.zeros(128)
+    total_sent = np.zeros(128)
+    for _ in range(50):
+        corrected, res = compress_with_feedback(g, res, codec)
+        sent = codec.decode_leaf(codec.encode_leaf(corrected["w"]))
+        total_true += np.asarray(g["w"])
+        total_sent += np.asarray(sent)
+    rel = np.abs(total_sent - total_true).max() / np.abs(total_true).max()
+    assert rel < 0.01, rel
+
+
+def test_wire_spec_normalization_and_unknown_codec():
+    assert WireSpec.of(None) == WireSpec()
+    assert WireSpec.of("int8").codec == "int8"
+    spec = WireSpec(codec="int8", chunk_bytes=4096)
+    assert WireSpec.of(spec) is spec
+    with pytest.raises(KeyError):
+        get_codec("zstd")
+    # codec INSTANCES survive normalization (custom/unregistered codecs
+    # must not be collapsed to a name that get_codec cannot resolve)
+    inst = CODECS["bf16"]
+    assert WireSpec.of(inst).codec is inst
+    assert get_codec(WireSpec.of(inst).codec) is inst
+
+
+def test_int8_codec_covers_bf16_leaves():
+    # compress="int8" must not silently no-op on bf16 grads: the codec
+    # applies to every float dtype, like the historic per-leaf path
+    codec = get_codec("int8")
+    g = jnp.asarray(np.random.default_rng(5).normal(size=64), jnp.float32)
+    for dtype in (jnp.bfloat16, jnp.float32):
+        x = g.astype(dtype)
+        assert codec.applies(x.dtype)
+        wire = codec.encode_leaf(x)
+        assert set(wire) == {"q", "scale"} and wire["q"].dtype == jnp.int8
+        dec = np.asarray(codec.decode_leaf(wire))
+        ref = np.asarray(x, np.float32)
+        assert np.abs(dec - ref).max() <= np.abs(ref).max() / 127.0 * 1.01
+    assert not codec.applies(jnp.int32)
+    assert not get_codec("bf16").applies(jnp.bfloat16)  # already 2 bytes
+
+
+def test_error_feedback_matches_chunked_wire():
+    # the residual must be computed against the SAME granularity the
+    # wire applies: with chunks of wildly different magnitude, a
+    # per-leaf round trip diverges from the per-chunk wire error
+    rng = np.random.default_rng(6)
+    g = {"w": jnp.asarray(
+        np.concatenate([rng.normal(size=64) * 100.0, rng.normal(size=64) * 0.01]),
+        jnp.float32,
+    )}
+    codec = get_codec("int8")
+    chunk_bytes = 256  # 64 f32 elements per chunk
+    corrected, res = compress_with_feedback(
+        g, init_residual(g), codec, chunk_bytes=chunk_bytes
+    )
+    packer = WirePacker.plan(corrected, chunk_bytes)
+    (buf,) = packer.pack(corrected)
+    onwire = packer.unpack((codec.decode_chunk(codec.encode_chunks(buf)),))
+    actual_err = np.asarray(corrected["w"]) - np.asarray(onwire["w"])
+    np.testing.assert_allclose(np.asarray(res["w"]), actual_err, atol=1e-6)
+
+
+def test_graph_edge_wire_declaration_reaches_channel():
+    from repro.core import ServiceGraph
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    graph = ServiceGraph.build(
+        mesh,
+        stages={"reduce": 0.5},
+        edges=[("compute", "reduce")],
+        wire={("compute", "reduce"): WireSpec(codec="int8", chunk_bytes=8192)},
+        min_compute_rows=0,
+    )
+    ch = graph.channel("compute", "reduce")
+    assert ch.codec.name == "int8"
+    assert ch.chunk_bytes == 8192
+    with pytest.raises(KeyError):
+        ServiceGraph.build(
+            mesh,
+            stages={"reduce": 0.5},
+            edges=[("compute", "reduce")],
+            wire={("reduce", "compute"): "int8"},
+            min_compute_rows=0,
+        )
+
+
+def test_resolve_interpret_auto_detect():
+    import jax
+
+    from repro.kernels.runtime import on_tpu, resolve_interpret
+
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    expected = jax.default_backend() != "tpu"
+    assert on_tpu() == (not expected)
+    assert resolve_interpret(None) is expected
