@@ -1,0 +1,366 @@
+"""Fig. 12 (beyond-paper): static vs adaptive alpha under drifting skew.
+
+The paper fixes each decoupled group's alpha per run (tuned empirically,
+Fig. 5); its own load-imbalance argument says that sizing goes stale the
+moment the skew drifts. This figure closes the loop with
+`core/adapt.py` and evaluates it two ways (DESIGN.md §8 methodology):
+
+Model-driven closed loop (P=64)
+    A chained compute -> reduce -> io application whose TRUE per-
+    superstep cost follows Eq. 4' with a mid-run skew shift: per-row
+    work skew jumps (T_sigma grows) and the reduce stage's item count
+    is amplified 4x (straggler splits / hot keys). Three controllers
+    run the same trajectory:
+
+      static     rows frozen at the pre-shift optimum (the paper's
+                 tuned-alpha baseline);
+      adaptive   the `ReplanController` closed loop — it sees ONLY the
+                 measured (wall, per-row work, stage items) samples,
+                 calibrates online, and regroups behind hysteresis;
+      oracle     `recommend_allocation` fed the true post-shift load.
+
+    Claimed (asserted): the adaptive controller recovers at least
+    RECOVER_FRAC of the oracle throughput within RECOVER_WITHIN
+    supersteps of the shift, with at most MAX_REGROUPS regroups (no
+    oscillation), while the static baseline stays below STATIC_CEIL.
+
+Measured 8-device mechanism checks
+    (a) no-op hysteresis: the adaptive wordcount under a balanced
+        corpus must never regroup and must stay BIT-IDENTICAL to the
+        static `ServiceGraph` run, superstep by superstep;
+    (b) drifting current sheet: the adaptive PIC run must regroup at
+        least once while conserving every particle across the
+        in-memory migration (`elastic.reshard_state`).
+
+The closed-loop decisions are deterministic: predicted speedups are
+ratios of two Eq.-4' evaluations that both scale linearly in the
+measured wall clock, so host timing noise cancels out of the plan.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # self-sufficient standalone invocation (CI runs
+    # `python benchmarks/fig12_adaptive.py --quick`): fake devices and
+    # paths must be in place BEFORE jax / repro are imported below
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_REPO, os.path.join(_REPO, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import numpy as np
+
+from benchmarks.util import csv_row
+from repro.core.adapt import AdaptPolicy, ReplanController, StageTrait
+from repro.core.imbalance import empirical_sigma, skewed_partition
+from repro.core.perfmodel import (
+    StageWorkload,
+    StreamCosts,
+    recommend_allocation,
+    t_decoupled_chain,
+)
+
+LAST: dict = {}
+
+# -- closed-loop simulation -------------------------------------------------------
+
+N_ROWS = 64
+TOTAL_WORK = 200_000.0
+T_UNIT = 1e-6  # true seconds per work item on one row
+TRAITS = (
+    StageTrait("reduce", cost_ratio=0.05, bytes_per_item=8.0),
+    StageTrait("io", cost_ratio=0.02, bytes_per_item=2.0),
+)
+POLICY = AdaptPolicy(window=2, cooldown=1, speedup_threshold=1.15)
+RECOVER_FRAC = 0.85  # adaptive must reach this fraction of oracle throughput
+RECOVER_WITHIN = 4  # ... within this many supersteps of the shift
+STATIC_CEIL = 0.60  # the frozen baseline must stay below this fraction
+MAX_REGROUPS = 2
+
+
+def _phase(t: int, shift_at: int) -> tuple[float, float]:
+    """(work skew, reduce hot-key amplification) of superstep t.
+
+    The shift models severe straggler splits: per-row work skew jumps
+    and hot keys amplify the reduce stage's item count 20x."""
+    return (0.15, 1.0) if t < shift_at else (1.0, 20.0)
+
+
+def _true_model(work, items) -> tuple[float, list[StageWorkload], float]:
+    """(t_w0, stages, sigma) of the true world — ONE place for the cost
+    model, shared by the simulated supersteps and the oracle so both
+    always score against the same Eq.-4' instance."""
+    n_compute = work.shape[-1]
+    stages = [
+        StageWorkload(
+            tr.name,
+            t_op=tr.cost_ratio * T_UNIT * items[tr.name] / N_ROWS,
+            d_bytes=tr.bytes_per_item * items[tr.name] / N_ROWS,
+        )
+        for tr in TRAITS
+    ]
+    t_w0 = T_UNIT * work.mean() * n_compute / N_ROWS
+    sigma = empirical_sigma(work, T_UNIT) * n_compute / N_ROWS
+    return t_w0, stages, sigma
+
+
+def _true_superstep(rows: dict[str, int], skew: float, hot: float, rng):
+    """The world: Eq.-4' cost of one superstep at the given allocation,
+    plus the observables the controller is allowed to see."""
+    n_compute = N_ROWS - sum(rows.values())
+    work = skewed_partition(int(TOTAL_WORK), n_compute, skew, rng).astype(float)
+    items = {"reduce": TOTAL_WORK * hot, "io": TOTAL_WORK}
+    t_w0, stages, sigma = _true_model(work, items)
+    wall = t_decoupled_chain(
+        t_w0, stages, sigma, N_ROWS, rows, POLICY.s_bytes,
+        StreamCosts(o_seconds=POLICY.o_seconds),
+    )
+    return wall, work, items
+
+
+def _oracle_rows(skew: float, hot: float, seed: int = 1234) -> dict[str, int]:
+    """recommend_allocation on the TRUE load of one phase."""
+    rng = np.random.default_rng(seed)
+    probe = {tr.name: 1 for tr in TRAITS}
+    _, work, items = _true_superstep(probe, skew, hot, rng)
+    t_w0, stages, sigma = _true_model(work, items)
+    plan = recommend_allocation(
+        t_w0, stages, sigma, N_ROWS, POLICY.s_bytes,
+        StreamCosts(o_seconds=POLICY.o_seconds),
+        row_budget=N_ROWS // 2,
+    )
+    return dict(plan.rows)
+
+
+def simulate(supersteps: int = 14, shift_at: int = 6, seed: int = 0) -> dict:
+    rows0 = _oracle_rows(*_phase(0, shift_at))
+    oracle_post = _oracle_rows(*_phase(shift_at, shift_at))
+    ctl = ReplanController(N_ROWS, dict(rows0), TRAITS, POLICY)
+    rng = {name: np.random.default_rng(seed) for name in ("static", "adaptive")}
+    traj: list[dict] = []
+    regroups = 0
+    for t in range(supersteps):
+        skew, hot = _phase(t, shift_at)
+        wall_static, _, _ = _true_superstep(rows0, skew, hot, rng["static"])
+        wall_adapt, work, items = _true_superstep(
+            ctl.rows, skew, hot, rng["adaptive"]
+        )
+        wall_oracle, _, _ = _true_superstep(
+            rows0 if t < shift_at else oracle_post, skew, hot,
+            np.random.default_rng(seed + t),
+        )
+        decision = ctl.step(wall_adapt, work, items)
+        if decision.regroup:
+            ctl.apply(decision)
+            regroups += 1
+        traj.append(
+            {
+                "superstep": t,
+                "phase": "pre" if t < shift_at else "post",
+                "wall_static": wall_static,
+                "wall_adaptive": wall_adapt,
+                "wall_oracle": wall_oracle,
+                "rows_adaptive": dict(ctl.rows),
+                "regrouped": decision.regroup,
+            }
+        )
+    # recovery: first post-shift superstep where adaptive clears the bar
+    post = [r for r in traj if r["phase"] == "post"]
+    recovered_at = next(
+        (
+            r["superstep"] - shift_at
+            for r in post
+            if r["wall_oracle"] / r["wall_adaptive"] >= RECOVER_FRAC
+        ),
+        None,
+    )
+    tail = post[-1]
+    claims = {
+        "rows_pre": rows0,
+        "rows_oracle_post": oracle_post,
+        "rows_adaptive_final": dict(ctl.rows),
+        "regroups": regroups,
+        "recovered_within_supersteps": recovered_at,
+        "adaptive_final_frac_of_oracle": tail["wall_oracle"] / tail["wall_adaptive"],
+        "static_final_frac_of_oracle": tail["wall_oracle"] / tail["wall_static"],
+    }
+    assert recovered_at is not None and recovered_at <= RECOVER_WITHIN, claims
+    assert claims["adaptive_final_frac_of_oracle"] >= RECOVER_FRAC, claims
+    assert claims["static_final_frac_of_oracle"] < STATIC_CEIL, claims
+    assert regroups <= MAX_REGROUPS, claims
+    return {"trajectory": traj, "claims": claims, "shift_at": shift_at}
+
+
+# -- measured 8-device mechanism checks -------------------------------------------
+
+
+def measure_noop(mesh, quick: bool) -> dict:
+    """Balanced corpus: the hysteresis must hold and the output must be
+    bit-identical to the static ServiceGraph path, every superstep."""
+    from repro.apps.mapreduce import CorpusCfg, run_wordcount, run_wordcount_adaptive
+
+    import dataclasses as _dc
+
+    cfg = CorpusCfg(
+        n_docs_per_row=2 if quick else 4,
+        words_per_doc=256 if quick else 512,
+        vocab=512,
+        skew=0.0,
+    )
+    supersteps = 2 if quick else 3
+    report, ag = run_wordcount_adaptive(
+        mesh, cfg, supersteps=supersteps, alpha0=0.25, skew_schedule=lambda t: 0.0
+    )
+    assert not any(r["regrouped"] for r in report), [r["decision"] for r in report]
+    for t, r in enumerate(report):
+        cfg_t = _dc.replace(cfg, seed=cfg.seed + t)
+        h_static, _ = run_wordcount(mesh, "decoupled", cfg_t, alpha=0.25)
+        np.testing.assert_array_equal(r["histogram"], h_static)
+    return {
+        "supersteps": supersteps,
+        "bit_identical": True,
+        "regroups": 0,
+        "wall_s": float(np.mean([r["wall_s"] for r in report])),
+    }
+
+
+def measure_pic_drift(mesh, quick: bool) -> dict:
+    """Drifting current sheet: the loop must regroup at least once and
+    conserve every particle across the in-memory migration."""
+    from repro.apps.pic import PICCfg, run_pic_adaptive
+
+    cfg = PICCfg(
+        capacity=1024,
+        n_particles_total=1024,
+        n_steps=2,
+        dt=0.1,
+        skew=0.9,
+        sheet_center0=0.25,
+        drift=0.12,
+        attract=2.0,
+    )
+    report, ag, _state = run_pic_adaptive(
+        mesh,
+        cfg,
+        alpha0=0.25,
+        supersteps=3 if quick else 5,
+        policy=AdaptPolicy(window=2, cooldown=1, speedup_threshold=1.05),
+    )
+    regroups = sum(r["regrouped"] for r in report)
+    conserved = all(r["n_particles"] == cfg.n_particles_total for r in report)
+    assert regroups >= 1, [r["decision"] for r in report]
+    assert conserved, [r["n_particles"] for r in report]
+    return {
+        "supersteps": len(report),
+        "regroups": int(regroups),
+        "conserved": conserved,
+        "rows_final": report[-1]["rows"],
+        "wall_s": float(np.mean([r["wall_s"] for r in report])),
+    }
+
+
+# -- report -----------------------------------------------------------------------
+
+
+def _report(mesh, quick: bool) -> list[str]:
+    sim = simulate(supersteps=10 if quick else 14, shift_at=4 if quick else 6)
+    noop = measure_noop(mesh, quick)
+    pic = measure_pic_drift(mesh, quick)
+    LAST.clear()
+    LAST.update(
+        {
+            "figure": "fig12_adaptive",
+            "policy": {
+                "window": POLICY.window,
+                "cooldown": POLICY.cooldown,
+                "speedup_threshold": POLICY.speedup_threshold,
+            },
+            "sim": sim,
+            "noop_8dev": noop,
+            "pic_8dev": pic,
+        }
+    )
+    c = sim["claims"]
+    out = []
+    pre = sim["trajectory"][0]
+    post = sim["trajectory"][-1]
+    out.append(
+        csv_row(
+            "fig12_adaptive_sim_pre",
+            pre["wall_adaptive"] * 1e6,
+            rows="|".join(f"{k}:{v}" for k, v in c["rows_pre"].items()),
+        )
+    )
+    for mode in ("static", "adaptive", "oracle"):
+        out.append(
+            csv_row(
+                f"fig12_adaptive_sim_post_{mode}",
+                post[f"wall_{mode}"] * 1e6,
+                frac_of_oracle=f"{post['wall_oracle'] / post[f'wall_{mode}']:.3f}",
+            )
+        )
+    out.append(
+        csv_row(
+            "fig12_adaptive_sim_claims",
+            0.0,
+            recovered_within=str(c["recovered_within_supersteps"]),
+            adaptive_frac=f"{c['adaptive_final_frac_of_oracle']:.3f}",
+            static_frac=f"{c['static_final_frac_of_oracle']:.3f}",
+            regroups=str(c["regroups"]),
+        )
+    )
+    out.append(
+        csv_row(
+            "fig12_adaptive_noop_8dev",
+            noop["wall_s"] * 1e6,
+            bit_identical=str(noop["bit_identical"]),
+            regroups=str(noop["regroups"]),
+        )
+    )
+    out.append(
+        csv_row(
+            "fig12_adaptive_pic_8dev",
+            pic["wall_s"] * 1e6,
+            regroups=str(pic["regroups"]),
+            conserved=str(pic["conserved"]),
+            rows_final="|".join(f"{k}:{v}" for k, v in pic["rows_final"].items()),
+        )
+    )
+    return out
+
+
+def run(mesh) -> list[str]:
+    return _report(mesh, quick=False)
+
+
+def run_quick(mesh) -> list[str]:
+    """CI smoke: small corpus/particle counts, fewer supersteps."""
+    return _report(mesh, quick=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--quick", action="store_true")
+    parser.add_argument(
+        "--json",
+        default=os.path.join(_REPO, "BENCH_adaptive.json"),
+        help="where to write the adaptive trajectory record",
+    )
+    args = parser.parse_args()
+
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    print("name,us_per_call,derived")
+    for line in (run_quick if args.quick else run)(mesh):
+        print(line)
+    with open(args.json, "w") as f:
+        json.dump(LAST, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"# wrote {args.json}", file=sys.stderr)

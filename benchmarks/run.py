@@ -18,13 +18,54 @@ when it defines one — the CI smoke that keeps the drivers from rotting.
 
 Every run also writes ``BENCH_channel.json`` at the repo root: the
 machine-readable perf trajectory (per-figure wall seconds + CSV rows,
-plus the structured ChannelWire record from ``fig11_channel``) that
-future PRs diff against as a baseline. CI uploads it as an artifact.
+plus the structured ChannelWire record from ``fig11_channel``) and
+``BENCH_adaptive.json`` (the AdaptiveGraph record from
+``fig12_adaptive``). Before overwriting, the previous committed
+``BENCH_channel.json`` is read back and a per-figure wall-seconds delta
+is printed — a WARNING (never a failure: containers differ) flags any
+figure >20% slower than the baseline, so the perf trajectory is
+actually consumed, not just written. CI uploads both JSONs as
+artifacts.
 """
 import argparse
 import json
 import time
 import traceback
+
+REGRESSION_WARN = 0.20  # warn when a figure is >20% slower than baseline
+
+
+def compare_to_baseline(baseline: dict | None, figures: dict) -> list[str]:
+    """Per-figure wall-seconds delta vs the previously committed run.
+
+    Returns printable report lines; regressions beyond REGRESSION_WARN
+    are flagged as WARNING but never fail the run (quick-mode configs
+    and container wall clocks are too noisy for a hard gate)."""
+    lines = []
+    if not baseline or "figures" not in baseline:
+        return ["# baseline: none found, skipping delta report"]
+    if baseline.get("quick") != figures.get("quick"):
+        lines.append(
+            "# baseline: quick/full mismatch "
+            f"(baseline quick={baseline.get('quick')}), deltas are indicative only"
+        )
+    base_figs = baseline["figures"]
+    for name, rec in figures["figures"].items():
+        if "error" in rec or "error" in base_figs.get(name, {}):
+            # time-to-failure is not a wall-seconds measurement
+            lines.append(f"# {name}: errored run on one side, no delta")
+            continue
+        old = base_figs.get(name, {}).get("seconds")
+        new = rec.get("seconds")
+        if not old or not new:
+            lines.append(f"# {name}: no baseline entry")
+            continue
+        delta = (new - old) / old
+        tag = ""
+        if delta > REGRESSION_WARN:
+            tag = f"  WARNING: >{REGRESSION_WARN:.0%} regression"
+        lines.append(f"# {name}: {new:.3f}s vs baseline {old:.3f}s ({delta:+.1%}){tag}")
+    return lines
 
 
 def main() -> None:
@@ -33,6 +74,9 @@ def main() -> None:
                         help="small configs / single rep where supported")
     parser.add_argument("--json", default=os.path.join(_REPO, "BENCH_channel.json"),
                         help="where to write the machine-readable trajectory")
+    parser.add_argument("--adaptive-json",
+                        default=os.path.join(_REPO, "BENCH_adaptive.json"),
+                        help="where to write the AdaptiveGraph record")
     args = parser.parse_args()
 
     import jax
@@ -47,8 +91,16 @@ def main() -> None:
         fig9_disagg_serve,
         fig10_pipeline,
         fig11_channel,
+        fig12_adaptive,
         roofline_table,
     )
+
+    baseline = None
+    try:
+        with open(args.json) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        pass
 
     mesh = make_mesh((8,), ("data",))
     print("name,us_per_call,derived")
@@ -56,7 +108,7 @@ def main() -> None:
     figures: dict[str, dict] = {}
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
-                roofline_table):
+                fig12_adaptive, roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
@@ -87,10 +139,17 @@ def main() -> None:
         "figures": figures,
         "channel": fig11_channel.LAST,  # structured ChannelWire record
     }
+    for line in compare_to_baseline(baseline, trajectory):
+        print(line, file=sys.stderr)
     with open(args.json, "w") as f:
         json.dump(trajectory, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {args.json}", file=sys.stderr)
+    if fig12_adaptive.LAST:
+        with open(args.adaptive_json, "w") as f:
+            json.dump(fig12_adaptive.LAST, f, indent=2, sort_keys=True, default=str)
+            f.write("\n")
+        print(f"# wrote {args.adaptive_json}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import GroupedMesh, ServiceGraph, Stage, delta_emitter, sink_sum_stage
-from repro.core.dataflow import COMPUTE
+from repro.core.adapt import AdaptPolicy, AdaptiveGraph, StageTrait, timed_call
+from repro.core.dataflow import COMPUTE, work_vector
 from repro.core.decouple import group_psum
 from repro.core.imbalance import skewed_partition
 from repro.utils.compat import shard_map
@@ -148,6 +149,42 @@ def decoupled_wordcount(
     total = group_psum(partial, graph.gmesh, "reduce")
     # return the result to every row (so callers can verify anywhere)
     return channel.broadcast_from_consumer(total)
+
+
+def decoupled_wordcount_measured(
+    tokens,
+    mask,
+    vocab: int,
+    graph: ServiceGraph,
+    granularity_words: int = 256,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`decoupled_wordcount` plus the adaptive loop's in-graph counters.
+
+    Returns (histogram, per-row work vector, reduce-stage item count):
+    ``work`` is each row's mapped-token count gathered with one psum
+    (`dataflow.work_vector`); the stage item count is folded THROUGH the
+    channel alongside the histogram (the operator's state carries a
+    token counter, so the channel's arrival masking applies to it
+    exactly as to the payload) and broadcast back from the reducers.
+    """
+    channel = graph.channel(COMPUTE, "reduce")
+    elements, s = _pack_word_elements(tokens, mask, granularity_words)
+    base = _hist_operator(vocab, s)
+
+    def probed(state, elem, k):
+        acc, tokens_seen = state
+        return base(acc, elem, k), tokens_seen + jnp.sum(elem[s:])
+
+    init = (jnp.zeros((vocab,), jnp.float32), jnp.zeros((), jnp.float32))
+    partial, folded_tokens = channel.stream_fold(elements, probed, init)
+    total = group_psum(partial, graph.gmesh, "reduce")
+    stage_tokens = group_psum(folded_tokens, graph.gmesh, "reduce")
+    work = work_vector(graph.gmesh, jnp.sum(mask))
+    return (
+        channel.broadcast_from_consumer(total),
+        work,
+        channel.broadcast_from_consumer(stage_tokens),
+    )
 
 
 # -- pipelined: a chain of service groups (paper Fig. 3c) ------------------------
@@ -266,3 +303,115 @@ def run_wordcount(mesh, mode: str, corpus_cfg: CorpusCfg, alpha: float = 0.25,
     )
     hist_rows = jax.jit(sm)(tokens, mask)  # (rows, vocab): identical rows
     return np.asarray(hist_rows[0]), (tokens, mask)
+
+
+# -- adaptive: close the measure -> plan -> regroup loop -------------------------
+
+
+def wordcount_traits(words_per_doc: int = 512) -> tuple[StageTrait, ...]:
+    """Calibration traits of the reduce stage: folding one token into
+    the histogram costs a fraction of mapping it, and each token
+    crosses the wire as a [key|count] float pair."""
+    del words_per_doc
+    return (StageTrait("reduce", cost_ratio=0.5, bytes_per_item=8.0),)
+
+
+def _jit_measured_wordcount(mesh, graph: ServiceGraph, vocab: int, granularity: int):
+    from jax.sharding import PartitionSpec as P
+
+    def per_row(t, mk):
+        hist, work, stage = decoupled_wordcount_measured(
+            t[0], mk[0], vocab, graph, granularity
+        )
+        return hist[None], work[None], stage[None]
+
+    return jax.jit(
+        shard_map(
+            per_row, mesh, (P("data"), P("data")), (P("data"), P("data"), P("data"))
+        )
+    )
+
+
+def run_wordcount_adaptive(
+    mesh,
+    corpus_cfg: CorpusCfg,
+    *,
+    supersteps: int = 6,
+    alpha0: float = 0.25,
+    skew_schedule=None,  # fn(superstep) -> skew; default: the cfg's skew
+    policy: AdaptPolicy | None = None,
+    granularity_words: int = 256,
+    wire_codec: str = "identity",
+):
+    """The decoupled wordcount under the closed adaptive loop.
+
+    Each superstep draws a fresh corpus at ``skew_schedule(t)`` (the
+    paper's straggler splits: skewed document lengths), lays it out over
+    the CURRENT compute rows, runs the measured decoupled histogram, and
+    feeds (wall seconds, per-row tokens, reduce-stage tokens) to an
+    `AdaptiveGraph`. When the planner's hysteresis clears, the graph is
+    regrouped; migration is the map-side re-layout of the next corpus
+    over the new row partition (documents are stateless between
+    supersteps), and the step is re-traced per distinct partition.
+
+    Returns (per-superstep report, AdaptiveGraph). Every superstep's
+    histogram is exact, so callers can verify correctness across
+    regroups against a host-side count.
+    """
+    n_rows = mesh.shape["data"]
+    graph0 = ServiceGraph.build(
+        mesh,
+        stages={"reduce": alpha0},
+        edges=[(COMPUTE, "reduce")],
+        wire={(COMPUTE, "reduce"): wire_codec},
+    )
+    # threshold 1.25: a regroup costs a re-trace plus a corpus re-layout,
+    # so marginal modeled wins (balanced load plans ~1.1x from rounding
+    # alpha) must not fire — only genuine skew shifts clear the gate
+    ag = AdaptiveGraph(
+        graph0,
+        traits=wordcount_traits(corpus_cfg.words_per_doc),
+        policy=policy or AdaptPolicy(window=2, cooldown=1, speedup_threshold=1.25),
+    )
+    compiled: dict[int, object] = {}
+    report = []
+    for t in range(supersteps):
+        graph = ag.graph
+        work_rows = graph.gmesh.compute.size
+        skew = corpus_cfg.skew if skew_schedule is None else float(skew_schedule(t))
+        cfg_t = dataclasses.replace(corpus_cfg, skew=skew, seed=corpus_cfg.seed + t)
+        total_docs = cfg_t.n_docs_per_row * n_rows
+        all_tokens, all_mask = make_corpus(cfg_t, total_docs)
+        tokens, mask = layout_corpus(all_tokens, all_mask, work_rows, n_rows)
+        if work_rows not in compiled:
+            compiled[work_rows] = _jit_measured_wordcount(
+                mesh, graph, cfg_t.vocab, granularity_words
+            )
+            # compile outside the measurement: a ledger sample polluted by
+            # jit time would mis-calibrate t_unit by orders of magnitude
+            jax.block_until_ready(compiled[work_rows](tokens, mask))
+        (hist_rows, work_rows_vec, stage_rows), wall = timed_call(
+            compiled[work_rows], tokens, mask
+        )
+        hist = np.asarray(hist_rows[0])
+        work = np.asarray(work_rows_vec[0])[:work_rows]
+        stage_tokens = float(np.asarray(stage_rows)[0])
+        decision = ag.step(wall, work, stage_items={"reduce": stage_tokens})
+        if decision.regroup:
+            ag.apply(decision)
+        report.append(
+            {
+                "superstep": t,
+                "skew": skew,
+                "wall_s": wall,
+                "rows": {"reduce": graph.gmesh.group("reduce").size},
+                "work_cv": float(work.std() / max(work.mean(), 1e-9)),
+                "histogram": hist,
+                "tokens": np.asarray(all_mask).sum(),
+                "regrouped": decision.regroup,
+                "decision": decision.reason if not decision.regroup else str(
+                    decision.rows
+                ),
+            }
+        )
+    return report, ag

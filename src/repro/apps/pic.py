@@ -37,8 +37,9 @@ import numpy as np
 from jax import lax
 
 from repro.core import GroupedMesh, ServiceGraph, StreamChunker, buffer_op
-from repro.core.dataflow import COMPUTE
-from repro.core.imbalance import skewed_partition
+from repro.core.adapt import AdaptPolicy, AdaptiveGraph, StageTrait, timed_call
+from repro.core.dataflow import COMPUTE, work_vector
+from repro.core.imbalance import sheet_partition, skewed_partition
 from repro.utils.compat import shard_map
 
 
@@ -51,12 +52,33 @@ class PICCfg:
     skew: float = 0.8
     seed: int = 3
     n_steps: int = 4
+    # time-varying skew (the adaptive loop's drill, run_pic_adaptive):
+    # the GEM current sheet sits at `sheet_center0` (fraction of the
+    # domain) and drifts `drift` domain units per step; `attract` pulls
+    # particle velocities toward the sheet so the density concentration
+    # follows it across row boundaries.
+    sheet_center0: float = 0.35
+    sheet_width: float = 0.08
+    drift: float = 0.0
+    attract: float = 0.0
 
 
-def init_particles(cfg: PICCfg, work_rows: int):
-    """Skewed initial distribution over compute rows (GEM current sheet)."""
+def init_particles(cfg: PICCfg, work_rows: int, center: float | None = None):
+    """Skewed initial distribution over compute rows (GEM current sheet).
+
+    With ``center`` the concentration is the *deterministic* sheet
+    profile (`imbalance.sheet_partition`) around that fractional
+    position — the drifting-skew scenario; default keeps the historic
+    shuffled Zipf placement.
+    """
     rng = np.random.default_rng(cfg.seed)
-    counts = skewed_partition(cfg.n_particles_total, work_rows, cfg.skew, rng)
+    if center is None:
+        counts = skewed_partition(cfg.n_particles_total, work_rows, cfg.skew, rng)
+    else:
+        counts = sheet_partition(
+            cfg.n_particles_total, work_rows, min(cfg.skew, 1.0), center,
+            width=cfg.sheet_width,
+        )
     counts = np.minimum(counts, cfg.capacity)
     xs = np.zeros((work_rows, cfg.capacity), np.float32)
     vs = np.zeros((work_rows, cfg.capacity), np.float32)
@@ -70,8 +92,16 @@ def init_particles(cfg: PICCfg, work_rows: int):
     return jnp.asarray(xs), jnp.asarray(vs), jnp.asarray(valid)
 
 
-def _push(x, v, valid, dt, domain):
-    """Move particles; reflecting walls at the global domain ends."""
+def _push(x, v, valid, dt, domain, attract: float = 0.0, center=0.0):
+    """Move particles; reflecting walls at the global domain ends.
+
+    ``attract > 0`` adds a restoring pull toward ``center`` (the
+    drifting current sheet) so the density concentration follows the
+    sheet; the default 0.0 keeps the historic field-free push
+    bit-for-bit (the branch is resolved at trace time).
+    """
+    if attract:
+        v = v + attract * (center - x) * dt * valid
     x = x + v * dt * valid
     v = jnp.where((x < 0) | (x > domain), -v, v)
     x = jnp.clip(x, 0.0, domain - 1e-6)
@@ -270,6 +300,182 @@ def run_pic(mesh, mode: str, cfg: PICCfg, alpha: float = 0.125,
     if with_io:
         return out + (np.asarray(io_chunks),)
     return out
+
+
+# -- adaptive: chase the drifting current sheet ------------------------------------------
+
+
+def pic_traits() -> tuple[StageTrait, ...]:
+    """Comm-stage calibration: bucketing + delivering one exiting
+    particle costs a few pushes, and each exit crosses the wire as
+    (x, v, mass, dst) float32s."""
+    return (StageTrait("comm", cost_ratio=4.0, bytes_per_item=16.0),)
+
+
+def _particle_repartition(capacity: int, domain: float):
+    """reshard_state hook: re-bin the surviving particles by owner row
+    under the NEW compute width (regrouping moves the domain decomposition,
+    so ownership must be re-derived, not re-dealt)."""
+
+    def repartition(host, old_gmesh, new_gmesh):
+        x, v, m = host["x"], host["v"], host["m"]
+        sel = m > 0
+        xs, vs = x[sel], v[sel]
+        rows = new_gmesh.compute.size
+        width = domain / rows
+        owner = np.clip(np.floor(xs / width).astype(np.int64), 0, rows - 1)
+        out = {
+            "x": np.zeros((rows, capacity), np.float32),
+            "v": np.zeros((rows, capacity), np.float32),
+            "m": np.zeros((rows, capacity), np.float32),
+        }
+        for r in range(rows):
+            # overflow truncates; run_pic_adaptive verifies conservation
+            # right after the migration and raises on any drop
+            idx = np.where(owner == r)[0][:capacity]
+            out["x"][r, : len(idx)] = xs[idx]
+            out["v"][r, : len(idx)] = vs[idx]
+            out["m"][r, : len(idx)] = 1.0
+        return out
+
+    return repartition
+
+
+def _jit_adaptive_pic(mesh, graph: ServiceGraph, cfg: PICCfg, n_steps: int):
+    """One superstep (n_steps pushes + decoupled comm) for one row
+    partition, with the in-graph counters: per-row valid-particle work
+    vector and the total exit traffic (the comm stage's item count)."""
+    from jax.sharding import PartitionSpec as P
+
+    gmesh = graph.gmesh
+    width = cfg.domain / gmesh.compute.size
+
+    def per_row(x, v, m, center):
+        x, v, m = x[0], v[0], m[0]
+        row = lax.axis_index(gmesh.axis)
+
+        def step(carry, _):
+            x, v, m = carry
+            x, v = _push(x, v, m, cfg.dt, cfg.domain, cfg.attract, center)
+            owner = _owner(x, width)
+            leaving = (owner != row) & (m > 0) & (row < gmesh.compute.stop)
+            exits = jnp.sum(jnp.where(leaving, 1.0, 0.0))
+            x, v, m = comm_decoupled(x, v, m, graph, width)
+            return (x, v, m), exits
+
+        (x, v, m), exits = lax.scan(step, (x, v, m), None, length=n_steps)
+        work = work_vector(gmesh, jnp.sum(m))
+        total_exits = lax.psum(jnp.sum(exits), gmesh.axis)
+        return x[None], v[None], m[None], work[None], total_exits[None]
+
+    return jax.jit(
+        shard_map(
+            per_row, mesh,
+            (P("data"), P("data"), P("data"), P()),
+            (P("data"), P("data"), P("data"), P("data"), P("data")),
+        )
+    )
+
+
+def run_pic_adaptive(
+    mesh,
+    cfg: PICCfg,
+    *,
+    alpha0: float = 0.125,
+    supersteps: int = 4,
+    steps_per_superstep: int | None = None,
+    policy: AdaptPolicy | None = None,
+):
+    """PIC with a drifting current sheet under the closed adaptive loop.
+
+    Each superstep advances the sheet center by ``cfg.drift *
+    steps_per_superstep`` and runs the jitted superstep for the CURRENT
+    row partition; (wall, per-row particle counts, exit traffic) feed
+    the `AdaptiveGraph`. On a regroup the particle buffers are migrated
+    in memory (`launch.elastic.reshard_state` with per-owner
+    re-binning — the new domain decomposition re-derives ownership) and
+    the superstep is re-traced.
+
+    Returns (report, AdaptiveGraph, final state dict). Particle count
+    is conserved across regroups while capacity suffices (the report
+    carries per-superstep totals so tests can assert it).
+    """
+    from repro.launch.elastic import reshard_state
+
+    n_rows = mesh.shape["data"]
+    steps = steps_per_superstep or cfg.n_steps
+    graph = ServiceGraph.build(
+        mesh, stages={"comm": alpha0}, edges=[(COMPUTE, "comm")]
+    )
+    ag = AdaptiveGraph(
+        graph,
+        traits=pic_traits(),
+        policy=policy or AdaptPolicy(window=2, cooldown=1, speedup_threshold=1.25),
+    )
+    work_rows = graph.gmesh.compute.size
+    xs, vs, valid = init_particles(cfg, work_rows, center=cfg.sheet_center0)
+    pad = n_rows - work_rows
+    state = {
+        "x": np.concatenate([xs, np.zeros((pad, cfg.capacity), np.float32)]),
+        "v": np.concatenate([vs, np.zeros((pad, cfg.capacity), np.float32)]),
+        "m": np.concatenate([valid, np.zeros((pad, cfg.capacity), np.float32)]),
+    }
+    state = {k: jnp.asarray(a) for k, a in state.items()}
+    compiled: dict[int, object] = {}
+    report = []
+    center = cfg.sheet_center0
+    for t in range(supersteps):
+        graph = ag.graph
+        work_rows = graph.gmesh.compute.size
+        if work_rows not in compiled:
+            compiled[work_rows] = _jit_adaptive_pic(mesh, graph, cfg, steps)
+            # compile outside the ledger's wall-clock sample
+            jax.block_until_ready(
+                compiled[work_rows](state["x"], state["v"], state["m"],
+                                    jnp.float32(center))
+            )
+        (x, v, m, work_vec, exits), wall = timed_call(
+            compiled[work_rows], state["x"], state["v"], state["m"],
+            jnp.float32(center),
+        )
+        state = {"x": x, "v": v, "m": m}
+        work = np.asarray(work_vec)[0][:work_rows]
+        total_exits = float(np.asarray(exits)[0])
+        decision = ag.step(wall, work, stage_items={"comm": total_exits})
+        regrouped = False
+        if decision.regroup:
+            old_gmesh = graph.gmesh
+            ag.apply(decision)
+            n_before = float(np.asarray(state["m"]).sum())
+            state = reshard_state(
+                state, old_gmesh, ag.graph.gmesh,
+                repartition=_particle_repartition(cfg.capacity, cfg.domain),
+            )
+            n_after = float(np.asarray(state["m"]).sum())
+            if n_after != n_before:
+                raise RuntimeError(
+                    f"regroup at superstep {t} dropped "
+                    f"{n_before - n_after:.0f} particles: a destination row "
+                    f"overflowed capacity={cfg.capacity}; raise the capacity "
+                    f"or lower the concentration"
+                )
+            regrouped = True
+        ran_center = center  # the center THIS superstep ran with
+        center = float(np.clip(center + cfg.drift * steps, 0.05, 0.95))
+        report.append(
+            {
+                "superstep": t,
+                "center": ran_center,
+                "wall_s": wall,
+                "rows": {"comm": graph.gmesh.group("comm").size},
+                "n_particles": float(np.asarray(m).sum()),
+                "exits": total_exits,
+                "work_cv": float(work.std() / max(work.mean(), 1e-9)),
+                "regrouped": regrouped,
+                "decision": str(decision.rows) if regrouped else decision.reason,
+            }
+        )
+    return report, ag, state
 
 
 def histogram_positions(x, m, bins: int, domain: float):

@@ -142,6 +142,35 @@ class ServiceGraph:
             wires=tuple(wires),
         )
 
+    # -- regrouping (the adaptive loop's actuator) -------------------------
+    def regroup(
+        self, rows: Mapping[str, int], *, min_compute_rows: int = 1
+    ) -> "ServiceGraph":
+        """Rebuild the row partition between supersteps: same mesh, same
+        edges and wires, a new per-stage row vector (DESIGN.md §10).
+
+        ``rows`` must name exactly the current service groups — regroup
+        re-SIZES the topology, it does not re-shape it. Callers are
+        responsible for migrating any row-partitioned state onto the new
+        layout (`launch.elastic.reshard_state`) and for re-tracing their
+        step: group bounds are static in the SPMD program, so a regroup
+        implies a recompile — which is why the planner's hysteresis
+        (core/adapt.py) only fires when the predicted win clears it.
+        """
+        names = {g.name for g in self.gmesh.service_groups}
+        if set(rows) != names:
+            raise KeyError(
+                f"regroup rows {sorted(rows)} must match the current service "
+                f"groups {sorted(names)}"
+            )
+        gmesh = GroupedMesh.build_rows(
+            self.gmesh.mesh,
+            axis=self.gmesh.axis,
+            rows={g.name: int(rows[g.name]) for g in self.gmesh.service_groups},
+            min_compute_rows=min_compute_rows,
+        )
+        return dataclasses.replace(self, gmesh=gmesh)
+
     # -- queries ----------------------------------------------------------
     def has_edge(self, src: str, dst: str) -> bool:
         return (src, dst) in self.edges
@@ -297,10 +326,67 @@ def sink_sum_stage(src: str, dst: str, width: int, dtype=jnp.float32) -> Stage:
     )
 
 
+# -- measurement hooks (the adaptive loop's in-graph counters) -------------------
+
+
+def work_vector(gmesh: GroupedMesh, work: jax.Array) -> jax.Array:
+    """Per-device code: gather every row's scalar work figure into one
+    replicated ``(axis_size,)`` vector — the per-row work counter of the
+    adaptive loop (core/adapt.py), paid for with a single psum.
+
+    ``work`` is this row's local work count (valid particles, tokens);
+    the result is identical on every row, so the host reads it from any
+    shard and feeds it into a `LoadLedger`.
+    """
+    row = jax.lax.axis_index(gmesh.axis)
+    onehot = (jnp.arange(gmesh.axis_size) == row).astype(jnp.float32)
+    return jax.lax.psum(onehot * work.astype(jnp.float32), gmesh.axis)
+
+
+def with_work_probe(
+    stage: Stage, work_of: Callable[[jax.Array], jax.Array] | None = None
+) -> Stage:
+    """Wrap a stage so its operator ALSO folds a work counter through
+    the stage's channel — the in-graph per-stage load signal.
+
+    The stage's state becomes ``(acc, count)``; each arriving element
+    adds ``work_of(elem)`` (default: 1 element) on the consumer rows.
+    The channel's arrival masking applies to the counter exactly as to
+    the payload, so invalid/masked elements never count. Read the pair
+    back with `probe_work`. An ``emit`` hook keeps seeing the bare acc.
+    """
+    op = stage.operator
+    measure = work_of or (lambda elem: jnp.float32(1.0))
+
+    def probed(state, elem, k):
+        acc, count = state
+        return op(acc, elem, k), count + measure(elem).astype(jnp.float32)
+
+    emit = stage.emit
+    if emit is not None:
+        inner = emit
+        emit = lambda state, k: inner(state[0], k)  # noqa: E731
+    return dataclasses.replace(
+        stage,
+        operator=probed,
+        init=(stage.init, jnp.zeros((), jnp.float32)),
+        emit=emit,
+    )
+
+
+def probe_work(state: Any) -> tuple[Any, jax.Array]:
+    """Split a `with_work_probe` stage's folded state into (acc, count)."""
+    acc, count = state
+    return acc, count
+
+
 __all__ = [
     "COMPUTE",
     "ServiceGraph",
     "Stage",
     "delta_emitter",
+    "probe_work",
     "sink_sum_stage",
+    "with_work_probe",
+    "work_vector",
 ]

@@ -86,6 +86,29 @@ class GroupedMesh:
                 raise ValueError(f"service {name!r}: alpha={frac} outside [0,1)")
             if frac > 0.0:
                 sizes[name] = max(1, int(round(frac * n)))
+        return GroupedMesh.build_rows(
+            mesh, axis=axis, rows=sizes, min_compute_rows=min_compute_rows
+        )
+
+    @staticmethod
+    def build_rows(
+        mesh: jax.sharding.Mesh,
+        axis: str = "data",
+        rows: Mapping[str, int] | None = None,
+        min_compute_rows: int = 1,
+    ) -> "GroupedMesh":
+        """Integer-row sibling of `build`: exact per-service row counts.
+
+        This is the regroup path of the adaptive loop (core/adapt.py):
+        fractional alphas round, row vectors from the planner don't.
+        """
+        sizes = dict(rows or {})
+        n = mesh.shape[axis]
+        for name, size in sizes.items():
+            if name == COMPUTE:
+                raise ValueError("the compute group's rows are implicit")
+            if int(size) != size or size < 1:
+                raise ValueError(f"service {name!r}: rows={size} must be int >= 1")
         used = sum(sizes.values())
         compute_rows = n - used
         if compute_rows < min_compute_rows:
@@ -96,8 +119,8 @@ class GroupedMesh:
         specs = [GroupSpec(COMPUTE, 0, compute_rows)]
         cursor = compute_rows
         for name, size in sizes.items():
-            specs.append(GroupSpec(name, cursor, cursor + size))
-            cursor += size
+            specs.append(GroupSpec(name, cursor, cursor + int(size)))
+            cursor += int(size)
         return GroupedMesh(mesh=mesh, axis=axis, groups=tuple(specs))
 
     @staticmethod

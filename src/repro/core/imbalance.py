@@ -12,10 +12,18 @@ data-dependent:
 
 `sample_process_times` also keeps the paper's Gaussian-noise model so
 the perf-model calibration can reproduce Cray-like conditions.
+
+Besides the *generative* models above, this module hosts the *online
+estimators* of the adaptive loop (DESIGN.md §10): given measured
+per-row work counters, `empirical_t_sigma_work` recovers the paper's
+T_sigma straggler penalty in work units and `empirical_sigma` inverts
+the closed form of `perfmodel.t_sigma` so the measured penalty can be
+fed back into Eqs. 2-4 for re-planning.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -49,6 +57,19 @@ class ImbalanceModel:
         return tot / n_trials
 
 
+def _counts_from_weights(w: np.ndarray, total_items: int) -> np.ndarray:
+    """Integerize normalized weights into counts summing to total_items."""
+    w = w / w.sum()
+    counts = np.floor(w * total_items).astype(np.int64)
+    # distribute the remainder deterministically
+    rem = total_items - counts.sum()
+    order = np.argsort(-w)
+    for i in range(int(rem)):
+        counts[order[i % len(w)]] += 1
+    assert counts.sum() == total_items
+    return counts
+
+
 def skewed_partition(
     total_items: int, n_parts: int, skew: float, rng: np.random.Generator
 ) -> np.ndarray:
@@ -62,12 +83,68 @@ def skewed_partition(
     ranks = np.arange(1, n_parts + 1, dtype=np.float64)
     w = ranks ** (-skew) if skew > 0 else np.ones(n_parts)
     rng.shuffle(w)
-    w = w / w.sum()
-    counts = np.floor(w * total_items).astype(np.int64)
-    # distribute the remainder deterministically
-    rem = total_items - counts.sum()
-    order = np.argsort(-w)
-    for i in range(int(rem)):
-        counts[order[i % n_parts]] += 1
-    assert counts.sum() == total_items
-    return counts
+    return _counts_from_weights(w, total_items)
+
+
+def sheet_partition(
+    total_items: int,
+    n_parts: int,
+    skew: float,
+    center: float,
+    width: float = 0.08,
+) -> np.ndarray:
+    """Split ``total_items`` with a *current-sheet* concentration.
+
+    The PIC app's GEM-reconnection skew concentrates particles in a
+    sheet around ``center`` (fractional position in [0, 1]); ``skew``
+    in [0, 1] blends uniform (0) into fully sheet-concentrated (1).
+    Unlike `skewed_partition` the placement is deterministic in
+    ``center``, so a *drifting* sheet (center moving across supersteps)
+    moves the hot rows — the time-varying imbalance the adaptive loop
+    (core/adapt.py) is built to chase.
+    """
+    if n_parts <= 0:
+        raise ValueError("n_parts must be positive")
+    if not 0.0 <= skew <= 1.0:
+        raise ValueError(f"skew={skew} outside [0, 1]")
+    pos = (np.arange(n_parts, dtype=np.float64) + 0.5) / n_parts
+    d = np.abs(pos - float(center))
+    sheet = np.exp(-0.5 * (d / max(width, 1e-6)) ** 2)
+    w = (1.0 - skew) + skew * n_parts * sheet / max(sheet.sum(), 1e-12)
+    return _counts_from_weights(w, total_items)
+
+
+# -- online estimators (the adaptive loop's "measure" leg) ---------------------
+
+
+def empirical_t_sigma_work(work: np.ndarray) -> float:
+    """Measured straggler penalty in WORK units.
+
+    ``work`` is (n_rows,) or (n_samples, n_rows) per-row work counters
+    (valid particles, tokens). Returns E[max_i w_i - mean_i w_i] over
+    the samples — the measured counterpart of the paper's T_sigma,
+    before conversion to seconds by the calibrator (core/adapt.py).
+    """
+    w = np.asarray(work, np.float64)
+    if w.ndim == 1:
+        w = w[None, :]
+    if w.ndim != 2 or w.shape[1] == 0:
+        raise ValueError(f"work must be (rows,) or (samples, rows), got {w.shape}")
+    return float((w.max(axis=1) - w.mean(axis=1)).mean())
+
+
+def empirical_sigma(work: np.ndarray, t_per_item: float = 1.0) -> float:
+    """Online sigma estimator: invert `perfmodel.t_sigma`'s closed form
+    (penalty = sigma * sqrt(2 ln P)) on the measured penalty, so the
+    re-planner can evaluate Eqs. 2-4 with a *measured* imbalance.
+
+    ``t_per_item`` converts work units to seconds (the calibrated cost
+    of one work item); with the default 1.0 the result stays in work
+    units.
+    """
+    w = np.asarray(work, np.float64)
+    n_rows = w.shape[-1]
+    if n_rows <= 1:
+        return 0.0
+    penalty = empirical_t_sigma_work(w) * t_per_item
+    return penalty / math.sqrt(2.0 * math.log(n_rows))

@@ -1,17 +1,32 @@
-"""Elastic re-scaling: resume any committed checkpoint onto a different
-mesh (fewer/more healthy hosts after a failure, or a grown allocation).
+"""Elastic re-scaling: move state between meshes and row partitions.
 
-Checkpoints are mesh-agnostic (io/checkpoint.py stores unsharded
-leaves); this module re-derives shardings for the TARGET mesh and
-device_puts each leaf. Used by tests/test_multidevice.py's
-crash->resume-on-smaller-mesh case and by launch/train.py on restart.
+Two paths:
+
+  * the CHECKPOINT path (`restore_for_mesh`): resume any committed
+    checkpoint onto a different mesh (fewer/more healthy hosts after a
+    failure, or a grown allocation). Checkpoints are mesh-agnostic
+    (io/checkpoint.py stores unsharded leaves); shardings are re-derived
+    for the TARGET mesh and each leaf device_put.
+  * the IN-MEMORY path (`reshard_state`): migrate live row-partitioned
+    state between two row partitions of the SAME mesh with no
+    checkpoint round-trip — the regroup leg of the adaptive loop
+    (core/adapt.py): when `ServiceGraph.regroup` moves the
+    compute/service boundary, the compute rows' buffers are gathered,
+    re-partitioned over the new compute rows, and re-placed.
 """
 from __future__ import annotations
 
+import math
+from typing import Any, Callable
+
 import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.io import checkpoint as ckpt
 from repro.train import sharding
+from repro.utils import compat
 
 
 def restore_for_mesh(ckpt_dir: str, step: int, like_state: dict, mesh) -> dict:
@@ -29,20 +44,107 @@ def restore_for_mesh(ckpt_dir: str, step: int, like_state: dict, mesh) -> dict:
 
 def healthy_mesh(preferred_shape: tuple[int, ...], axis_names: tuple[str, ...]):
     """Build the largest mesh the surviving devices allow: shrink the
-    data axis first (model parallelism is topology-bound)."""
+    data axis (axis 0) until the device budget fits — model parallelism
+    is topology-bound, so the other axes are never shrunk."""
     n = len(jax.devices())
     shape = list(preferred_shape)
-    while shape[0] > 1 and n < 1:
-        shape[0] //= 2
-    total = 1
-    for s in shape:
-        total *= s
+    total = math.prod(shape)
     while total > n and shape[0] > 1:
         shape[0] //= 2
         total //= 2
     if total > n:
         raise RuntimeError(f"not enough devices: need {total}, have {n}")
-    return jax.make_mesh(
-        tuple(shape), axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
-    )
+    return compat.make_mesh(tuple(shape), axis_names)
+
+
+def reshard_state(
+    state: Any,
+    old_gmesh,
+    new_gmesh,
+    repartition: Callable[[Any, Any, Any], Any] | None = None,
+) -> Any:
+    """In-memory migration of row-partitioned state between two row
+    partitions of the same mesh (no checkpoint round-trip).
+
+    Every leaf whose leading dimension equals the grouped axis size is
+    treated as a per-row buffer: the OLD compute rows' slices are
+    gathered host-side, handed to ``repartition(compute_rows_tree,
+    old_gmesh, new_gmesh)`` (a whole-tree hook, so cross-leaf
+    repartitioning — e.g. re-binning particles by position — sees every
+    leaf at once), padded with zero rows for the service groups, and
+    re-placed with the axis sharding. Other leaves pass through
+    untouched (replicated state needs no migration when only the row
+    partition moves).
+
+    The default repartition flattens each leaf's (rows, per_row, ...)
+    items and deals them evenly over the new compute rows (zero-padding
+    the ragged tail) — the natural move for masked item buffers
+    (documents, stream chunks). Leaves of rank 1 have no item axis to
+    re-deal, so they require an explicit ``repartition``.
+    """
+    if old_gmesh.axis_size != new_gmesh.axis_size:
+        raise ValueError(
+            f"row partitions live on the same mesh axis: "
+            f"{old_gmesh.axis_size} != {new_gmesh.axis_size}"
+        )
+    n = old_gmesh.axis_size
+    old_rows = old_gmesh.compute.size
+    new_rows = new_gmesh.compute.size
+
+    def is_row_leaf(x) -> bool:
+        return getattr(x, "ndim", 0) >= 1 and x.shape[0] == n
+
+    leaves, treedef = jax.tree.flatten(state)
+    row_mask = [is_row_leaf(leaf) for leaf in leaves]
+    host = [
+        np.asarray(leaf)[:old_rows] if is_row else leaf
+        for leaf, is_row in zip(leaves, row_mask)
+    ]
+
+    if repartition is not None:
+        new_tree = repartition(jax.tree.unflatten(treedef, host), old_gmesh, new_gmesh)
+        new_leaves = jax.tree.flatten(new_tree)[0]
+        if len(new_leaves) != len(leaves):
+            raise ValueError("repartition must preserve the state's tree structure")
+    else:
+
+        def redeal(x):
+            if x.ndim < 2:
+                raise ValueError(
+                    "rank-1 row leaves have no item axis to re-deal; "
+                    "pass an explicit `repartition`"
+                )
+            items = x.reshape((-1,) + x.shape[2:])
+            per = -(-items.shape[0] // new_rows)
+            pad = per * new_rows - items.shape[0]
+            if pad:
+                items = np.concatenate(
+                    [items, np.zeros((pad,) + items.shape[1:], x.dtype)]
+                )
+            return items.reshape((new_rows, per) + items.shape[1:])
+
+        new_leaves = [
+            redeal(leaf) if is_row else leaf for leaf, is_row in zip(host, row_mask)
+        ]
+
+    def place(rows):
+        rows = np.asarray(rows)
+        if rows.shape[0] != new_rows:
+            raise ValueError(
+                f"repartition returned {rows.shape[0]} rows, expected {new_rows}"
+            )
+        pad = n - new_rows
+        if pad:
+            rows = np.concatenate(
+                [rows, np.zeros((pad,) + rows.shape[1:], rows.dtype)]
+            )
+        spec = P(new_gmesh.axis, *(None,) * (rows.ndim - 1))
+        return jax.device_put(
+            jnp.asarray(rows), NamedSharding(new_gmesh.mesh, spec)
+        )
+
+    out = [
+        place(leaf) if is_row else orig
+        for leaf, is_row, orig in zip(new_leaves, row_mask, leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)

@@ -39,7 +39,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ServiceGraph, WireSpec
-from repro.core.dataflow import COMPUTE
+from repro.core.dataflow import COMPUTE, work_vector
 from repro.core.decouple import group_psum
 from repro.train import sharding
 from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
@@ -143,6 +143,18 @@ def train_service_graph(mesh, ts_cfg: TrainStepConfig, axis: str = "data") -> Se
     return ServiceGraph.build(mesh, stages=stages, edges=edges, axis=axis, wire=wire)
 
 
+def train_stage_traits(ts_cfg: TrainStepConfig):
+    """Calibration traits of the decoupled train chain (core/adapt.py):
+    folding one token's gradient contribution costs a small fraction of
+    its fwd/bwd, and the grad stream's wire bytes amortize per token."""
+    from repro.core.adapt import StageTrait
+
+    traits = [StageTrait(REDUCE, cost_ratio=0.2, bytes_per_item=64.0)]
+    if ts_cfg.analytics_alpha > 0:
+        traits.append(StageTrait(ANALYTICS, cost_ratio=0.05, bytes_per_item=64.0))
+    return tuple(traits)
+
+
 def build_decoupled_step(
     model,
     opt_cfg: OptConfig,
@@ -235,6 +247,12 @@ def build_decoupled_step(
         for pod_axis in pods:
             n_compute = lax.psum(n_compute, pod_axis)
         out_metrics = {"loss": loss_tot / jnp.maximum(total_cnt, 1.0)}
+        # per-row token counter (adaptive loop's work signal): each row's
+        # real-token count gathered into one replicated vector; pods sum
+        work_rows = work_vector(gmesh, cnt)
+        for pod_axis in pods:
+            work_rows = lax.psum(work_rows, pod_axis)
+        out_metrics["work_rows"] = work_rows
         if grad_stats is not None:
             # statistics of the token-normalized gradient, computed on
             # the analytics group and broadcast into the metrics

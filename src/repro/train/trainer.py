@@ -11,7 +11,14 @@ Features required for 1000+ node operation:
     checkpoint onto a different mesh (launch/elastic.py drives this);
   * straggler mitigation is inherited from the decoupled step itself
     (stream consumers don't wait on one peer — the paper's core claim)
-    plus stateless data indexing (no pipeline state to rebuild).
+    plus stateless data indexing (no pipeline state to rebuild);
+  * adaptive service sizing (``TrainerConfig.adapt``): in decoupled
+    mode the trainer closes the measure->plan->regroup loop of
+    core/adapt.py around the reduce (and analytics) groups — per-step
+    wall clock plus the step's per-row token counter feed an
+    `AdaptiveGraph`; when the planner's hysteresis clears, the step is
+    rebuilt on the re-partitioned mesh (params/moments are replicated
+    over the data axis, so migration is a re-placement, not a reshard).
 """
 from __future__ import annotations
 
@@ -22,10 +29,18 @@ import time
 import jax
 import numpy as np
 
+from repro.core.adapt import AdaptPolicy, AdaptiveGraph
 from repro.data.pipeline import Pipeline
 from repro.io import checkpoint as ckpt
 from repro.train.optimizer import OptConfig, init_opt_state
-from repro.train.train_step import TrainStepConfig, make_jitted_step
+from repro.train.train_step import (
+    ANALYTICS,
+    REDUCE,
+    TrainStepConfig,
+    make_jitted_step,
+    train_service_graph,
+    train_stage_traits,
+)
 
 
 @dataclasses.dataclass
@@ -36,6 +51,9 @@ class TrainerConfig:
     keep: int = 3
     log_every: int = 10
     fail_at_step: int | None = None  # test hook: raise to simulate a crash
+    # closed-loop service re-sizing (decoupled mode only): an AdaptPolicy
+    # switches it on; None keeps the historic static-alpha trainer
+    adapt: AdaptPolicy | None = None
 
 
 class SimulatedFailure(RuntimeError):
@@ -63,6 +81,7 @@ class Trainer:
         self.multi_pod = multi_pod
         self._checkpointer = ckpt.AsyncCheckpointer(tr_cfg.ckpt_dir, keep=tr_cfg.keep)
         self.metrics_log: list[dict] = []
+        self.adapt_log: list[dict] = []  # regroup events of the adaptive loop
 
     # -- state ------------------------------------------------------------------
     def init_state(self, seed: int = 0):
@@ -70,12 +89,45 @@ class Trainer:
         opt_state = init_opt_state(self.opt_cfg, params)
         return {"params": params, "opt": opt_state, "step": 0}
 
+    def _service_rows(self) -> int:
+        rows = self.mesh.shape["data"]
+        service = max(1, int(round(self.ts_cfg.reduce_alpha * rows)))
+        if self.ts_cfg.analytics_alpha > 0:
+            service += max(1, int(round(self.ts_cfg.analytics_alpha * rows)))
+        return service
+
     def _batch_for(self, step: int) -> dict:
         if self.ts_cfg.mode == "decoupled":
             rows = self.mesh.shape["data"]
-            service = max(1, int(round(self.ts_cfg.reduce_alpha * rows)))
-            return self.pipeline.padded_for_groups(step, rows - service, rows)
+            return self.pipeline.padded_for_groups(
+                step, rows - self._service_rows(), rows
+            )
         return self.pipeline.global_batch(step)
+
+    def _build_step(self, params_like, step: int):
+        step_fn, self._shardings = make_jitted_step(
+            self.model,
+            self.mesh,
+            self.opt_cfg,
+            self.ts_cfg,
+            params_like,
+            self._batch_for(step),
+            multi_pod=self.multi_pod,
+            donate=True,
+        )
+        return step_fn
+
+    def _regroup(self, rows: dict[str, int], params_like, step: int):
+        """Adopt the planner's row vector: re-derive exact alphas, rebuild
+        the jitted step on the new partition. Params and moments are
+        replicated over the data axis in decoupled mode, so there is no
+        state to migrate — the re-jit IS the regroup."""
+        n = self.mesh.shape["data"]
+        updates = {"reduce_alpha": rows[REDUCE] / n}
+        if ANALYTICS in rows:
+            updates["analytics_alpha"] = rows[ANALYTICS] / n
+        self.ts_cfg = dataclasses.replace(self.ts_cfg, **updates)
+        return self._build_step(params_like, step)
 
     # -- the loop -----------------------------------------------------------------
     def run(self, state: dict | None = None, resume: bool = True) -> dict:
@@ -86,31 +138,57 @@ class Trainer:
             if last is not None:
                 state = self.restore(last, state)
                 print(f"[trainer] resumed from step {last}")
-        batch0 = self._batch_for(state["step"])
         params_like = jax.eval_shape(lambda: state["params"])
-        step_fn, self._shardings = make_jitted_step(
-            self.model,
-            self.mesh,
-            self.opt_cfg,
-            self.ts_cfg,
-            params_like,
-            batch0,
-            multi_pod=self.multi_pod,
-            donate=True,
-        )
+        step_fn = self._build_step(params_like, state["step"])
+        adaptive = self.cfg.adapt is not None and self.ts_cfg.mode == "decoupled"
+        ag = None
+        if adaptive:
+            ag = AdaptiveGraph(
+                train_service_graph(self.mesh, self.ts_cfg),
+                traits=train_stage_traits(self.ts_cfg),
+                policy=self.cfg.adapt,
+            )
         # place state onto the step's shardings (resume may load onto
         # default placement; elastic re-scaling lands here too)
         params = jax.device_put(state["params"], self._shardings[0])
         opt = jax.device_put(state["opt"], self._shardings[1])
         t0 = time.time()
         step = state["step"]
+        fresh_trace = True  # first call of a (re)built step pays the jit
         try:
             while step < self.cfg.total_steps:
                 if self.cfg.fail_at_step is not None and step == self.cfg.fail_at_step:
                     raise SimulatedFailure(f"injected failure at step {step}")
                 batch = self._batch_for(step)
+                t_step = time.perf_counter()
                 params, opt, metrics = step_fn(params, opt, batch)
                 step += 1
+                if adaptive:
+                    jax.block_until_ready(metrics)
+                    wall = time.perf_counter() - t_step
+                    if fresh_trace:
+                        # a wall sample polluted by jit time would
+                        # mis-calibrate t_unit by orders of magnitude
+                        fresh_trace = False
+                    else:
+                        compute_rows = (
+                            self.mesh.shape["data"] - self._service_rows()
+                        )
+                        work = np.asarray(metrics["work_rows"])[:compute_rows]
+                        decision = ag.step(wall, work)
+                        if decision.regroup:
+                            ag.apply(decision)
+                            step_fn = self._regroup(decision.rows, params_like, step)
+                            params = jax.device_put(params, self._shardings[0])
+                            opt = jax.device_put(opt, self._shardings[1])
+                            fresh_trace = True
+                            event = {
+                                "step": step,
+                                "regroup": dict(decision.rows),
+                                "predicted_speedup": decision.predicted_speedup,
+                            }
+                            self.adapt_log.append(event)
+                            print(f"[trainer] {json.dumps(event)}")
                 if step % self.cfg.log_every == 0 or step == self.cfg.total_steps:
                     row = {
                         "step": step,

@@ -49,6 +49,14 @@ def partial_shard_map(f, mesh, in_specs, out_specs, manual_axes):
     )
 
 
+def supports_set_mesh() -> bool:
+    """Whether this jax ships ``jax.set_mesh`` (the global-mesh context
+    the partial-auto GSPMD train paths rely on; absent before jax 0.5).
+    Slow-suite tests that drive those paths skip-gate on this instead of
+    failing red on older jaxlibs."""
+    return hasattr(jax, "set_mesh")
+
+
 def make_mesh(axis_shapes, axis_names):
     """jax.make_mesh with Auto axis types when the API supports them."""
     axis_type = getattr(jax.sharding, "AxisType", None)
