@@ -1,0 +1,447 @@
+"""Fig. 13 (beyond-paper): throughput-latency of a multi-tenant serving
+fleet — colocated vs static-disagg vs adaptive-disagg.
+
+The serving-side instantiation of the paper's adaptive-decoupling
+claim: PR 1 planned the prefill/decode split statically (Eqs. 1-4 with
+Op1 = prefill, fig9) and PR 4 closed the measure -> plan -> regroup
+loop everywhere *except* serving. This figure drives all three fleets
+through the SAME `bursty-multitenant` traffic scenario
+(`repro/serve/traffic.py`): an interactive chat tenant, a background
+trickle, and a RAG tenant whose heavy-tailed prompts SURGE mid-run —
+the traffic drift that makes any frozen split stale.
+
+Methodology (DESIGN.md §8): every fleet replays the scenario tick by
+tick on the real jitted engines; per-operation costs (bucketed batch-1
+prefill, decode step per batch, one cache migration) are measured once
+with `bench`, and each fleet's tick trace is priced on a virtual clock
+— colocated rows serialize whole prompts in front of decode (Eq. 1),
+disaggregated groups overlap at their slower side (Eq. 2's ``max``).
+The adaptive fleet's controller sees ONLY its own ledger (virtual wall
++ per-row work), so the closed loop is exercised end to end:
+`FleetLedger` -> `core.adapt.calibrate` -> `recommend_allocation` ->
+`ServiceGraph.regroup` + in-flight KV slot migration.
+
+Claimed (asserted):
+  * under the bursty multi-tenant scenario the adaptive fleet beats the
+    frozen-split fleet on p99 request latency at matched goodput
+    (>= MATCHED_GOODPUT of static's), regrouping at least once;
+  * under the `single-fifo` scenario the FleetScheduler engines
+    reproduce the PR-1 bare-deque engines BIT-FOR-BIT (decode logits
+    per tick and emitted tokens), for both the colocated and the
+    disaggregated engine.
+
+Run:  PYTHONPATH=src python benchmarks/fig13_fleet.py [--quick]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    # self-sufficient standalone invocation (CI runs
+    # `python benchmarks/fig13_fleet.py --quick`)
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_REPO, os.path.join(_REPO, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from benchmarks.util import bench, csv_row
+
+LAST: dict = {}
+
+N_ROWS = 8
+SLOTS_PER_ROW = 2
+MAX_LEN = 160
+PREFILL_CHUNK = 16
+STATIC_PREFILL_ROWS = 2  # tuned for the pre-surge mix (fig9's regime)
+TOKEN_BUDGET = 2000
+MATCHED_GOODPUT = 0.95  # adaptive goodput must stay within 5% of static
+
+
+def _scenario(quick: bool, load: float = 1.0):
+    """The bursty-multitenant scenario, optionally load-scaled (the
+    sweep axis of the throughput-latency curve)."""
+    from repro.serve.traffic import scenario
+
+    sc = scenario("bursty-multitenant")
+    tenants = tuple(
+        dataclasses.replace(
+            t,
+            rate=t.rate * load,
+            surge_at=(16 if quick else t.surge_at) if t.surge_at >= 0 else -1,
+        )
+        for t in sc.tenants
+    )
+    return dataclasses.replace(
+        sc, tenants=tenants, horizon=36 if quick else sc.horizon,
+        max_prompt=min(sc.max_prompt, MAX_LEN - 16),
+    )
+
+
+# -- measured per-op costs (the mechanism, once per run) ------------------------
+
+
+def _measure_costs(model, params, max_batch: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.operators import migrate_cache_into_slot
+
+    pf = jax.jit(lambda p, t: model.prefill(p, t)[:2])
+    buckets = [8, 16, 32, 64, 128]
+    pre = {}
+    for b in buckets:
+        toks = jnp.zeros((1, b), jnp.int32)
+        pre[b] = bench(lambda toks=toks: pf(params, toks), reps=3)
+
+    def c_pre(n):
+        if n <= 0:
+            return 0.0
+        n = min(max(int(n), 2), MAX_LEN)
+        lo = max((b for b in buckets if b <= n), default=buckets[0])
+        return pre[lo] * n / lo
+
+    dec = jax.jit(model.decode_step)
+    batches = sorted({1, 2, 4, 8, max_batch})
+    dcost = {}
+    for b in batches:
+        cache_b = model.init_cache(b, MAX_LEN)
+        tok_b = jnp.zeros((b, 1), jnp.int32)
+        dcost[b] = bench(
+            lambda cache_b=cache_b, tok_b=tok_b: dec(params, cache_b, tok_b), reps=3
+        )
+
+    def c_dec(b):
+        if b <= 0:
+            return 0.0
+        b = min(int(b), max_batch)
+        lo = max(x for x in batches if x <= b)
+        return dcost[lo] * b / lo
+
+    mig = jax.jit(migrate_cache_into_slot)
+    cache_full = model.init_cache(max_batch, MAX_LEN)
+    cache_one = model.init_cache(1, 32)
+    c_mig = bench(lambda: mig(cache_full, cache_one, 0), reps=3)
+    return c_pre, c_dec, c_mig
+
+
+# -- fleet drivers --------------------------------------------------------------
+
+
+def _stats(ledger, walls: list[float]) -> dict:
+    """Virtual-seconds latency stats from tick-clock completions."""
+    clock = np.concatenate([[0.0], np.cumsum(walls)])
+    ttft = [clock[c.first_token] - clock[c.submitted] for c in ledger.completions]
+    lat = [clock[c.done] - clock[c.submitted] for c in ledger.completions]
+    total = float(clock[-1])
+    return {
+        "completions": len(ledger.completions),
+        "tokens_out": ledger.tokens_out,
+        "total_s": total,
+        "tput_tok_s": ledger.tokens_out / max(total, 1e-12),
+        "goodput_tok_s": ledger.good_tokens() / max(total, 1e-12),
+        "ttft_p99_s": float(np.percentile(ttft, 99)) if ttft else 0.0,
+        "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
+        "latency_p99_s": float(np.percentile(lat, 99)) if lat else 0.0,
+    }
+
+
+def _drive_colocated(model, params, sc, costs) -> dict:
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.sched import FleetScheduler
+    from repro.serve.traffic import replay
+
+    c_pre, c_dec, c_mig = costs
+    slots = N_ROWS * SLOTS_PER_ROW
+    eng = Engine(
+        model, params, EngineConfig(max_batch=slots, max_len=MAX_LEN),
+        sched=FleetScheduler(sc.tenants, token_budget=TOKEN_BUDGET),
+    )
+    walls: list[float] = []
+
+    def price_tick(e):
+        tick = e.last_tick
+        # every admitted prompt stalls all rows for its full prefill,
+        # serialized in front of the decode step (Eq. 1)
+        pre = sum(c_pre(n) + c_mig for n in tick["prefill_lens"])
+        dcost = c_dec(-(-tick["decode_batch"] // N_ROWS)) if tick["decode_batch"] else 0.0
+        walls.append(pre + dcost)
+
+    replay(eng, sc, model.cfg.vocab_size, on_tick=price_tick)
+    return {"mode": "colocated", "regroups": 0, **_stats(eng.ledger, walls)}
+
+
+def _drive_disagg(model, params, sc, costs, *, policy, mesh=None) -> dict:
+    from repro.serve.fleet import FleetConfig, FleetEngine
+    from repro.serve.sched import FleetScheduler
+    from repro.serve.traffic import replay
+
+    c_pre, c_dec, c_mig = costs
+    cfg = FleetConfig(
+        n_rows=N_ROWS,
+        prefill_rows=STATIC_PREFILL_ROWS,
+        slots_per_row=SLOTS_PER_ROW,
+        max_len=MAX_LEN,
+        prefill_chunk=PREFILL_CHUNK,
+        adapt=policy,
+        # StageTrait constants calibrated from the measured per-op
+        # costs: prefill-token seconds over decode-slot-step seconds
+        prefill_cost_ratio=(c_pre(32) / 32) / max(c_dec(1), 1e-12),
+        prefill_bytes_per_token=256.0,
+        # benchmark fleets ride the surge out rather than discarding a
+        # blocked shrink early (the discard bound exists for live
+        # fleets whose load has genuinely moved on)
+        max_deferrals=24,
+    )
+
+    def clock(tick: dict) -> float:
+        # disaggregated: prefill rows run different requests
+        # concurrently and overlap the decode group (Eq. 2's max)
+        pre = max((c_pre(n) for n in tick["prefill_tokens_per_row"]), default=0.0)
+        rows_dec = max(len(tick["slots_active"]) // SLOTS_PER_ROW, 1)
+        dcost = c_dec(-(-tick["decode_batch"] // rows_dec)) if tick["decode_batch"] else 0.0
+        dcost += c_mig * tick["handoffs"]
+        return max(pre, dcost)
+
+    fe = FleetEngine(
+        model, params, cfg,
+        sched=FleetScheduler(sc.tenants, token_budget=TOKEN_BUDGET, aging=0.05),
+        mesh=mesh,
+        clock=clock,
+    )
+    replay(fe, sc, model.cfg.vocab_size)
+    walls = [r["wall_s"] for r in fe.report]
+    return {
+        "mode": "adaptive" if policy is not None else "static",
+        "regroups": fe.regroups,
+        "deferrals": fe.deferrals,
+        "prefill_rows_final": fe.prefill_rows,
+        **_stats(fe.ledger, walls),
+    }
+
+
+# -- FIFO bit-identity vs the PR-1 deque path -----------------------------------
+
+
+class _DequeShim:
+    """The PR-1 admission path, verbatim: a bare deque popped in submit
+    order with no tenants, budget, or deadlines — the reference the
+    default FleetScheduler must be indistinguishable from."""
+
+    def __init__(self):
+        self.q = deque()
+
+    def submit(self, req, now=0):
+        self.q.append(req)
+        return True
+
+    def take(self, now, max_n=None, inflight_tokens=0):
+        out = []
+        while self.q and (max_n is None or len(out) < max_n):
+            out.append(self.q.popleft())
+        return out
+
+    def pending(self):
+        return len(self.q)
+
+    def slo(self, tenant):
+        from repro.serve.traffic import SLOClass
+
+        return SLOClass()
+
+
+def check_fifo_bit_identity(model, params) -> dict:
+    """single-fifo scenario: FleetScheduler engines == deque engines,
+    decode logits bit-for-bit every tick, for both engine kinds."""
+    from repro.serve.disagg import DisaggConfig, DisaggEngine
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.sched import FleetScheduler
+    from repro.serve.traffic import scenario
+
+    sc = scenario("single-fifo")
+    # lockstep pair: the shared `traffic.replay` drives ONE engine, so
+    # the two-engine comparison keeps its own (identical) tick plan
+    by_tick: dict[int, list] = {}
+    for e, r in sc.requests(model.cfg.vocab_size):
+        by_tick.setdefault(e.tick, []).append(r)
+
+    def drive_pair(make):
+        a, b = make(FleetScheduler.fifo()), make(_DequeShim())
+        t = ticks = 0
+        while t <= sc.horizon or not a.idle():
+            for r in by_tick.get(t, []):
+                a.submit(dataclasses.replace(r, out_tokens=[]))
+                b.submit(dataclasses.replace(r, out_tokens=[]))
+            a.step()
+            b.step()
+            if a.last_tick["decode_batch"]:
+                np.testing.assert_array_equal(
+                    np.asarray(a.last_logits), np.asarray(b.last_logits)
+                )
+                ticks += 1
+            t += 1
+            assert t < 2000, "fifo scenario did not drain"
+        assert b.idle()  # both drained together
+        assert [r.out_tokens for r in a.finished] == [
+            r.out_tokens for r in b.finished
+        ]
+        for key in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(a.cache[key]), np.asarray(b.cache[key])
+            )
+        return ticks
+
+    colo = drive_pair(
+        lambda s: Engine(
+            model, params, EngineConfig(max_batch=4, max_len=MAX_LEN), sched=s
+        )
+    )
+    dis = drive_pair(
+        lambda s: DisaggEngine(
+            model,
+            params,
+            DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=MAX_LEN),
+            sched=s,
+        )
+    )
+    return {"colocated_ticks": colo, "disagg_ticks": dis, "bit_identical": True}
+
+
+# -- report ---------------------------------------------------------------------
+
+
+def _report(mesh, quick: bool) -> list[str]:
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.core.adapt import AdaptPolicy
+    from repro.models import build
+
+    import jax.numpy as jnp
+
+    cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    costs = _measure_costs(model, params, max_batch=N_ROWS * SLOTS_PER_ROW)
+    policy = AdaptPolicy(
+        window=4, cooldown=4, speedup_threshold=1.1, row_budget=5
+    )
+
+    loads = (1.0,) if quick else (0.75, 1.0, 1.25)
+    curve: dict[str, list[dict]] = {"colocated": [], "static": [], "adaptive": []}
+    out = []
+    for load in loads:
+        sc = _scenario(quick, load)
+        colo = _drive_colocated(model, params, sc, costs)
+        static = _drive_disagg(model, params, sc, costs, policy=None)
+        adaptive = _drive_disagg(model, params, sc, costs, policy=policy, mesh=mesh)
+        for rec in (colo, static, adaptive):
+            rec["load"] = load
+            curve[rec["mode"]].append(rec)
+            out.append(
+                csv_row(
+                    f"fig13_{rec['mode']}_load{load:g}",
+                    rec["total_s"] * 1e6,
+                    tok_s=f"{rec['tput_tok_s']:.1f}",
+                    goodput=f"{rec['goodput_tok_s']:.1f}",
+                    latency_p99_us=f"{rec['latency_p99_s'] * 1e6:.0f}",
+                    ttft_p99_us=f"{rec['ttft_p99_s'] * 1e6:.0f}",
+                    regroups=str(rec.get("regroups", 0)),
+                )
+            )
+
+    # headline claims at nominal load
+    static1 = next(r for r in curve["static"] if r["load"] == 1.0)
+    adaptive1 = next(r for r in curve["adaptive"] if r["load"] == 1.0)
+    claims = {
+        "p99_static_s": static1["latency_p99_s"],
+        "p99_adaptive_s": adaptive1["latency_p99_s"],
+        "p99_win": static1["latency_p99_s"] / max(adaptive1["latency_p99_s"], 1e-12),
+        "goodput_ratio": adaptive1["goodput_tok_s"]
+        / max(static1["goodput_tok_s"], 1e-12),
+        "regroups": adaptive1["regroups"],
+        "prefill_rows_final": adaptive1["prefill_rows_final"],
+    }
+    assert adaptive1["latency_p99_s"] < static1["latency_p99_s"], claims
+    assert claims["goodput_ratio"] >= MATCHED_GOODPUT, claims
+    assert adaptive1["regroups"] >= 1, claims
+
+    fifo = check_fifo_bit_identity(model, params)
+
+    LAST.clear()
+    LAST.update(
+        {
+            "figure": "fig13_fleet",
+            "quick": quick,
+            "policy": {
+                "window": policy.window,
+                "cooldown": policy.cooldown,
+                "speedup_threshold": policy.speedup_threshold,
+                "row_budget": policy.row_budget,
+            },
+            "token_budget": TOKEN_BUDGET,
+            "curve": curve,
+            "claims": claims,
+            "fifo_bit_identity": fifo,
+        }
+    )
+    out.append(
+        csv_row(
+            "fig13_claims",
+            0.0,
+            p99_win=f"{claims['p99_win']:.2f}",
+            goodput_ratio=f"{claims['goodput_ratio']:.3f}",
+            regroups=str(claims["regroups"]),
+            prefill_rows_final=str(claims["prefill_rows_final"]),
+        )
+    )
+    out.append(
+        csv_row(
+            "fig13_fifo_bit_identity",
+            0.0,
+            colocated_ticks=str(fifo["colocated_ticks"]),
+            disagg_ticks=str(fifo["disagg_ticks"]),
+            bit_identical=str(fifo["bit_identical"]),
+        )
+    )
+    return out
+
+
+def run(mesh) -> list[str]:
+    return _report(mesh, quick=False)
+
+
+def run_quick(mesh) -> list[str]:
+    """CI smoke: one load point, shorter horizon, earlier surge."""
+    return _report(mesh, quick=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--quick", action="store_true")
+    parser.add_argument(
+        "--json",
+        default=os.path.join(_REPO, "BENCH_fleet.json"),
+        help="where to write the fleet record",
+    )
+    args = parser.parse_args()
+
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    print("name,us_per_call,derived")
+    for line in (run_quick if args.quick else run)(mesh):
+        print(line)
+    with open(args.json, "w") as f:
+        json.dump(LAST, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"# wrote {args.json}", file=sys.stderr)

@@ -16,15 +16,17 @@ interpretation and the measured-vs-model methodology).
 ``--quick`` runs each module's ``run_quick`` (small configs, one rep)
 when it defines one — the CI smoke that keeps the drivers from rotting.
 
-Every run also writes ``BENCH_channel.json`` at the repo root: the
-machine-readable perf trajectory (per-figure wall seconds + CSV rows,
-plus the structured ChannelWire record from ``fig11_channel``) and
+Every run also writes the machine-readable perf trajectory at the repo
+root: ``BENCH_channel.json`` (per-figure wall seconds + CSV rows, plus
+the structured ChannelWire record from ``fig11_channel``),
 ``BENCH_adaptive.json`` (the AdaptiveGraph record from
-``fig12_adaptive``). Before overwriting, the previous committed
-``BENCH_channel.json`` is read back and a per-figure wall-seconds delta
-is printed — a WARNING (never a failure: containers differ) flags any
-figure >20% slower than the baseline, so the perf trajectory is
-actually consumed, not just written. CI uploads both JSONs as
+``fig12_adaptive``) and ``BENCH_fleet.json`` (the ServeFleet record
+from ``fig13_fleet``). Before overwriting, EVERY committed
+``BENCH_*.json`` is read back and its wall-seconds entries
+(``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they sit) are
+diffed — a WARNING (never a failure: containers differ) flags any
+entry >20% slower than the baseline, so the perf trajectory is
+actually consumed, not just written. CI uploads all three JSONs as
 artifacts.
 """
 import argparse
@@ -32,39 +34,74 @@ import json
 import time
 import traceback
 
-REGRESSION_WARN = 0.20  # warn when a figure is >20% slower than baseline
+REGRESSION_WARN = 0.20  # warn when an entry is >20% slower than baseline
+WALL_KEYS = frozenset({"seconds", "wall_s", "total_s"})
+# sub-floor entries (micro-timings like the fig11 sweep variants) swing
+# far past 20% between healthy runs; comparing them would bury the
+# per-figure signal in spurious WARNINGs
+MIN_WALL_S = 0.05
 
 
-def compare_to_baseline(baseline: dict | None, figures: dict) -> list[str]:
-    """Per-figure wall-seconds delta vs the previously committed run.
+def collect_walls(rec, prefix: str = "") -> dict[str, float]:
+    """All wall-seconds leaves of a BENCH record, keyed by path.
 
+    Subtrees carrying an ``error`` key are skipped (time-to-failure is
+    not a wall-seconds measurement)."""
+    out: dict[str, float] = {}
+    if isinstance(rec, dict):
+        if "error" in rec:
+            return out
+        for k in sorted(rec):
+            v = rec[k]
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if k in WALL_KEYS and isinstance(v, (int, float)):
+                out[path] = float(v)
+            else:
+                out.update(collect_walls(v, path))
+    elif isinstance(rec, list):
+        for i, v in enumerate(rec):
+            out.update(collect_walls(v, f"{prefix}[{i}]"))
+    return out
+
+
+def compare_to_baseline(name: str, baseline: dict | None, fresh: dict) -> list[str]:
+    """Wall-seconds delta of one BENCH_*.json vs its committed baseline.
+
+    Works on any record shape (per-figure ``seconds``, the adaptive
+    record's ``wall_s`` samples, the fleet curve's ``total_s`` points).
     Returns printable report lines; regressions beyond REGRESSION_WARN
     are flagged as WARNING but never fail the run (quick-mode configs
     and container wall clocks are too noisy for a hard gate)."""
+    if not baseline:
+        return [f"# {name}: no baseline found, skipping delta report"]
     lines = []
-    if not baseline or "figures" not in baseline:
-        return ["# baseline: none found, skipping delta report"]
-    if baseline.get("quick") != figures.get("quick"):
+    if baseline.get("quick") != fresh.get("quick"):
         lines.append(
-            "# baseline: quick/full mismatch "
+            f"# {name}: quick/full mismatch "
             f"(baseline quick={baseline.get('quick')}), deltas are indicative only"
         )
-    base_figs = baseline["figures"]
-    for name, rec in figures["figures"].items():
-        if "error" in rec or "error" in base_figs.get(name, {}):
-            # time-to-failure is not a wall-seconds measurement
-            lines.append(f"# {name}: errored run on one side, no delta")
-            continue
-        old = base_figs.get(name, {}).get("seconds")
-        new = rec.get("seconds")
+    base = collect_walls(baseline)
+    below_floor = 0
+    for path, new in collect_walls(fresh).items():
+        old = base.get(path)
         if not old or not new:
-            lines.append(f"# {name}: no baseline entry")
+            lines.append(f"# {name} {path}: no baseline entry")
+            continue
+        if old < MIN_WALL_S and new < MIN_WALL_S:
+            below_floor += 1  # micro-timing: pure noise at this scale
             continue
         delta = (new - old) / old
         tag = ""
         if delta > REGRESSION_WARN:
             tag = f"  WARNING: >{REGRESSION_WARN:.0%} regression"
-        lines.append(f"# {name}: {new:.3f}s vs baseline {old:.3f}s ({delta:+.1%}){tag}")
+        lines.append(
+            f"# {name} {path}: {new:.3f}s vs baseline {old:.3f}s ({delta:+.1%}){tag}"
+        )
+    if below_floor:
+        lines.append(
+            f"# {name}: {below_floor} entries below the {MIN_WALL_S * 1e3:.0f}ms "
+            "noise floor skipped"
+        )
     return lines
 
 
@@ -77,6 +114,9 @@ def main() -> None:
     parser.add_argument("--adaptive-json",
                         default=os.path.join(_REPO, "BENCH_adaptive.json"),
                         help="where to write the AdaptiveGraph record")
+    parser.add_argument("--fleet-json",
+                        default=os.path.join(_REPO, "BENCH_fleet.json"),
+                        help="where to write the ServeFleet record")
     args = parser.parse_args()
 
     import jax
@@ -92,15 +132,22 @@ def main() -> None:
         fig10_pipeline,
         fig11_channel,
         fig12_adaptive,
+        fig13_fleet,
         roofline_table,
     )
 
-    baseline = None
-    try:
-        with open(args.json) as f:
-            baseline = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        pass
+    def read_baseline(path):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+
+    baselines = {
+        "BENCH_channel": read_baseline(args.json),
+        "BENCH_adaptive": read_baseline(args.adaptive_json),
+        "BENCH_fleet": read_baseline(args.fleet_json),
+    }
 
     mesh = make_mesh((8,), ("data",))
     print("name,us_per_call,derived")
@@ -108,7 +155,7 @@ def main() -> None:
     figures: dict[str, dict] = {}
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
-                fig12_adaptive, roofline_table):
+                fig12_adaptive, fig13_fleet, roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
@@ -139,17 +186,20 @@ def main() -> None:
         "figures": figures,
         "channel": fig11_channel.LAST,  # structured ChannelWire record
     }
-    for line in compare_to_baseline(baseline, trajectory):
-        print(line, file=sys.stderr)
-    with open(args.json, "w") as f:
-        json.dump(trajectory, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {args.json}", file=sys.stderr)
-    if fig12_adaptive.LAST:
-        with open(args.adaptive_json, "w") as f:
-            json.dump(fig12_adaptive.LAST, f, indent=2, sort_keys=True, default=str)
+    records = {
+        "BENCH_channel": (args.json, trajectory),
+        "BENCH_adaptive": (args.adaptive_json, fig12_adaptive.LAST),
+        "BENCH_fleet": (args.fleet_json, fig13_fleet.LAST),
+    }
+    for name, (path, rec) in records.items():
+        if not rec:
+            continue
+        for line in compare_to_baseline(name, baselines[name], rec):
+            print(line, file=sys.stderr)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True, default=str)
             f.write("\n")
-        print(f"# wrote {args.adaptive_json}", file=sys.stderr)
+        print(f"# wrote {path}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

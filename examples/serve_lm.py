@@ -5,11 +5,19 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 decoupled analytics samples per tick (the paper's Listing-1 pattern
 applied to an inference fleet).
 
-`--disagg` routes the same trace through the disaggregated engine
-instead: a prefill group feeds KV caches to the decode slot pool
-through the handoff channel (see repro/serve/disagg.py).
+`--disagg` routes the trace through the disaggregated engine instead: a
+prefill group feeds KV caches to the decode slot pool through the
+handoff channel (see repro/serve/disagg.py).
+
+`--scenario NAME` replays a named, reproducible traffic scenario
+(repro/serve/traffic.py) through the ServeFleet scheduler: multi-tenant
+WFQ with SLO classes and token-budget admission, per-tenant latency
+accounting in the FleetLedger. `--adapt` additionally closes the
+measure -> plan -> regroup loop (repro/serve/fleet.py): the
+prefill/decode split re-sizes against the live traffic mix.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--disagg]
+      PYTHONPATH=src python examples/serve_lm.py --scenario bursty-multitenant --adapt
 """
 import argparse
 import time
@@ -21,52 +29,109 @@ from repro.configs import get_smoke
 from repro.models import build
 from repro.serve.disagg import DisaggConfig, DisaggEngine
 from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.sched import FleetScheduler
+from repro.serve.traffic import SCENARIOS, replay, scenario
+
+
+def drive_legacy(eng, cfg, n_requests=10):
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(2, 6))
+        eng.submit(Request(uid=i, prompt=prompt.astype(np.int32),
+                           max_new_tokens=int(rng.integers(4, 12))))
+    analytics = []
+    while not eng.idle():
+        eng.step()
+        analytics.append(eng.workload_sample())  # -> decoupled analytics group
+        if len(analytics) > 500:
+            raise RuntimeError("engine did not drain")
+    return n_requests, analytics
+
+
+def drive_scenario(eng, cfg, sc):
+    analytics = []
+    pairs = replay(eng, sc, cfg.vocab_size,
+                   on_tick=lambda e: analytics.append(e.workload_sample()))
+    return len(pairs), analytics
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--disagg", action="store_true",
                     help="serve through the prefill/decode-disaggregated engine")
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="replay a named traffic scenario through the "
+                         "multi-tenant ServeFleet scheduler")
+    ap.add_argument("--adapt", action="store_true",
+                    help="close the prefill/decode re-sizing loop "
+                         "(implies --disagg, needs --scenario)")
     args = ap.parse_args()
 
     cfg = get_smoke("qwen2.5-3b")
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    if args.disagg:
+
+    sc = scenario(args.scenario) if args.scenario else None
+    sched = FleetScheduler(sc.tenants, token_budget=2000, aging=0.05) if sc else None
+
+    if args.adapt:
+        if sc is None:
+            raise SystemExit("--adapt needs --scenario")
+        from repro.core.adapt import AdaptPolicy
+        from repro.serve.fleet import FleetConfig, FleetEngine
+
+        eng = FleetEngine(
+            model, params,
+            FleetConfig(n_rows=8, prefill_rows=2, slots_per_row=1, max_len=160,
+                        prefill_chunk=16,
+                        adapt=AdaptPolicy(window=4, cooldown=4,
+                                          speedup_threshold=1.1, row_budget=5)),
+            sched=sched,
+        )
+        mode = "adaptive-disagg"
+    elif args.disagg:
         eng = DisaggEngine(
             model, params,
-            DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=96),
+            DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=160),
+            sched=sched,
         )
+        mode = "disaggregated"
     else:
-        eng = Engine(model, params, EngineConfig(max_batch=4, max_len=96))
-
-    rng = np.random.default_rng(0)
-    n_requests = 10
-    for i in range(n_requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(2, 6))
-        eng.submit(Request(uid=i, prompt=prompt.astype(np.int32),
-                           max_new_tokens=int(rng.integers(4, 12))))
+        eng = Engine(model, params, EngineConfig(max_batch=4, max_len=160),
+                     sched=sched)
+        mode = "colocated"
 
     t0 = time.time()
-    ticks = 0
-    analytics = []
-    while not eng.idle():
-        eng.step()
-        ticks += 1
-        analytics.append(eng.workload_sample())  # -> decoupled analytics group
-        if ticks > 500:
-            raise RuntimeError("engine did not drain")
+    if sc is not None:
+        n_requests, analytics = drive_scenario(eng, cfg, sc)
+    else:
+        n_requests, analytics = drive_legacy(eng, cfg)
     dt = time.time() - t0
-    mode = "disaggregated" if args.disagg else "colocated"
-    print(f"[{mode}] served {n_requests} requests, {eng.stats['tokens_out']} "
-          f"tokens in {ticks} ticks ({eng.stats['tokens_out']/dt:.1f} tok/s on CPU)")
+
+    tokens_out = eng.stats["tokens_out"]
+    print(f"[{mode}] served {n_requests} requests, {tokens_out} tokens in "
+          f"{len(analytics)} ticks ({tokens_out / dt:.1f} tok/s on CPU)")
     occ = np.mean([a["active_slots"] for a in analytics])
-    print(f"mean slot occupancy {occ:.2f}/4, final queue depth "
+    print(f"mean slot occupancy {occ:.2f}, final queue depth "
           f"{analytics[-1]['queue_depth']}")
-    if args.disagg:
+    if args.disagg and not args.adapt:
         ttft = [r.first_token_tick - r.submitted_tick for r in eng.finished]
         print(f"prefills handed off: {eng.stats['handoffs']}, "
               f"mean TTFT {np.mean(ttft):.1f} ticks")
+    if args.adapt:
+        print(f"regroups: {eng.regroups} (deferred {eng.deferrals}), final "
+              f"prefill rows {eng.prefill_rows}/{eng.cfg.n_rows}, "
+              f"decode slots {eng.decode_slots}")
+    if sc is not None:
+        snap = eng.ledger.snapshot()
+        print(f"fleet: ttft p50/p99 = {snap['ttft_p50']:.0f}/{snap['ttft_p99']:.0f} "
+              f"ticks, latency p99 = {snap['latency_p99']:.0f} ticks, "
+              f"good tokens {snap['good_tokens']}/{snap['tokens_out']}")
+        for name, rec in sorted(snap["by_tenant"].items()):
+            print(f"  tenant {name:<12} n={rec['completions']:<4} "
+                  f"ttft_p99={rec['ttft_p99']:.0f} "
+                  f"latency_p99={rec['latency_p99']:.0f} "
+                  f"good={rec['good_tokens']}")
 
 
 if __name__ == "__main__":

@@ -84,6 +84,19 @@ class AdaptPolicy:
     min_compute_rows: int = 1
     s_bytes: float = 64e3
     o_seconds: float = 2e-6
+    # supersteps an unapplied (pending) regroup decision survives before
+    # the controller drops it and resumes planning — a caller that
+    # declines to act can never freeze the loop. None: 4x the natural
+    # staleness horizon (window + cooldown).
+    pending_ttl: int | None = None
+
+    @property
+    def pending_ttl_steps(self) -> int:
+        return (
+            self.pending_ttl
+            if self.pending_ttl is not None
+            else 4 * (self.window + self.cooldown)
+        )
 
 
 class LoadLedger:
@@ -265,6 +278,15 @@ class ReplanController:
         self.ledger = LoadLedger(self.policy.window)
         self.history: list[ReplanDecision] = []
         self._since_regroup = math.inf  # supersteps since the last regroup
+        # a regroup decision the caller has not applied yet. Appliers
+        # that must wait for a safe point (the serving fleet cannot
+        # shrink the decode pool under in-flight slots) leave it here;
+        # plan() holds further verdicts until it is applied, discarded,
+        # or expired (policy.pending_ttl_steps), so a deferred regroup
+        # cannot be thrashed by a newer plan from the same stale window
+        # — and a caller that never applies cannot freeze the loop.
+        self.pending: ReplanDecision | None = None
+        self._pending_age = 0
 
     # -- measure -----------------------------------------------------------
     def record(
@@ -275,6 +297,8 @@ class ReplanController:
     ) -> None:
         self.ledger.record(wall_s, work_per_row, stage_items)
         self._since_regroup += 1
+        if self.pending is not None:
+            self._pending_age += 1
 
     # -- plan --------------------------------------------------------------
     def _no(self, reason: str, cal: ChainCalibration | None = None) -> ReplanDecision:
@@ -284,6 +308,11 @@ class ReplanController:
 
     def plan(self) -> ReplanDecision:
         pol = self.policy
+        if self.pending is not None:
+            if self._pending_age > pol.pending_ttl_steps:
+                self.discard_pending()  # stale — resume planning
+            else:
+                return self._no("pending regroup awaiting application")
         if self.ledger.n < pol.window:
             return self._no(f"warming up ({self.ledger.n}/{pol.window} samples)")
         if self._since_regroup <= pol.cooldown:
@@ -313,6 +342,8 @@ class ReplanController:
             )
         d = ReplanDecision(True, dict(plan.rows), speedup, "replan", cal)
         self.history.append(d)
+        self.pending = d
+        self._pending_age = 0
         return d
 
     def step(
@@ -335,7 +366,15 @@ class ReplanController:
         self.rows = dict(decision.rows)
         self.ledger.clear()
         self._since_regroup = 0
+        self.pending = None
+        self._pending_age = 0
         return dict(self.rows)
+
+    def discard_pending(self) -> None:
+        """Drop an unapplied regroup decision (the caller decided not
+        to act, or it expired); planning resumes on the next plan()."""
+        self.pending = None
+        self._pending_age = 0
 
 
 class AdaptiveGraph:
@@ -387,6 +426,10 @@ class AdaptiveGraph:
 
     def step(self, wall_s, work_per_row, stage_items=None) -> ReplanDecision:
         return self.controller.step(wall_s, work_per_row, stage_items)
+
+    def discard_pending(self) -> None:
+        """Decline an unapplied regroup decision; planning resumes."""
+        self.controller.discard_pending()
 
     def apply(self, decision: ReplanDecision) -> ServiceGraph:
         """Commit: regroup the graph onto the decision's row vector."""

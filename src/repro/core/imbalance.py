@@ -46,6 +46,25 @@ class ImbalanceModel:
             raise ValueError(self.kind)
         return np.maximum(t, 1e-9)
 
+    def sample_lengths(
+        self,
+        n: int,
+        rng: np.random.Generator,
+        minimum: int = 1,
+        cap: int | None = None,
+    ) -> np.ndarray:
+        """Integer token counts with this model's skew: the continuous
+        per-process time draw reinterpreted as a length draw (``mean``
+        in tokens). The lognormal/pareto branches are the serving
+        traffic engine's prompt/output-length distributions — real
+        prompt traces are heavy-tailed, which is exactly the T_sigma
+        source the disaggregated fleet absorbs."""
+        t = self.sample_process_times(n, rng)
+        lens = np.maximum(int(minimum), np.rint(t).astype(np.int64))
+        if cap is not None:
+            lens = np.minimum(lens, int(cap))
+        return lens
+
     def expected_t_sigma(self, n_procs: int, n_trials: int = 256, seed: int = 0) -> float:
         """Monte-Carlo E[max_i t_i - mean t] — the measured counterpart of
         perfmodel.t_sigma's closed form."""

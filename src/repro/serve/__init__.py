@@ -1,1 +1,24 @@
-"""Serving: colocated engine, disaggregated engine, jitted steps."""
+"""Serving: colocated engine, disaggregated engine, jitted steps, and
+the ServeFleet layer (traffic scenarios, SLO scheduler, closed-loop
+elastic fleet)."""
+
+from repro.serve.sched import FleetLedger, FleetScheduler
+from repro.serve.traffic import (
+    SCENARIOS,
+    SLOClass,
+    TenantSpec,
+    TrafficScenario,
+    replay,
+    scenario,
+)
+
+__all__ = [
+    "SCENARIOS",
+    "FleetLedger",
+    "FleetScheduler",
+    "SLOClass",
+    "TenantSpec",
+    "TrafficScenario",
+    "replay",
+    "scenario",
+]

@@ -51,6 +51,7 @@ from repro.core.operators import (
     pack_cache,
 )
 from repro.serve.engine import PrefillRunner, Request
+from repro.serve.sched import FleetLedger, FleetScheduler
 from repro.utils.compat import shard_map
 
 PREFILL = "prefill"
@@ -139,12 +140,16 @@ class DisaggEngine:
     decode step runs over the whole slot batch.
     """
 
-    def __init__(self, model, params, cfg: DisaggConfig):
+    def __init__(self, model, params, cfg: DisaggConfig,
+                 sched: FleetScheduler | None = None):
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.queue: deque[Request] = deque()
-        self.sched = PrefillScheduler(cfg.n_prefill_rows, cfg.prefill_chunk)
+        # fleet-level SLO queue (default: deque-compatible FIFO) in
+        # front of the load-balanced per-row prefill scheduler
+        self.sched = sched if sched is not None else FleetScheduler.fifo()
+        self.ledger = FleetLedger()
+        self.prefill_sched = PrefillScheduler(cfg.n_prefill_rows, cfg.prefill_chunk)
         self.handoff: deque[tuple[Request, dict, jax.Array]] = deque()
         self.slots: list[Request | None] = [None] * cfg.decode_slots
         self.finished: list[Request] = []
@@ -155,17 +160,36 @@ class DisaggEngine:
         self.tokens = jnp.zeros((cfg.decode_slots, 1), jnp.int32)
         self.last_logits = None
         self.tick = 0
+        # rejected submits live on the scheduler (sched.rejected)
         self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0, "handoffs": 0}
         self.last_tick: dict = {}
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         req.submitted_tick = self.tick
-        self.queue.append(req)
+        return self.sched.submit(req, now=self.tick)
+
+    def _inflight_prompt_tokens(self) -> int:
+        """FULL prompt tokens of requests admitted past the fleet queue
+        but not yet in a decode slot (prefill rows + handoff) — the
+        quantity the token budget bounds. Whole prompts, not remaining
+        row work: retiring chunks must not free budget the handoff
+        queue still occupies, or the bound would be transiently
+        violable."""
+        pending = sum(
+            int(req.prompt.shape[0])
+            for row in self.prefill_sched.rows
+            for req in row
+        )
+        return pending + sum(
+            int(req.prompt.shape[0]) for req, _, _ in self.handoff
+        )
 
     def _prefill_tick(self) -> list[int]:
-        while self.queue:
-            self.sched.admit(self.queue.popleft())
-        finished, work = self.sched.tick()
+        for req in self.sched.take(
+            self.tick, inflight_tokens=self._inflight_prompt_tokens()
+        ):
+            self.prefill_sched.admit(req)
+        finished, work = self.prefill_sched.tick()
         for req in finished:
             logits, cache1 = self._prefill(req.prompt)
             first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
@@ -194,6 +218,9 @@ class DisaggEngine:
             "prefill_tokens_per_row": work,
             "handoffs": handoffs,
             "decode_batch": sum(s is not None for s in self.slots),
+            # per-slot occupancy at decode time: the closed loop's
+            # per-decode-row work signal (serve/fleet.py)
+            "slots_active": [s is not None for s in self.slots],
         }
         if self.last_tick["decode_batch"] == 0:
             return
@@ -213,16 +240,64 @@ class DisaggEngine:
                 req.done = True
                 req.done_tick = self.tick
                 self.finished.append(req)
+                self.ledger.record_done(req, self.sched.slo(req.tenant), self.tick)
                 self.slots[i] = None
         self.tokens = next_tok[:, None]
         self.stats["steps"] += 1
 
     def idle(self) -> bool:
         return (
-            not self.queue
-            and self.sched.pending() == 0
+            self.sched.pending() == 0
+            and self.prefill_sched.pending() == 0
             and not self.handoff
             and all(s is None for s in self.slots)
+        )
+
+    # -- regroup actuator (the closed loop's act leg, serve/fleet.py) ------
+    def resize(self, n_prefill_rows: int, decode_slots: int) -> None:
+        """Re-size the prefill/decode split in place, migrating every
+        in-flight KV slot into the new decode pool.
+
+        Occupied slots are compacted into the head of a freshly
+        initialized cache with the same `migrate_cache_into_slot`
+        operator admission uses (each old slot is sliced back out as a
+        batch-1 cache, so the write zero-extends and the shared decode
+        cursor survives — the migration is exact). Pending prefill-row
+        requests are re-admitted least-loaded onto the new row count;
+        a partially-retired head prompt restarts its (virtual) prefill
+        progress — the real batch-1 prefill only ever runs at retire
+        time, so outputs are unaffected. Shrinking below the number of
+        occupied slots raises: the caller (FleetEngine) defers the
+        regroup until enough requests drain.
+        """
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if len(occupied) > decode_slots:
+            raise ValueError(
+                f"cannot shrink to {decode_slots} decode slots with "
+                f"{len(occupied)} in flight"
+            )
+        # prefill side: re-admit pending work onto the new row count
+        pending: list[Request] = []
+        for row in self.prefill_sched.rows:
+            pending.extend(row)
+        self.prefill_sched = PrefillScheduler(n_prefill_rows, self.cfg.prefill_chunk)
+        for req in pending:
+            self.prefill_sched.admit(req)
+        # decode side: compact in-flight slots into the new pool
+        old_cache, old_tokens, old_slots = self.cache, self.tokens, self.slots
+        self.cache = self.model.init_cache(decode_slots, self.cfg.max_len)
+        self.tokens = jnp.zeros((decode_slots, 1), jnp.int32)
+        self.slots = [None] * decode_slots
+        for dst, src in enumerate(occupied):
+            slot_cache = {
+                k: (v if k == "pos" else v[:, src : src + 1])
+                for k, v in old_cache.items()
+            }
+            self.cache = self._migrate(self.cache, slot_cache, dst)
+            self.tokens = self.tokens.at[dst, 0].set(old_tokens[src, 0])
+            self.slots[dst] = old_slots[src]
+        self.cfg = dataclasses.replace(
+            self.cfg, n_prefill_rows=n_prefill_rows, decode_slots=decode_slots
         )
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
@@ -234,7 +309,7 @@ class DisaggEngine:
     def workload_sample(self) -> dict:
         return {
             "active_slots": sum(s is not None for s in self.slots),
-            "queue_depth": len(self.queue) + self.sched.pending(),
+            "queue_depth": self.sched.pending() + self.prefill_sched.pending(),
             "handoff_depth": len(self.handoff),
             "tokens_out": self.stats["tokens_out"],
         }

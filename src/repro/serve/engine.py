@@ -22,23 +22,32 @@ paper's Listing-1 pattern applied to an inference fleet.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.operators import migrate_cache_into_slot
+from repro.serve.sched import FleetLedger, FleetScheduler
 
 
-def prefill_bucket(n: int, minimum: int = 8) -> int:
+def prefill_bucket(n: int, minimum: int = 8, max_len: int | None = None) -> int:
     """Round a prompt length up to a power-of-two bucket so admission
     compiles O(log max_len) prefill programs instead of one per
     distinct length. The length-masked prefill makes the padding
-    invisible (exact logits at n-1, zero KV beyond n)."""
+    invisible (exact logits at n-1, zero KV beyond n).
+
+    The doubling clamps at ``max_len``: a prompt near the model's max
+    sequence length must bucket AT it, not past it — an over-doubled
+    bucket would compile a prefill shape the slot cache cannot hold. A
+    prompt longer than ``max_len`` is the caller's bug and raises."""
+    if max_len is not None and n > max_len:
+        raise ValueError(f"prompt length {n} exceeds max_len {max_len}")
     b = minimum
     while b < n:
         b *= 2
+    if max_len is not None:
+        b = min(b, max_len)
     return b
 
 
@@ -72,9 +81,7 @@ class PrefillRunner:
         if not self._bucketed:
             return self._exact(self.params, prompt[None, :])
         n = int(prompt.shape[0])
-        b = prefill_bucket(n)
-        if self.max_len is not None:
-            b = min(b, self.max_len)
+        b = prefill_bucket(n, max_len=self.max_len)
         padded = np.zeros((1, b), prompt.dtype)
         padded[0, :n] = prompt
         return self._masked(self.params, padded, n)
@@ -91,6 +98,7 @@ class Request:
     submitted_tick: int = -1
     first_token_tick: int = -1
     done_tick: int = -1
+    tenant: str = "default"  # FleetScheduler queue key (traffic.TenantSpec)
 
 
 @dataclasses.dataclass
@@ -101,11 +109,17 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, model, params, cfg: EngineConfig):
+    def __init__(self, model, params, cfg: EngineConfig,
+                 sched: FleetScheduler | None = None):
         self.model = model
         self.params = params
         self.cfg = cfg
-        self.queue: deque[Request] = deque()
+        # the ServeFleet queue: default is the FIFO scheduler, which
+        # pops in submit order with no budget — the sequence of jitted
+        # calls (hence the output bits) is identical to the historic
+        # bare-deque path (asserted by tests/test_fleet.py and fig13)
+        self.sched = sched if sched is not None else FleetScheduler.fifo()
+        self.ledger = FleetLedger()
         self.slots: list[Request | None] = [None] * cfg.max_batch
         self.finished: list[Request] = []
         self._decode = jax.jit(model.decode_step)
@@ -115,22 +129,24 @@ class Engine:
         self.tokens = jnp.zeros((cfg.max_batch, 1), jnp.int32)
         self.last_logits = None  # (B, 1, V) of the latest decode step
         self.tick = 0
+        # rejected submits live on the scheduler (sched.rejected)
         self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0}
         self.last_tick: dict = {"prefill_lens": [], "decode_batch": 0}
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
         req.submitted_tick = self.tick
-        self.queue.append(req)
+        return self.sched.submit(req, now=self.tick)
 
     def idle(self) -> bool:
-        return not self.queue and all(s is None for s in self.slots)
+        return self.sched.pending() == 0 and all(s is None for s in self.slots)
 
     # -- prefill one request into a free slot ------------------------------------
     def _admit(self) -> None:
         free = [i for i, s in enumerate(self.slots) if s is None]
-        while free and self.queue:
+        # colocated engine: admitted prompts prefill synchronously, so
+        # the token budget caps this tick's admitted prompt tokens
+        for req in self.sched.take(self.tick, max_n=len(free)):
             slot = free.pop(0)
-            req = self.queue.popleft()
             self.slots[slot] = req
             # batch-1 prefill, then migrate the per-request cache into
             # the slot (zero-extended to max_len)
@@ -165,6 +181,7 @@ class Engine:
                 req.done = True
                 req.done_tick = self.tick
                 self.finished.append(req)
+                self.ledger.record_done(req, self.sched.slo(req.tenant), self.tick)
                 self.slots[i] = None
         self.tokens = next_tok[:, None]
         self.stats["steps"] += 1
@@ -179,6 +196,6 @@ class Engine:
         """Per-tick analytics payload for the decoupled analytics group."""
         return {
             "active_slots": sum(s is not None for s in self.slots),
-            "queue_depth": len(self.queue),
+            "queue_depth": self.sched.pending(),
             "tokens_out": self.stats["tokens_out"],
         }

@@ -1,0 +1,375 @@
+"""ServeFleet closed loop: traffic-driven prefill/decode re-sizing.
+
+PR 4 closed the measure -> plan -> regroup loop for every construction
+except serving; this module is the missing instantiation. A
+`FleetEngine` wraps the disaggregated engine with
+
+  measure   every tick lands in the `FleetLedger` (wall seconds —
+            measured or from a caller-supplied virtual clock — plus
+            per-prefill-row retired prompt tokens and per-decode-row
+            active slots) and is forwarded to a
+            `core.adapt.ReplanController` sample by sample;
+  plan      the controller pushes the window through
+            `core.adapt.calibrate` into
+            `perfmodel.recommend_allocation` with one service stage,
+            ``prefill`` — the serving Eq.-4' instance (compute side =
+            the decode fleet, service side = the prefill group) — and
+            emits a `ReplanDecision` behind the usual hysteresis;
+  regroup   `ServiceGraph.regroup({"prefill": rows})` re-partitions the
+            serving topology and `DisaggEngine.resize` applies it:
+            pending prompts re-admit onto the new prefill rows and
+            every in-flight KV slot migrates into the re-sized decode
+            pool through `migrate_cache_into_slot`. A shrink that
+            cannot fit the occupied slots is *deferred* (the
+            controller holds the decision pending) until enough
+            requests drain — regrouping never drops a request.
+
+`reshard_serving_state` is the SPMD-layer counterpart: it migrates the
+`init_disagg_state` cache/tokens layout between two row splits of the
+same mesh through `launch.elastic.reshard_state` (slot contents are
+host-gathered from the old decode rows, re-dealt over the new ones,
+and re-placed with the axis sharding).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.adapt import AdaptPolicy, ReplanController, StageTrait
+from repro.core.groups import GroupedMesh
+from repro.launch.elastic import reshard_state
+from repro.serve.disagg import PREFILL, DisaggConfig, DisaggEngine, serving_graph
+from repro.serve.sched import FleetScheduler
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Sizing + adaptation knobs of a serving fleet.
+
+    ``n_rows`` is the total row budget (prefill + decode);
+    ``slots_per_row`` converts decode rows into decode slots, so a
+    regroup that moves a row between the groups re-sizes the slot pool
+    too. ``adapt=None`` freezes the split (the static-disagg baseline);
+    an `AdaptPolicy` closes the loop. ``prefill_cost_ratio`` /
+    ``prefill_bytes_per_token`` are the prefill stage's `StageTrait`
+    constants: seconds per prompt token over seconds per decode
+    slot-step, and KV bytes migrated per prompt token (calibrate them
+    from measured per-op costs, as fig13 does).
+    """
+
+    n_rows: int = 8
+    prefill_rows: int = 2
+    slots_per_row: int = 2
+    max_len: int = 512
+    eos_id: int = -1
+    prefill_chunk: int = 32
+    adapt: AdaptPolicy | None = None
+    prefill_cost_ratio: float = 1.0
+    prefill_bytes_per_token: float = 256.0
+    # a deferred regroup (shrink blocked by occupied slots) is dropped
+    # after this many ticks: under sustained load the decode pool may
+    # never drain below the proposed size, and holding the decision
+    # forever would both freeze planning and eventually apply a verdict
+    # computed from a long-gone load window
+    max_deferrals: int = 8
+    # per-tick control-loop records kept on FleetEngine.report. None =
+    # unbounded (benchmarks replay finite traces and cumsum the whole
+    # wall history); a live fleet should bound it like the ledger's
+    # tick window
+    report_window: int | None = None
+
+    @property
+    def decode_rows(self) -> int:
+        return self.n_rows - self.prefill_rows
+
+
+class FleetEngine:
+    """`DisaggEngine` + `FleetScheduler` + the closed control loop.
+
+    ``clock`` maps an engine tick report (`DisaggEngine.last_tick`) to
+    that tick's wall seconds — the virtual-clock hook the benchmarks
+    use on fake devices (DESIGN.md §8); without it the measured host
+    wall feeds the ledger. ``mesh`` optionally binds a real
+    `ServiceGraph` so every regroup re-partitions the serving topology
+    through `ServiceGraph.regroup` (omitted, the row split is tracked
+    arithmetically — the host engine needs no mesh to run).
+    """
+
+    def __init__(
+        self,
+        model,
+        params,
+        cfg: FleetConfig,
+        sched: FleetScheduler | None = None,
+        *,
+        mesh=None,
+        clock: Callable[[dict], float] | None = None,
+    ):
+        if not 0 < cfg.prefill_rows < cfg.n_rows:
+            raise ValueError(
+                f"prefill_rows={cfg.prefill_rows} must leave >= 1 decode row "
+                f"of {cfg.n_rows}"
+            )
+        self.cfg = cfg
+        self.clock = clock
+        self.prefill_rows = cfg.prefill_rows
+        self.eng = DisaggEngine(
+            model,
+            params,
+            DisaggConfig(
+                n_prefill_rows=cfg.prefill_rows,
+                decode_slots=cfg.decode_rows * cfg.slots_per_row,
+                max_len=cfg.max_len,
+                eos_id=cfg.eos_id,
+                prefill_chunk=cfg.prefill_chunk,
+            ),
+            sched=sched,
+        )
+        self.graph = None
+        if mesh is not None:
+            if mesh.shape["data"] != cfg.n_rows:
+                raise ValueError(
+                    f"mesh data axis ({mesh.shape['data']}) must match "
+                    f"n_rows={cfg.n_rows}"
+                )
+            gmesh = GroupedMesh.build_rows(
+                mesh, rows={PREFILL: cfg.prefill_rows}
+            )
+            self.graph = serving_graph(gmesh)
+        self.controller = None
+        if cfg.adapt is not None:
+            self.controller = ReplanController(
+                cfg.n_rows,
+                {PREFILL: cfg.prefill_rows},
+                traits=(
+                    StageTrait(
+                        PREFILL,
+                        cost_ratio=cfg.prefill_cost_ratio,
+                        bytes_per_item=cfg.prefill_bytes_per_token,
+                    ),
+                ),
+                policy=cfg.adapt,
+            )
+        self.regroups = 0
+        self.deferrals = 0
+        self.discarded = 0
+        self._pending_age = 0
+        self.report: collections.deque[dict] = collections.deque(
+            maxlen=cfg.report_window
+        )
+
+    # -- engine facade -----------------------------------------------------
+    @property
+    def ledger(self):
+        return self.eng.ledger
+
+    @property
+    def sched(self):
+        return self.eng.sched
+
+    @property
+    def finished(self):
+        return self.eng.finished
+
+    @property
+    def stats(self):
+        return self.eng.stats
+
+    @property
+    def decode_slots(self) -> int:
+        return len(self.eng.slots)
+
+    def submit(self, req) -> bool:
+        return self.eng.submit(req)
+
+    def idle(self) -> bool:
+        return self.eng.idle()
+
+    def workload_sample(self) -> dict:
+        return self.eng.workload_sample()
+
+    # -- the per-tick loop -------------------------------------------------
+    def _work_signals(self, tick: dict) -> tuple[list[float], list[float]]:
+        """(per-prefill-row prompt tokens retired, per-decode-row active
+        slots) of one tick — the measure leg's two vectors."""
+        prefill = [float(w) for w in tick.get("prefill_tokens_per_row", [])]
+        active = tick.get("slots_active", [])
+        spr = self.cfg.slots_per_row
+        decode = [
+            float(sum(active[r * spr : (r + 1) * spr]))
+            for r in range(max(len(active) // spr, 1))
+        ]
+        return prefill, decode
+
+    def step(self, wall_s: float | None = None) -> dict:
+        """One engine tick + one turn of the control loop.
+
+        ``wall_s`` overrides the tick's wall seconds (callers replaying
+        a trace on a virtual clock pass the modeled time); otherwise
+        ``clock(last_tick)`` or the measured host wall is used.
+        """
+        t0 = time.perf_counter()
+        self.eng.step()
+        measured = time.perf_counter() - t0
+        tick = self.eng.last_tick
+        if wall_s is None:
+            wall_s = self.clock(tick) if self.clock is not None else measured
+        prefill_work, decode_work = self._work_signals(tick)
+        # the same sample feeds two windows with DIFFERENT lifetimes:
+        # the FleetLedger tick window is observability (never cleared —
+        # `load_samples` exposes it for headless/offline re-planning),
+        # while the controller's LoadLedger is the planning window and
+        # is cleared on every regroup (old-partition samples do not
+        # describe the new one)
+        self.ledger.record_tick(
+            wall_s=wall_s,
+            prefill_work_rows=prefill_work,
+            decode_work_rows=decode_work,
+            queue_depth=self.eng.workload_sample()["queue_depth"],
+        )
+        rec = {
+            "tick": self.eng.tick,
+            "wall_s": wall_s,
+            "prefill_rows": self.prefill_rows,
+            "decode_slots": self.decode_slots,
+            "regrouped": False,
+            "deferred": False,
+            "discarded": False,
+            "decision": None,
+        }
+        if self.controller is not None:
+            decision = self.controller.step(
+                wall_s, decode_work, {PREFILL: sum(prefill_work)}
+            )
+            rec["decision"] = decision.reason
+            pending = self.controller.pending
+            if pending is not None:
+                if self._try_regroup(pending):
+                    rec["regrouped"] = True
+                    self._pending_age = 0
+                else:
+                    rec["deferred"] = True
+                    self.deferrals += 1
+                    self._pending_age += 1
+                    if self._pending_age > self.cfg.max_deferrals:
+                        # stale: the window that justified this shrink
+                        # has drained past; drop it and re-plan fresh
+                        self.controller.discard_pending()
+                        self.discarded += 1
+                        self._pending_age = 0
+                        rec["discarded"] = True
+        rec["prefill_rows"] = self.prefill_rows
+        rec["decode_slots"] = self.decode_slots
+        self.report.append(rec)
+        return rec
+
+    def _try_regroup(self, decision) -> bool:
+        """Apply a pending regroup if the decode pool can absorb it."""
+        new_pre = int(decision.rows[PREFILL])
+        new_slots = (self.cfg.n_rows - new_pre) * self.cfg.slots_per_row
+        occupied = sum(s is not None for s in self.eng.slots)
+        if occupied > new_slots:
+            return False  # defer: shrink would strand in-flight slots
+        if self.graph is not None:
+            self.graph = self.graph.regroup({PREFILL: new_pre})
+        self.eng.resize(new_pre, new_slots)
+        self.prefill_rows = new_pre
+        self.controller.apply(decision)
+        self.regroups += 1
+        return True
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.idle():
+                return
+            self.step()
+
+
+# -- SPMD-layer slot migration --------------------------------------------------
+
+
+def reshard_serving_state(
+    cache: dict,
+    tokens,
+    old_gmesh: GroupedMesh,
+    new_gmesh: GroupedMesh,
+    *,
+    slots_per_row: int,
+    keep: Sequence[int] | None = None,
+):
+    """Migrate `init_disagg_state`'s sharded cache/tokens between two
+    prefill/decode splits of the same mesh via `elastic.reshard_state`.
+
+    The decode group IS the compute group of the serving `GroupedMesh`,
+    so `reshard_state` does exactly the right thing once the state is
+    expressed row-major: old decode rows' slot contents are gathered,
+    re-dealt over the new decode rows (``keep`` selects which global
+    slot indices survive a shrink — default: the head of the pool), and
+    re-placed with the axis sharding. The per-row shared cursor ``pos``
+    migrates as the max over old decode rows (the shared-position
+    contract of `migrate_cache_into_slot`).
+    """
+    n = old_gmesh.axis_size
+    old_c = old_gmesh.compute.size
+    new_c = new_gmesh.compute.size
+    spr = int(slots_per_row)
+    if keep is None:
+        keep = list(range(min(old_c * spr, new_c * spr)))
+    if len(keep) > new_c * spr:
+        raise ValueError(f"{len(keep)} kept slots exceed capacity {new_c * spr}")
+
+    def rows_first(x):
+        """(L, n*spr, ...) slot-batched leaf -> (n, spr, L, ...)."""
+        x = np.asarray(x)
+        moved = np.moveaxis(x, 1, 0)  # (n*spr, L, ...)
+        return moved.reshape((n, spr) + moved.shape[1:])
+
+    state = {
+        "tokens": np.asarray(tokens).reshape(n, spr, 1),
+        "pos": np.asarray(cache["pos"]),
+        **{k: rows_first(v) for k, v in cache.items() if k != "pos"},
+    }
+
+    def repartition(tree, old_g, new_g):
+        out = {}
+        for name, x in tree.items():
+            if name == "pos":
+                out[name] = np.full((new_c,), x.max(initial=0), x.dtype)
+                continue
+            flat = x.reshape((-1,) + x.shape[2:])  # (old_c*spr, ...)
+            dst = np.zeros((new_c * spr,) + flat.shape[1:], flat.dtype)
+            dst[: len(keep)] = flat[list(keep)]
+            out[name] = dst.reshape((new_c, spr) + flat.shape[1:])
+        return out
+
+    migrated = reshard_state(state, old_gmesh, new_gmesh, repartition=repartition)
+    mesh, axis = new_gmesh.mesh, new_gmesh.axis
+
+    def slots_first(x):
+        """(n, spr, L, ...) -> (L, n*spr, ...) with the axis sharding."""
+        host = np.asarray(x).reshape((n * spr,) + x.shape[2:])
+        arr = jnp.asarray(np.moveaxis(host, 0, 1))
+        spec = P(None, axis, *(None,) * (arr.ndim - 2))
+        return jax.device_put(arr, NamedSharding(mesh, spec))
+
+    new_cache = {
+        k: slots_first(migrated[k]) for k in cache if k != "pos"
+    }
+    new_cache["pos"] = jax.device_put(
+        jnp.asarray(np.asarray(migrated["pos"])), NamedSharding(mesh, P(axis))
+    )
+    new_tokens = jax.device_put(
+        jnp.asarray(np.asarray(migrated["tokens"]).reshape(n * spr, 1)),
+        NamedSharding(mesh, P(axis, None)),
+    )
+    return new_cache, new_tokens
+
+
+__all__ = ["FleetConfig", "FleetEngine", "reshard_serving_state"]

@@ -426,3 +426,47 @@ expected = np.sort(np.asarray(x[:7]).reshape(-1))
 np.testing.assert_array_equal(got, expected)
 print("OK")
 """)
+
+
+def test_fleet_reshard_serving_state(multidevice):
+    """SPMD-layer serving regroup: `reshard_serving_state` moves the
+    sharded decode slot pool between two prefill/decode splits of the
+    same mesh through `elastic.reshard_state` — kept slot contents,
+    tokens, and the shared cursor survive exactly; dropped and padded
+    slots are zero."""
+    multidevice("""
+import jax.numpy as jnp, numpy as np
+from repro.core.groups import GroupedMesh
+from repro.configs import get_smoke
+from repro.models import build
+from repro.serve.disagg import init_disagg_state
+from repro.serve.fleet import reshard_serving_state
+from repro.utils.compat import make_mesh
+import dataclasses, jax
+mesh = make_mesh((8,), ("data",))
+cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+model = build(cfg)
+old_g = GroupedMesh.build_rows(mesh, rows={"prefill": 2})  # decode rows 0..5
+new_g = GroupedMesh.build_rows(mesh, rows={"prefill": 4})  # decode rows 0..3
+cache, tokens = init_disagg_state(model, old_g, slots_per_row=1, max_len=16)
+rng = np.random.default_rng(0)
+k = rng.normal(size=cache["k"].shape).astype(np.float32)
+v = rng.normal(size=cache["v"].shape).astype(np.float32)
+cache["k"], cache["v"] = jnp.asarray(k), jnp.asarray(v)
+cache["pos"] = jnp.asarray([5, 5, 5, 5, 5, 5, 0, 0], jnp.int32)
+tokens = jnp.asarray(np.arange(8, dtype=np.int32)[:, None])
+keep = [0, 2, 5]  # three occupied old decode slots survive the shrink
+new_cache, new_tokens = reshard_serving_state(
+    cache, tokens, old_g, new_g, slots_per_row=1, keep=keep)
+assert new_cache["k"].shape == cache["k"].shape  # same global slot batch
+for j, src in enumerate(keep):
+    np.testing.assert_array_equal(np.asarray(new_cache["k"])[:, j], k[:, src])
+    np.testing.assert_array_equal(np.asarray(new_cache["v"])[:, j], v[:, src])
+    assert int(new_tokens[j, 0]) == src
+# beyond the kept slots: zero (freed + service-row padding)
+assert float(np.abs(np.asarray(new_cache["k"])[:, len(keep):]).sum()) == 0.0
+assert int(np.asarray(new_tokens)[len(keep):].sum()) == 0
+# shared decode cursor survives on every new decode row
+np.testing.assert_array_equal(np.asarray(new_cache["pos"])[:4], [5, 5, 5, 5])
+print("OK")
+""")

@@ -1,0 +1,460 @@
+"""ServeFleet: traffic determinism/replay, scheduler invariants
+(starvation-freedom, work conservation, token budget), ledger
+accounting, the FIFO deque bit-identity, and the closed-loop fleet's
+slot-migrating regroup."""
+import dataclasses
+from collections import deque
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.core.adapt import AdaptPolicy
+from repro.core.imbalance import ImbalanceModel
+from repro.serve.engine import Request, prefill_bucket
+from repro.serve.sched import FleetLedger, FleetScheduler
+from repro.serve.traffic import (
+    SLOClass,
+    TenantSpec,
+    load_trace,
+    replay,
+    save_trace,
+    scenario,
+)
+
+
+def _req(uid, n_tokens, tenant="default", max_new=4):
+    return Request(uid=uid, prompt=np.zeros(int(n_tokens), np.int32),
+                   max_new_tokens=max_new, tenant=tenant)
+
+
+# -- prefill bucket clamp (satellite fix) ---------------------------------------
+
+
+def test_prefill_bucket_clamps_at_max_len():
+    # near max_len the doubling must stop AT max_len, not past it —
+    # an over-doubled bucket would compile an invalid prefill shape
+    assert prefill_bucket(100, max_len=160) == 128
+    assert prefill_bucket(129, max_len=160) == 160
+    assert prefill_bucket(160, max_len=160) == 160
+    assert prefill_bucket(5) == 8  # unclamped path unchanged
+    with pytest.raises(ValueError):
+        prefill_bucket(161, max_len=160)
+
+
+# -- traffic engine -------------------------------------------------------------
+
+
+def test_scenario_deterministic_and_replayable(tmp_path):
+    sc = scenario("bursty-multitenant")
+    a, b = sc.generate(), sc.generate()
+    assert a == b
+    path = str(tmp_path / "trace.json")
+    save_trace(path, sc.name, a)
+    name, c = load_trace(path)
+    assert name == sc.name and c == a
+    # materialized prompts are reproducible bit-for-bit
+    ra = sc.requests(vocab_size=97, events=a[:8])
+    rb = sc.requests(vocab_size=97, events=a[:8])
+    for (_, x), (_, y) in zip(ra, rb):
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+        assert x.tenant == y.tenant and x.max_new_tokens == y.max_new_tokens
+
+
+def test_scenario_surge_shifts_the_mix():
+    sc = scenario("bursty-multitenant")
+    events = sc.generate()
+    rag = sc.tenant("rag")
+    pre = sum(e.tenant == "rag" for e in events if e.tick < rag.surge_at)
+    post = sum(e.tenant == "rag" for e in events if e.tick >= rag.surge_at)
+    pre_rate = pre / rag.surge_at
+    post_rate = post / (sc.horizon - rag.surge_at)
+    assert post_rate > 2.0 * pre_rate  # the drift is real
+
+
+def test_length_skew_uses_imbalance_branches():
+    rng = np.random.default_rng(0)
+    heavy = ImbalanceModel(kind="pareto", mean=32.0, sigma=0.8, pareto_shape=2.5)
+    light = ImbalanceModel(kind="lognormal", mean=32.0, sigma=0.2)
+    h = heavy.sample_lengths(4000, rng, minimum=2)
+    li = light.sample_lengths(4000, rng, minimum=2)
+    assert h.min() >= 2 and li.min() >= 2
+    assert h.std() > 2.0 * li.std()  # pareto tail is heavier
+    capped = heavy.sample_lengths(1000, rng, minimum=2, cap=64)
+    assert capped.max() <= 64
+
+
+# -- scheduler invariants -------------------------------------------------------
+
+
+@given(lens=st.lists(st.integers(1, 50), min_size=1, max_size=40),
+       budget=st.integers(50, 200), inflight=st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_admission_never_exceeds_token_budget(lens, budget, inflight):
+    s = FleetScheduler(token_budget=budget)
+    accepted = 0
+    for i, n in enumerate(lens):
+        accepted += s.submit(_req(i, n))
+    got = s.take(0, inflight_tokens=inflight)
+    assert sum(int(r.prompt.shape[0]) for r in got) <= max(budget - inflight, 0)
+    # rejected-at-the-door requests are exactly the never-fit ones
+    assert accepted + s.rejected == len(lens)
+    assert s.rejected == sum(n > budget for n in lens)
+
+
+@given(lens=st.lists(st.integers(1, 30), min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_work_conserving(lens):
+    """Budget and slots permitting, a non-empty queue always yields at
+    least one admission."""
+    s = FleetScheduler(token_budget=100)
+    for i, n in enumerate(lens):
+        s.submit(_req(i, min(n, 100)))
+    while s.pending():
+        got = s.take(0, max_n=4, inflight_tokens=0)
+        assert got, "scheduler idled with queued work and free budget"
+
+
+def test_wfq_tracks_weights_under_backlog():
+    """Two backlogged tenants with 3:1 weights get ~3:1 admitted prompt
+    tokens over a window."""
+    tenants = (TenantSpec(name="a", weight=3.0), TenantSpec(name="b", weight=1.0))
+    s = FleetScheduler(tenants)
+    for i in range(60):
+        s.submit(_req(i, 10, tenant="a"))
+        s.submit(_req(1000 + i, 10, tenant="b"))
+    taken = {"a": 0, "b": 0}
+    for r in s.take(0, max_n=40):
+        taken[r.tenant] += int(r.prompt.shape[0])
+    assert taken["a"] == pytest.approx(3 * taken["b"], rel=0.34)
+
+
+@given(heavy_rate=st.integers(2, 6), light_at=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_wfq_starvation_free(heavy_rate, light_at):
+    """A single light-tenant request survives adversarial continuous
+    heavy-tenant arrivals: WFQ finish tags advance with every pop, so
+    the light request's tag is eventually the minimum."""
+    tenants = (TenantSpec(name="heavy", weight=8.0), TenantSpec(name="light", weight=0.1))
+    s = FleetScheduler(tenants, aging=0.0)
+    uid = 0
+    target = _req(99999, 20, tenant="light")
+    popped_at = None
+    for t in range(400):
+        if t == light_at:
+            s.submit(target, now=t)
+        for _ in range(heavy_rate):  # heavy tenant floods every tick
+            s.submit(_req(uid, 10, tenant="heavy"), now=t)
+            uid += 1
+        for r in s.take(t, max_n=2):
+            if r.uid == target.uid:
+                popped_at = t
+        if popped_at is not None:
+            break
+    assert popped_at is not None, "light tenant starved"
+
+
+def test_deadline_pull_forward():
+    """A request whose TTFT deadline is at risk jumps the fairness
+    order (EDF among the at-risk heads)."""
+    tight = SLOClass(name="tight", ttft_deadline=3, weight=1.0)
+    loose = SLOClass(name="loose", ttft_deadline=1000, weight=1.0)
+    tenants = (TenantSpec(name="vip", weight=100.0, slo=loose),
+               TenantSpec(name="slo", weight=0.01, slo=tight))
+    s = FleetScheduler(tenants, urgent_slack=2)
+    # vip's huge weight would otherwise always win
+    for i in range(5):
+        s.submit(_req(i, 10, tenant="vip"), now=0)
+    s.submit(_req(100, 10, tenant="slo"), now=0)
+    got = s.take(2, max_n=1)  # slack = 0+3-2 = 1 <= urgent_slack
+    assert got[0].uid == 100
+
+
+def test_fifo_policy_matches_deque_order():
+    s = FleetScheduler.fifo()
+    ref = deque()
+    rng = np.random.default_rng(0)
+    for i in range(50):
+        r = _req(i, int(rng.integers(1, 30)), tenant=["a", "b"][i % 2])
+        s.submit(r, now=i)
+        ref.append(r)
+    while ref:
+        k = int(rng.integers(1, 4))
+        got = s.take(0, max_n=k)
+        want = [ref.popleft() for _ in range(len(got))]
+        assert [r.uid for r in got] == [r.uid for r in want]
+    assert s.pending() == 0
+
+
+# -- ledger ---------------------------------------------------------------------
+
+
+def test_ledger_percentiles_and_goodput():
+    led = FleetLedger()
+    slo = SLOClass(name="s", ttft_deadline=5, latency_deadline=10)
+    for i, (sub, first, done) in enumerate([(0, 2, 6), (0, 4, 9), (0, 9, 20)]):
+        r = _req(i, 4, max_new=3)
+        r.submitted_tick, r.first_token_tick = sub, first
+        r.out_tokens = [1, 2, 3]
+        led.record_done(r, slo, done)
+    assert led.ttft_percentile(50) == 4.0
+    assert led.latency_percentile(99) >= 19.0
+    # the late request (ttft 9 > 5, latency 20 > 10) contributes no good tokens
+    assert led.good_tokens() == 6
+    snap = led.snapshot()
+    assert snap["completions"] == 3 and snap["by_class"]["s"]["completions"] == 3
+
+
+def test_ledger_load_samples_bridge():
+    led = FleetLedger(window=4)
+    for k in range(6):
+        led.record_tick(wall_s=0.1 * (k + 1), prefill_work_rows=[k, 2 * k],
+                        decode_work_rows=[1.0, 2.0], queue_depth=k)
+    samples = led.load_samples()
+    assert len(samples) == 4  # sliding window
+    wall, work, items = samples[-1]
+    assert wall == pytest.approx(0.6)
+    assert work == [1.0, 2.0]
+    assert items == {"prefill": 15.0}
+
+
+# -- engines under the scheduler ------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import build
+
+    cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class _DequeShim:
+    """The PR-1 deque admission path, reimplemented independently as
+    the bit-identity reference."""
+
+    def __init__(self):
+        self.q = deque()
+
+    def submit(self, req, now=0):
+        self.q.append(req)
+        return True
+
+    def take(self, now, max_n=None, inflight_tokens=0):
+        out = []
+        while self.q and (max_n is None or len(out) < max_n):
+            out.append(self.q.popleft())
+        return out
+
+    def pending(self):
+        return len(self.q)
+
+    def slo(self, tenant):
+        return SLOClass()
+
+
+def test_engine_fifo_bit_identical_to_deque_path(tiny_model):
+    """Single-tenant FIFO: the FleetScheduler colocated engine emits
+    the same jitted-call sequence as the pre-ServeFleet deque engine —
+    decode logits agree bit-for-bit every tick."""
+    from repro.serve.engine import Engine, EngineConfig
+
+    cfg, model, params = tiny_model
+    sc = scenario("single-fifo")
+    a = Engine(model, params, EngineConfig(max_batch=3, max_len=64))
+    b = Engine(model, params, EngineConfig(max_batch=3, max_len=64),
+               sched=_DequeShim())
+    for e, r in sc.requests(cfg.vocab_size):
+        a.submit(dataclasses.replace(r, out_tokens=[]))
+        b.submit(dataclasses.replace(r, out_tokens=[]))
+    steps = 0
+    while not a.idle():
+        a.step()
+        b.step()
+        steps += 1
+        assert steps < 500
+        if a.last_tick["decode_batch"]:
+            np.testing.assert_array_equal(
+                np.asarray(a.last_logits), np.asarray(b.last_logits)
+            )
+    assert b.idle()
+    assert [r.out_tokens for r in a.finished] == [r.out_tokens for r in b.finished]
+    np.testing.assert_array_equal(np.asarray(a.cache["k"]), np.asarray(b.cache["k"]))
+
+
+def test_disagg_engine_budget_respected(tiny_model):
+    """The disaggregated engine's outstanding admitted prompt tokens
+    (prefill rows + handoff) never exceed the token budget."""
+    from repro.serve.disagg import DisaggConfig, DisaggEngine
+
+    cfg, model, params = tiny_model
+    budget = 24
+    eng = DisaggEngine(
+        model, params,
+        DisaggConfig(n_prefill_rows=2, decode_slots=2, max_len=64, prefill_chunk=4),
+        sched=FleetScheduler(token_budget=budget),
+    )
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        eng.submit(_req(i, int(rng.integers(2, 12)), max_new=3))
+    steps = 0
+    while not eng.idle():
+        # the invariant is checked at the admission boundary: what sits
+        # in the prefill rows + handoff after take() must fit the budget
+        eng.step()
+        assert eng._inflight_prompt_tokens() <= budget
+        steps += 1
+        assert steps < 500
+    assert len(eng.finished) == 12
+
+
+def test_fleet_engine_regroup_migrates_inflight_slots(tiny_model):
+    """Force a regroup with occupied decode slots: every in-flight
+    request's KV rows survive the migration exactly and every request
+    still completes."""
+    import jax.numpy as jnp
+
+    from repro.serve.fleet import FleetConfig, FleetEngine
+
+    cfg, model, params = tiny_model
+    fc = FleetConfig(n_rows=4, prefill_rows=1, slots_per_row=1, max_len=64,
+                     prefill_chunk=0, adapt=None)
+    fe = FleetEngine(model, params, fc)
+    for i in range(2):
+        fe.submit(_req(i, 5 + i, max_new=6))
+    for _ in range(3):  # admit + a couple of decode steps
+        fe.step()
+    occupied = [i for i, s in enumerate(fe.eng.slots) if s is not None]
+    assert len(occupied) == 2, "setup: expected 2 in-flight slots"
+    before = {
+        s.uid: (np.asarray(fe.eng.cache["k"][:, i]), np.asarray(fe.eng.tokens[i]))
+        for i, s in enumerate(fe.eng.slots) if s is not None
+    }
+    # act like an applied ReplanDecision: 2 prefill rows -> 2 decode slots
+    fe.eng.resize(n_prefill_rows=2, decode_slots=2)
+    fe.prefill_rows = 2
+    after_slots = [s for s in fe.eng.slots if s is not None]
+    assert len(after_slots) == len(occupied)
+    for j, s in enumerate(fe.eng.slots):
+        if s is None:
+            continue
+        k_new = np.asarray(fe.eng.cache["k"][:, j])
+        np.testing.assert_array_equal(k_new, before[s.uid][0])
+        np.testing.assert_array_equal(np.asarray(fe.eng.tokens[j]), before[s.uid][1])
+    assert int(fe.eng.cache["pos"]) > 0  # shared cursor survived
+    fe.run_until_drained()
+    assert sorted(r.uid for r in fe.eng.finished) == [0, 1]
+    assert all(len(r.out_tokens) == 6 for r in fe.eng.finished)
+    assert isinstance(fe.eng.tokens, jnp.ndarray)
+
+
+def test_fleet_engine_defers_shrink_past_occupancy(tiny_model):
+    """A shrink that would strand in-flight slots raises at the engine
+    and is deferred by the fleet until requests drain."""
+    from repro.serve.fleet import FleetConfig, FleetEngine
+
+    cfg, model, params = tiny_model
+    fc = FleetConfig(n_rows=4, prefill_rows=1, slots_per_row=1, max_len=64,
+                     prefill_chunk=0, adapt=None)
+    fe = FleetEngine(model, params, fc)
+    for i in range(3):
+        fe.submit(_req(i, 4, max_new=8))
+    for _ in range(3):
+        fe.step()
+    with pytest.raises(ValueError):
+        fe.eng.resize(n_prefill_rows=3, decode_slots=1)
+
+
+def test_fleet_discards_stale_deferred_regroup(tiny_model):
+    """A shrink blocked past max_deferrals ticks is dropped (the window
+    that justified it has drained past) and planning resumes — a
+    blocked regroup can never freeze the controller forever."""
+    from repro.core.adapt import ReplanDecision
+    from repro.serve.fleet import FleetConfig, FleetEngine
+
+    cfg, model, params = tiny_model
+    fc = FleetConfig(n_rows=4, prefill_rows=1, slots_per_row=1, max_len=64,
+                     prefill_chunk=0, max_deferrals=3,
+                     adapt=AdaptPolicy(window=2, cooldown=1))
+    fe = FleetEngine(model, params, fc)
+    for i in range(3):  # keep all 3 decode slots occupied for a while
+        fe.submit(_req(i, 4, max_new=30))
+    for _ in range(4):
+        fe.step()
+    # plant an inapplicable shrink (3 prefill rows -> 1 decode slot)
+    fe.controller.pending = ReplanDecision(
+        True, {"prefill": 3}, 2.0, "forced", None
+    )
+    deferred = discarded = 0
+    for _ in range(fc.max_deferrals + 2):
+        rec = fe.step()
+        deferred += rec["deferred"]
+        discarded += rec["discarded"]
+    assert discarded == 1 and deferred >= fc.max_deferrals
+    assert fe.controller.pending is None  # planning resumed
+    # the planted inapplicable shrink itself never landed: with all 3
+    # slots occupied, 1 decode slot can't hold them
+    assert fe.decode_slots >= 3 - sum(r.done for r in fe.eng.finished)
+    fe.run_until_drained()
+    assert len(fe.finished) == 3
+
+
+def test_controller_pending_decision_expires():
+    """A firing decision a caller never applies auto-expires after
+    policy.pending_ttl_steps supersteps of measurements, so declining
+    to act can never freeze the planning loop (core/adapt.py)."""
+    from repro.core.adapt import ReplanController, StageTrait
+
+    pol = AdaptPolicy(window=2, cooldown=1, pending_ttl=3)
+    ctl = ReplanController(8, {"prefill": 2}, (StageTrait("prefill"),), pol)
+    from repro.core.adapt import ReplanDecision
+
+    ctl.pending = ReplanDecision(True, {"prefill": 3}, 2.0, "forced", None)
+    reasons = []
+    for _ in range(pol.pending_ttl_steps + 2):
+        reasons.append(ctl.step(1.0, [1.0] * 6).reason)
+    assert "pending regroup awaiting application" in reasons  # it DID gate
+    # ...but the never-applied decision expired and planning resumed
+    # (a fresh verdict may itself fire and re-arm pending — that's fine)
+    assert ctl.pending is None or ctl.pending.reason != "forced"
+    post = reasons[pol.pending_ttl_steps :]
+    assert any(r != "pending regroup awaiting application" for r in post)
+
+
+def test_fleet_closed_loop_regroups_under_surge(tiny_model):
+    """End-to-end: under the bursty-multitenant surge (virtual clock)
+    the controller regroups at least once, no request is lost, and the
+    prefill group grows during the prefill-bound phase."""
+    from repro.serve.fleet import FleetConfig, FleetEngine
+
+    cfg, model, params = tiny_model
+    sc = scenario("bursty-multitenant")
+    sc = dataclasses.replace(sc, horizon=30, max_prompt=56,
+                             tenants=tuple(
+                                 dataclasses.replace(t, surge_at=10)
+                                 if t.surge_at >= 0 else t
+                                 for t in sc.tenants))
+
+    def clock(tick):
+        pre = max(tick["prefill_tokens_per_row"], default=0)
+        return max(float(pre), 2.0 * tick["decode_batch"] / 3.0, 1.0) * 1e-3
+
+    fc = FleetConfig(n_rows=8, prefill_rows=2, slots_per_row=2, max_len=96,
+                     prefill_chunk=8,
+                     adapt=AdaptPolicy(window=3, cooldown=3,
+                                       speedup_threshold=1.05, row_budget=5),
+                     prefill_cost_ratio=0.5, prefill_bytes_per_token=64.0)
+    fe = FleetEngine(model, params, fc, sched=FleetScheduler(sc.tenants),
+                     clock=clock)
+    pairs = replay(fe, sc, cfg.vocab_size, max_ticks=2000)
+    assert fe.regroups >= 1
+    assert max(r["prefill_rows"] for r in fe.report) > 2
+    assert len(fe.finished) == len(pairs)
+    assert fe.ledger.snapshot()["completions"] == len(pairs)

@@ -87,17 +87,21 @@ def test_lr_schedule():
 
 
 def test_grad_compress_error_feedback():
-    from repro.train.grad_compress import (
-        compress_with_feedback, dequantize_leaf, init_residual,
-    )
+    # the channel-level error feedback (core/wire, the sole survivor of
+    # the deleted train/grad_compress shim): what the consumer decodes
+    # off the int8 wire must track the true gradient sum over steps
+    from repro.core.wire import CODECS, compress_with_feedback, init_residual
+
+    codec = CODECS["int8"]
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=64), jnp.float32)}
     res = init_residual(g)
     total_true = np.zeros(64)
     total_sent = np.zeros(64)
     for _ in range(50):
-        payload, res = compress_with_feedback(g, res)
+        corrected, res = compress_with_feedback(g, res, codec=codec)
+        sent = codec.decode_leaf(codec.encode_leaf(corrected["w"]))
         total_true += np.asarray(g["w"])
-        total_sent += np.asarray(dequantize_leaf(payload["w"]))
+        total_sent += np.asarray(sent)
     # error feedback: accumulated quantized sum tracks the true sum
     rel = np.abs(total_sent - total_true).max() / np.abs(total_true).max()
     assert rel < 0.01, rel
