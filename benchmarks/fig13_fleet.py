@@ -153,13 +153,13 @@ def _stats(ledger, walls: list[float]) -> dict:
 
 
 def _drive_colocated(model, params, sc, costs) -> dict:
-    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve import EngineConfig, make_engine
     from repro.serve.sched import FleetScheduler
     from repro.serve.traffic import replay
 
     c_pre, c_dec, c_mig = costs
     slots = N_ROWS * SLOTS_PER_ROW
-    eng = Engine(
+    eng = make_engine(
         model, params, EngineConfig(max_batch=slots, max_len=MAX_LEN),
         sched=FleetScheduler(sc.tenants, token_budget=TOKEN_BUDGET),
     )
@@ -178,7 +178,7 @@ def _drive_colocated(model, params, sc, costs) -> dict:
 
 
 def _drive_disagg(model, params, sc, costs, *, policy, mesh=None) -> dict:
-    from repro.serve.fleet import FleetConfig, FleetEngine
+    from repro.serve import FleetConfig, make_engine
     from repro.serve.sched import FleetScheduler
     from repro.serve.traffic import replay
 
@@ -209,7 +209,7 @@ def _drive_disagg(model, params, sc, costs, *, policy, mesh=None) -> dict:
         dcost += c_mig * tick["handoffs"]
         return max(pre, dcost)
 
-    fe = FleetEngine(
+    fe = make_engine(
         model, params, cfg,
         sched=FleetScheduler(sc.tenants, token_budget=TOKEN_BUDGET, aging=0.05),
         mesh=mesh,

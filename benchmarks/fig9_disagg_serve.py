@@ -96,15 +96,13 @@ def run(mesh) -> list[str]:
         serve_speedup,
     )
     from repro.models import build
+    from repro.serve import DisaggConfig, EngineConfig, Request, make_engine
     from repro.serve.disagg import (
-        DisaggConfig,
-        DisaggEngine,
         build_disagg_spmd_step,
         init_disagg_state,
         kv_handoff_channel,
         serving_mesh,
     )
-    from repro.serve.engine import Engine, EngineConfig, Request
 
     args = getattr(run, "args", None) or _parse_args([])
     cfg = get_smoke("tinyllama-1.1b")
@@ -169,13 +167,16 @@ def run(mesh) -> list[str]:
     cache_one = model.init_cache(1, 32)
     c_mig = bench(lambda: mig(cache_full, cache_one, 0), reps=3)
 
-    # -- tick traces of both engines on the same request trace
-    eng = Engine(model, params, EngineConfig(max_batch=slots, max_len=max_len))
+    # -- tick traces of both engines on the same request trace (both
+    # built through the unified make_engine entry point — the config
+    # type picks the construction)
+    eng = make_engine(model, params,
+                      EngineConfig(max_batch=slots, max_len=max_len))
     ticks_colo = _trace(eng, make_requests())
     # prefill_chunk trades TTFT granularity against per-chunk dispatch
     # overhead; coarse chunks (vLLM-style ~512-token chunks scaled to
     # the smoke model) keep the virtual clock honest about dispatch.
-    dis = DisaggEngine(
+    dis = make_engine(
         model, params,
         DisaggConfig(n_prefill_rows=rows_pre, decode_slots=slots, max_len=max_len,
                      prefill_chunk=64),

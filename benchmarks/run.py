@@ -20,13 +20,14 @@ Every run also writes the machine-readable perf trajectory at the repo
 root: ``BENCH_channel.json`` (per-figure wall seconds + CSV rows, plus
 the structured ChannelWire record from ``fig11_channel``),
 ``BENCH_adaptive.json`` (the AdaptiveGraph record from
-``fig12_adaptive``) and ``BENCH_fleet.json`` (the ServeFleet record
-from ``fig13_fleet``). Before overwriting, EVERY committed
-``BENCH_*.json`` is read back and its wall-seconds entries
-(``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they sit) are
-diffed — a WARNING (never a failure: containers differ) flags any
-entry >20% slower than the baseline, so the perf trajectory is
-actually consumed, not just written. CI uploads all three JSONs as
+``fig12_adaptive``), ``BENCH_fleet.json`` (the ServeFleet record from
+``fig13_fleet``) and ``BENCH_serve_continuous.json`` (the
+ContinuousServe record from ``fig14_continuous``). Before overwriting,
+EVERY committed ``BENCH_*.json`` is read back and its wall-seconds
+entries (``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they
+sit) are diffed — a WARNING (never a failure: containers differ) flags
+any entry >20% slower than the baseline, so the perf trajectory is
+actually consumed, not just written. CI uploads all four JSONs as
 artifacts.
 """
 import argparse
@@ -117,6 +118,9 @@ def main() -> None:
     parser.add_argument("--fleet-json",
                         default=os.path.join(_REPO, "BENCH_fleet.json"),
                         help="where to write the ServeFleet record")
+    parser.add_argument("--serve-json",
+                        default=os.path.join(_REPO, "BENCH_serve_continuous.json"),
+                        help="where to write the ContinuousServe record")
     args = parser.parse_args()
 
     import jax
@@ -133,6 +137,7 @@ def main() -> None:
         fig11_channel,
         fig12_adaptive,
         fig13_fleet,
+        fig14_continuous,
         roofline_table,
     )
 
@@ -147,6 +152,7 @@ def main() -> None:
         "BENCH_channel": read_baseline(args.json),
         "BENCH_adaptive": read_baseline(args.adaptive_json),
         "BENCH_fleet": read_baseline(args.fleet_json),
+        "BENCH_serve_continuous": read_baseline(args.serve_json),
     }
 
     mesh = make_mesh((8,), ("data",))
@@ -155,7 +161,7 @@ def main() -> None:
     figures: dict[str, dict] = {}
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
-                fig12_adaptive, fig13_fleet, roofline_table):
+                fig12_adaptive, fig13_fleet, fig14_continuous, roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
@@ -190,6 +196,7 @@ def main() -> None:
         "BENCH_channel": (args.json, trajectory),
         "BENCH_adaptive": (args.adaptive_json, fig12_adaptive.LAST),
         "BENCH_fleet": (args.fleet_json, fig13_fleet.LAST),
+        "BENCH_serve_continuous": (args.serve_json, fig14_continuous.LAST),
     }
     for name, (path, rec) in records.items():
         if not rec:

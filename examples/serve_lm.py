@@ -16,7 +16,14 @@ accounting in the FleetLedger. `--adapt` additionally closes the
 measure -> plan -> regroup loop (repro/serve/fleet.py): the
 prefill/decode split re-sizes against the live traffic mix.
 
+`--continuous` switches any engine to slot-level continuous batching
+(a slot freed by retirement refills the same tick); `--paged` adds the
+paged KV store with the cross-tenant prefix cache. Every combination
+builds through the one `make_engine(model, params, cfg)` entry point —
+the driver below never branches on engine type.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py [--disagg]
+      PYTHONPATH=src python examples/serve_lm.py --scenario bursty-prefix --paged
       PYTHONPATH=src python examples/serve_lm.py --scenario bursty-multitenant --adapt
 """
 import argparse
@@ -27,8 +34,13 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build
-from repro.serve.disagg import DisaggConfig, DisaggEngine
-from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve import (
+    DisaggConfig,
+    EngineConfig,
+    KVSpec,
+    Request,
+    make_engine,
+)
 from repro.serve.sched import FleetScheduler
 from repro.serve.traffic import SCENARIOS, replay, scenario
 
@@ -65,6 +77,11 @@ def main():
     ap.add_argument("--adapt", action="store_true",
                     help="close the prefill/decode re-sizing loop "
                          "(implies --disagg, needs --scenario)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-level continuous batching (same-tick refill)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV blocks + cross-tenant prefix cache "
+                         "(implies --continuous)")
     args = ap.parse_args()
 
     cfg = get_smoke("qwen2.5-3b")
@@ -74,32 +91,35 @@ def main():
     sc = scenario(args.scenario) if args.scenario else None
     sched = FleetScheduler(sc.tenants, token_budget=2000, aging=0.05) if sc else None
 
+    # the serving mode rides on the shared ServeConfig base: the same
+    # two fields pick batching + KV for every engine construction
+    batching = "continuous" if (args.continuous or args.paged) else "aligned"
+    kv = (KVSpec(kind="paged", block_size=16, prefix_cache=True)
+          if args.paged else KVSpec())
+
     if args.adapt:
         if sc is None:
             raise SystemExit("--adapt needs --scenario")
         from repro.core.adapt import AdaptPolicy
-        from repro.serve.fleet import FleetConfig, FleetEngine
+        from repro.serve import FleetConfig
 
-        eng = FleetEngine(
-            model, params,
-            FleetConfig(n_rows=8, prefill_rows=2, slots_per_row=1, max_len=160,
-                        prefill_chunk=16,
-                        adapt=AdaptPolicy(window=4, cooldown=4,
-                                          speedup_threshold=1.1, row_budget=5)),
-            sched=sched,
-        )
+        engine_cfg = FleetConfig(
+            n_rows=8, prefill_rows=2, slots_per_row=1, max_len=160,
+            prefill_chunk=16, mode=batching, kv=kv,
+            adapt=AdaptPolicy(window=4, cooldown=4,
+                              speedup_threshold=1.1, row_budget=5))
         mode = "adaptive-disagg"
     elif args.disagg:
-        eng = DisaggEngine(
-            model, params,
-            DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=160),
-            sched=sched,
-        )
+        engine_cfg = DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=160,
+                                  mode=batching, kv=kv)
         mode = "disaggregated"
     else:
-        eng = Engine(model, params, EngineConfig(max_batch=4, max_len=160),
-                     sched=sched)
+        engine_cfg = EngineConfig(max_batch=4, max_len=160,
+                                  mode=batching, kv=kv)
         mode = "colocated"
+    if batching == "continuous":
+        mode += "+paged" if args.paged else "+continuous"
+    eng = make_engine(model, params, engine_cfg, sched=sched)
 
     t0 = time.time()
     if sc is not None:
@@ -118,6 +138,9 @@ def main():
         ttft = [r.first_token_tick - r.submitted_tick for r in eng.finished]
         print(f"prefills handed off: {eng.stats['handoffs']}, "
               f"mean TTFT {np.mean(ttft):.1f} ticks")
+    if args.paged:
+        print(f"prefix cache: {eng.stats['prefix_hit_tokens']} hit tokens, "
+              f"{eng.stats['prefill_skips']} prefill skips")
     if args.adapt:
         print(f"regroups: {eng.regroups} (deferred {eng.deferrals}), final "
               f"prefill rows {eng.prefill_rows}/{eng.cfg.n_rows}, "

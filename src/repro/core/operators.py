@@ -165,6 +165,95 @@ def migrate_cache_into_slot(
     return out
 
 
+# -- paged KV blocks (continuous-batching serving) ------------------------------
+#
+# `migrate_cache_into_slot` writes whole max_len-sized slots; the paged
+# layout replaces the dense (L, B, max_len, d) reservation with a pool
+# of fixed-size KV blocks (L, n_blocks, block_size, d) plus a per-slot
+# *block table* (B, max_blocks) of pool indices, so KV memory scales
+# with live tokens. Block 0 is a permanent zero block: table entries of
+# -1 clamp to it on gather, which makes the gathered dense view of a
+# partially-allocated slot bit-identical to the zero-extended dense
+# cache `migrate_cache_into_slot` would have produced. These are the
+# jittable halves; allocation/refcounting is host-side in
+# `repro.serve.kvstore`.
+
+def paged_gather(pool: jax.Array, table: jax.Array) -> jax.Array:
+    """Block-table gather: (L, n_blocks, bs, d), (B, mb) -> (L, B, mb*bs, d).
+
+    The decode path for paged attention: the dense per-slot view the
+    unmodified decode step consumes. Entries < 0 resolve to block 0
+    (the zero block), so unallocated tail blocks read as zero KV —
+    exactly the dense cache's zero extension.
+    """
+    ln, _, bs, d = pool.shape
+    b, mb = table.shape
+    picked = jnp.take(pool, jnp.maximum(table, 0).reshape(-1), axis=1)
+    return picked.reshape(ln, b, mb, bs, d).reshape(ln, b, mb * bs, d)
+
+
+def paged_gather_cache(k_pool, v_pool, table, lens) -> dict:
+    """The full decode-view cache: gathered k/v + per-slot cursors."""
+    return {
+        "k": paged_gather(k_pool, table),
+        "v": paged_gather(v_pool, table),
+        "pos": jnp.asarray(lens, jnp.int32),
+    }
+
+
+def paged_append(pool: jax.Array, rows: jax.Array, blocks: jax.Array,
+                 offsets: jax.Array) -> jax.Array:
+    """Scatter one new token row per slot into its tail block.
+
+    ``rows`` is (L, n, d) — the KV a ragged decode step wrote at each
+    active slot's cursor — and lands at ``pool[:, blocks[i],
+    offsets[i]]``. Blocks are exclusively owned by their slot (shared
+    prefix blocks are never a tail block), so the scatter indices never
+    collide.
+    """
+    return pool.at[:, blocks, offsets].set(rows)
+
+
+def blockify_cache_leaf(leaf: jax.Array, start: jax.Array | int, n_blocks: int,
+                        block_size: int) -> jax.Array:
+    """(L, 1, s, d) per-request cache leaf -> (L, n_blocks, bs, d) block
+    rows covering positions [start, start + n_blocks*bs), zero-padded
+    past the leaf's end. ``n_blocks``/``block_size`` are host-static
+    (block geometry) while ``start`` (the shared-prefix boundary) may
+    be traced, so a jitted wrapper compiles once per (s, n_blocks)."""
+    ln, one, s, d = leaf.shape
+    if one != 1:
+        raise ValueError(f"per-request cache leaf must be batch-1, got {leaf.shape}")
+    span = n_blocks * block_size
+    # unconditional zero tail: keeps the slice in range for any start
+    # in [0, s] without making the pad amount depend on a traced value
+    leaf = jnp.pad(leaf, ((0, 0), (0, 0), (0, span), (0, 0)))
+    window = jax.lax.dynamic_slice_in_dim(leaf[:, 0], start, span, axis=1)
+    return window.reshape(ln, n_blocks, block_size, d)
+
+
+def migrate_cache_into_blocks(
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    cache1: dict,
+    block_ids: jax.Array,
+    *,
+    start: int,
+    block_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Paged counterpart of `migrate_cache_into_slot`: write a batch-1
+    prefill cache's positions [start, ...) into freshly-allocated pool
+    blocks ``block_ids``. ``start`` is the shared-prefix boundary (0 on
+    a cold admit): positions below it live in refcounted shared blocks
+    and are not rewritten."""
+    n = int(block_ids.shape[0])
+    if n == 0:
+        return k_pool, v_pool
+    k_rows = blockify_cache_leaf(cache1["k"].astype(k_pool.dtype), start, n, block_size)
+    v_rows = blockify_cache_leaf(cache1["v"].astype(v_pool.dtype), start, n, block_size)
+    return k_pool.at[:, block_ids].set(k_rows), v_pool.at[:, block_ids].set(v_rows)
+
+
 # -- buffering I/O group -------------------------------------------------------
 
 def buffer_op(capacity_chunks: int, chunk_elems: int, dtype=jnp.float32) -> StreamOperator:

@@ -148,3 +148,44 @@ def reshard_state(
         for leaf, is_row, orig in zip(new_leaves, row_mask, leaves)
     ]
     return jax.tree.unflatten(treedef, out)
+
+
+def repack_block_pool(k_pool, v_pool, tables, lens, *, keep, n_blocks=None):
+    """Compact a paged KV pool (serve/kvstore.py) onto a surviving slot
+    set — the paged counterpart of a dense slot migration.
+
+    ``keep`` lists the old slot indices that survive, in new-slot
+    order. Every block a kept table references is gathered once and
+    renumbered densely from 1 (block 0 stays the zero block), so
+    cross-slot sharing — prefix-cache blocks referenced by several
+    tables — is preserved without duplication and the new pool is
+    exactly live-demand sized (override with ``n_blocks`` to leave
+    headroom). Returns ``(k_pool, v_pool, tables, lens)`` with device
+    pools and host tables/lens, ready to seed a re-sized store.
+    """
+    tables = np.asarray(tables)
+    lens = np.asarray(lens)
+    mapping: dict[int, int] = {}
+    new_tables = np.full((len(keep), tables.shape[1]), -1, np.int32)
+    for r, src in enumerate(keep):
+        for c, b in enumerate(tables[src]):
+            b = int(b)
+            if b <= 0:
+                continue
+            if b not in mapping:
+                mapping[b] = len(mapping) + 1
+            new_tables[r, c] = mapping[b]
+    need = len(mapping) + 1
+    if n_blocks is None:
+        n_blocks = need
+    if n_blocks < need:
+        raise ValueError(f"n_blocks={n_blocks} < {need} live blocks")
+    order = sorted(mapping, key=mapping.get)
+    ln, _, bs, dk = k_pool.shape
+    new_k = np.zeros((ln, n_blocks, bs, dk), k_pool.dtype)
+    new_v = np.zeros((ln, n_blocks, bs, v_pool.shape[-1]), v_pool.dtype)
+    if order:
+        new_k[:, 1 : 1 + len(order)] = np.asarray(k_pool)[:, order]
+        new_v[:, 1 : 1 + len(order)] = np.asarray(v_pool)[:, order]
+    return (jnp.asarray(new_k), jnp.asarray(new_v), new_tables,
+            lens[list(keep)].copy())

@@ -263,18 +263,28 @@ def prefill_lm(
     equivalent to an unpadded one (causality makes the padded tail
     invisible to the prefix). Used by the disaggregated serving step,
     where SPMD needs a uniform prompt shape across prefill rows.
+    A *vector* ``length`` (B,) packs several independently-ragged
+    prompts into one prefill call (continuous-batching admission):
+    each row's KV is masked at its own length and its logits taken at
+    its own last position, with ``cache["pos"]`` left as the (B,)
+    vector for the caller to slice per request.
     Unsupported for SSM/hybrid caches (their recurrent state would have
     consumed the padding) and for frontend-extended sequences.
     """
     if length is not None and extra_embeds is not None:
         raise ValueError("length-masked prefill does not support extra_embeds")
+    ragged = length is not None and getattr(length, "ndim", 0) == 1
     hidden, aux, kv, sstate = forward_lm(
         cfg, params, tokens, extra_embeds=extra_embeds, want_kv=True
     )
     s = hidden.shape[1]
     if kv is not None:
         kf, vf = kv  # (L, B, S, d_kv)
-        if length is not None:
+        if ragged:
+            keep = (jnp.arange(s)[None, :] < length[:, None])[None, :, :, None]
+            kf = jnp.where(keep, kf, 0)
+            vf = jnp.where(keep, vf, 0)
+        elif length is not None:
             keep = (jnp.arange(s) < length)[None, None, :, None]
             kf = jnp.where(keep, kf, 0)
             vf = jnp.where(keep, vf, 0)
@@ -292,6 +302,10 @@ def prefill_lm(
     if length is None:
         cache["pos"] = jnp.full((), s, jnp.int32)
         last = hidden[:, -1:]
+    elif ragged:
+        cache["pos"] = length.astype(jnp.int32)
+        idx = jnp.reshape(jnp.maximum(length - 1, 0), (-1, 1, 1))
+        last = jnp.take_along_axis(hidden, idx, axis=1)
     else:
         cache["pos"] = jnp.asarray(length, jnp.int32)
         last = jax.lax.dynamic_slice_in_dim(hidden, cache["pos"] - 1, 1, axis=1)
@@ -302,12 +316,28 @@ def prefill_lm(
 
 
 def decode_step_lm(cfg, params: Params, cache: dict, token: jax.Array):
-    """token: (B, 1) int32. Returns (logits (B,1,V), new cache)."""
+    """token: (B, 1) int32. Returns (logits (B,1,V), new cache).
+
+    ``cache["pos"]`` may be a scalar (the engines' historic shared
+    cursor: every slot writes + attends at the same position) or a (B,)
+    vector of per-slot cursors (the *ragged* decode continuous batching
+    needs: each slot writes its token at its own length and attends
+    only its own live prefix). The scalar path is bit-identical to the
+    pre-ragged implementation; ragged is attention-family only (an SSM
+    recurrence has no per-slot rewind).
+    """
     dtype = cfg.dtype
     x = layers.embed(params["embed"], token, dtype)  # (B,1,d)
     pos = cache["pos"]
+    ragged = getattr(pos, "ndim", 0) == 1
+    if ragged and (cfg.family == "ssm" or cfg.hybrid):
+        raise ValueError("ragged decode needs an attention-only cache")
     if cfg.pos_kind == "sinusoidal":
-        x = x + layers.sinusoidal_at(pos, cfg.d_model).astype(dtype)[None, None]
+        if ragged:
+            emb = jax.vmap(lambda p: layers.sinusoidal_at(p, cfg.d_model))(pos)
+            x = x + emb.astype(dtype)[:, None]
+        else:
+            x = x + layers.sinusoidal_at(pos, cfg.d_model).astype(dtype)[None, None]
     windows = layer_windows_array(cfg)
     b = x.shape[0]
     hd = cfg.resolved_head_dim
@@ -330,15 +360,29 @@ def decode_step_lm(cfg, params: Params, cache: dict, token: jax.Array):
         kn = layers.linear(p["attn"]["wk"], h, dtype).reshape(b, 1, cfg.n_kv_heads, hd)
         vn = layers.linear(p["attn"]["wv"], h, dtype)
         if cfg.pos_kind == "rope":
-            pos_arr = jnp.full((1,), pos, jnp.int32)
+            pos_arr = pos[:, None] if ragged else jnp.full((1,), pos, jnp.int32)
             q = layers.apply_rope(q, pos_arr, cfg.rope_theta)
             kn = layers.apply_rope(kn, pos_arr, cfg.rope_theta)
-        kcache = jax.lax.dynamic_update_slice(
-            slices["k"], kn.reshape(b, 1, cfg.d_kv).astype(slices["k"].dtype), (0, pos, 0)
-        )
-        vcache = jax.lax.dynamic_update_slice(
-            slices["v"], vn.reshape(b, 1, cfg.d_kv).astype(slices["v"].dtype), (0, pos, 0)
-        )
+        if ragged:
+            # per-slot masked write: slot i's token lands at pos[i]; a
+            # cursor at/past the cache length writes nothing (the free
+            # slots of a partially-occupied continuous batch)
+            lane = (
+                jnp.arange(slices["k"].shape[1])[None, :] == pos[:, None]
+            )[:, :, None]
+            kcache = jnp.where(
+                lane, kn.reshape(b, 1, cfg.d_kv).astype(slices["k"].dtype), slices["k"]
+            )
+            vcache = jnp.where(
+                lane, vn.reshape(b, 1, cfg.d_kv).astype(slices["v"].dtype), slices["v"]
+            )
+        else:
+            kcache = jax.lax.dynamic_update_slice(
+                slices["k"], kn.reshape(b, 1, cfg.d_kv).astype(slices["k"].dtype), (0, pos, 0)
+            )
+            vcache = jax.lax.dynamic_update_slice(
+                slices["v"], vn.reshape(b, 1, cfg.d_kv).astype(slices["v"].dtype), (0, pos, 0)
+            )
         attn = layers.attention_decode(
             q, kcache, vcache, cfg.n_kv_heads, pos + 1, window, scale
         )

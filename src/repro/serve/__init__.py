@@ -1,7 +1,36 @@
-"""Serving: colocated engine, disaggregated engine, jitted steps, and
-the ServeFleet layer (traffic scenarios, SLO scheduler, closed-loop
-elastic fleet)."""
+"""Serving: one unified engine API over colocated, disaggregated and
+fleet constructions, plus the ServeFleet layer (traffic scenarios, SLO
+scheduler, closed-loop elastic fleet) and the KV stores.
 
+The curated surface (PR 6, ContinuousServe):
+
+  * build an engine: `make_engine(model, params, cfg)` with a
+    `ServeConfig` subclass — `EngineConfig` (colocated),
+    `DisaggConfig` (prefill/decode split), `FleetConfig` (closed
+    loop). All engines implement the `ServingEngine` protocol
+    (``submit / step / drain / stats``), so callers never branch on
+    engine type.
+  * choose KV + batching: ``ServeConfig.mode`` ("aligned" keeps the
+    PR-5 phase loop bit-identical; "continuous" is slot-level
+    continuous batching) and ``ServeConfig.kv`` (a `KVSpec`: dense, or
+    paged blocks with the cross-tenant prefix cache).
+  * drive traffic: `scenario(name)` / `replay(engine, sc, vocab)`.
+
+Migration note: `run_until_drained` is now `drain` (old name kept as an
+alias); engine KV state lives behind ``engine.kv`` (`serve/kvstore.py`)
+with ``engine.cache`` kept as a dense read view.
+"""
+
+from repro.serve.api import KVSpec, ServeConfig, ServingEngine, make_engine
+from repro.serve.disagg import DisaggConfig, DisaggEngine
+from repro.serve.engine import Engine, EngineConfig, PrefillRunner, Request
+from repro.serve.fleet import (
+    FleetConfig,
+    FleetEngine,
+    reshard_paged_serving_state,
+    reshard_serving_state,
+)
+from repro.serve.kvstore import DenseKVStore, PagedKVStore, PrefixCache, make_kvstore
 from repro.serve.sched import FleetLedger, FleetScheduler
 from repro.serve.traffic import (
     SCENARIOS,
@@ -14,11 +43,29 @@ from repro.serve.traffic import (
 
 __all__ = [
     "SCENARIOS",
+    "DenseKVStore",
+    "DisaggConfig",
+    "DisaggEngine",
+    "Engine",
+    "EngineConfig",
+    "FleetConfig",
+    "FleetEngine",
     "FleetLedger",
     "FleetScheduler",
+    "KVSpec",
+    "PagedKVStore",
+    "PrefillRunner",
+    "PrefixCache",
+    "Request",
     "SLOClass",
+    "ServeConfig",
+    "ServingEngine",
     "TenantSpec",
     "TrafficScenario",
+    "make_engine",
+    "make_kvstore",
     "replay",
+    "reshard_paged_serving_state",
+    "reshard_serving_state",
     "scenario",
 ]

@@ -1,0 +1,156 @@
+"""The unified serving-engine API: one protocol, one config hierarchy.
+
+Before ContinuousServe every call site branched on engine type —
+`Engine` vs `DisaggEngine` vs `FleetEngine`, each with its own config
+dataclass repeating `max_len`/`eos_id` and its own KV-cache handling
+inlined. This module is the single front door:
+
+  * `ServingEngine` — the protocol all three engines implement
+    (``submit / step / drain / stats``, plus the `idle` /
+    `workload_sample` / `ledger` observability surface). Code that
+    drives an engine (traffic replay, benchmarks, examples) types
+    against this and never needs to know which construction it got.
+  * `ServeConfig` — the shared config base. `EngineConfig` /
+    `DisaggConfig` / `FleetConfig` subclass it, so the common knobs
+    (``max_len``, ``eos_id``, batching ``mode``, and the `KVSpec`) are
+    declared once.
+  * `KVSpec` — selects the KV-cache implementation (`serve/kvstore.py`):
+    ``dense`` (the historic `max_slots x max_len` reservation, kept
+    bit-identical) or ``paged`` (fixed-size blocks + per-slot block
+    tables, optionally with the cross-tenant prefix cache).
+  * `make_engine` — config-dispatched factory: hand it any ServeConfig
+    subclass and get the matching engine back.
+
+Migration note (PR 6): `Engine.run_until_drained` is now `drain` (the
+old name survives as an alias), and engine KV state moved behind
+``engine.kv`` (a `KVStore`); ``engine.cache`` remains as a read view of
+the dense store for existing call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.serve.engine import Request
+    from repro.serve.sched import FleetLedger
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSpec:
+    """KV-cache implementation selector (see `serve/kvstore.py`).
+
+    ``dense``: one (L, slots, max_len, d) reservation per leaf, the
+    pre-PR-6 layout, bit-identical fallback. ``paged``: a pool of
+    ``n_blocks`` fixed-size blocks of ``block_size`` tokens with
+    per-slot block tables — KV memory scales with live tokens, and
+    ``n_blocks`` (default: the dense-equivalent capacity) can be set
+    well below ``slots * max_len / block_size`` to oversubscribe slots.
+    ``prefix_cache`` turns on the cross-tenant shared-prefix cache:
+    full blocks of previously-prefilled prompts are refcounted and
+    reused by any request whose prompt starts with the same tokens.
+    """
+
+    kind: str = "dense"  # dense | paged
+    block_size: int = 16
+    n_blocks: int | None = None  # None: dense-equivalent capacity
+    prefix_cache: bool = False
+    prefix_capacity: int = 256  # LRU entries before eviction
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "paged"):
+            raise ValueError(f"kv kind must be 'dense' or 'paged', got {self.kind!r}")
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Fields shared by every serving engine.
+
+    ``mode`` selects the batching discipline: ``aligned`` is the
+    historic phase-aligned tick (admission only at the tick head,
+    shared decode cursor — bit-identical to PR 5), ``continuous`` is
+    slot-level continuous batching (a finished prefill takes a decode
+    slot the same tick the slot frees, ragged per-slot cursors, packed
+    multi-prompt prefill). Paged KV requires ``continuous`` (block
+    accounting needs per-slot lengths).
+    """
+
+    max_len: int = 512
+    eos_id: int = -1  # -1: never stop early
+    mode: str = "aligned"  # aligned | continuous
+    kv: KVSpec = dataclasses.field(default_factory=KVSpec)
+
+    def __post_init__(self):
+        if self.mode not in ("aligned", "continuous"):
+            raise ValueError(
+                f"mode must be 'aligned' or 'continuous', got {self.mode!r}"
+            )
+        if self.kv.kind == "paged" and self.mode != "continuous":
+            raise ValueError("paged KV needs mode='continuous' (per-slot cursors)")
+
+
+@runtime_checkable
+class ServingEngine(Protocol):
+    """What it means to be a serving engine.
+
+    `traffic.replay`, the benchmarks and the examples drive engines
+    exclusively through this surface; `Engine`, `DisaggEngine` and
+    `FleetEngine` all implement it.
+    """
+
+    def submit(self, req: "Request") -> bool:
+        """Queue a request; False = refused at the door (budget)."""
+        ...
+
+    def step(self) -> None:
+        """One engine tick: admit, decode, retire."""
+        ...
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        """Step until idle (or give up after ``max_steps``)."""
+        ...
+
+    def idle(self) -> bool:
+        ...
+
+    def workload_sample(self) -> dict:
+        """Per-tick analytics payload (decoupled-analytics stream)."""
+        ...
+
+    @property
+    def stats(self) -> dict:
+        ...
+
+    @property
+    def ledger(self) -> "FleetLedger":
+        ...
+
+
+def make_engine(model, params, cfg: ServeConfig, sched=None, *, mesh=None, clock=None):
+    """Build the engine a config describes — the one entry point.
+
+    `FleetConfig` -> `FleetEngine` (closed-loop disaggregated fleet;
+    ``mesh``/``clock`` forwarded), `DisaggConfig` -> `DisaggEngine`,
+    `EngineConfig` (or a bare `ServeConfig`) -> the colocated `Engine`.
+    """
+    from repro.serve.disagg import DisaggConfig, DisaggEngine
+    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve.fleet import FleetConfig, FleetEngine
+
+    if isinstance(cfg, FleetConfig):
+        return FleetEngine(model, params, cfg, sched=sched, mesh=mesh, clock=clock)
+    if mesh is not None or clock is not None:
+        raise ValueError("mesh/clock are FleetConfig-only knobs")
+    if isinstance(cfg, DisaggConfig):
+        return DisaggEngine(model, params, cfg, sched=sched)
+    if isinstance(cfg, EngineConfig):
+        return Engine(model, params, cfg, sched=sched)
+    if type(cfg) is ServeConfig:  # bare base: colocated with defaults
+        shared = {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
+        return Engine(model, params, EngineConfig(**shared), sched=sched)
+    raise TypeError(f"unknown serving config {type(cfg).__name__}")
+
+
+__all__ = ["KVSpec", "ServeConfig", "ServingEngine", "make_engine"]

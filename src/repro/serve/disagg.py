@@ -50,7 +50,15 @@ from repro.core.operators import (
     migrate_cache_into_slot,
     pack_cache,
 )
-from repro.serve.engine import PrefillRunner, Request
+from repro.serve.api import ServeConfig
+from repro.serve.engine import (
+    PrefillRunner,
+    Request,
+    page_admission_budget,
+    request_block_tokens,
+    supports_length_masked_prefill,
+)
+from repro.serve.kvstore import make_kvstore
 from repro.serve.sched import FleetLedger, FleetScheduler
 from repro.utils.compat import shard_map
 
@@ -62,11 +70,9 @@ PREFILL = "prefill"
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
-class DisaggConfig:
+class DisaggConfig(ServeConfig):
     n_prefill_rows: int = 2
     decode_slots: int = 8
-    max_len: int = 512
-    eos_id: int = -1  # -1: never stop early
     # scheduler granularity: prompt tokens one prefill row retires per
     # tick (chunked prefill at the schedule level). 0 = whole prompt in
     # a single tick.
@@ -138,6 +144,14 @@ class DisaggEngine:
     enqueue their cache on the handoff channel, (2) the decode group
     refills free slots from the channel at the step boundary, (3) one
     decode step runs over the whole slot batch.
+
+    ``mode="continuous"`` adds a second refill *after* retirement — a
+    prefill finished this tick lands in a slot freed this tick instead
+    of waiting for the next boundary — runs the finished prefills of a
+    tick as one packed multi-prompt call, decodes on per-slot ragged
+    cursors through the configured `KVStore`, and (paged + prefix
+    cache) routes whole-prompt cache hits straight to the handoff
+    queue with zero prefill work.
     """
 
     def __init__(self, model, params, cfg: DisaggConfig,
@@ -145,72 +159,142 @@ class DisaggEngine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        if cfg.mode == "continuous" and not supports_length_masked_prefill(model.cfg):
+            raise ValueError(
+                "continuous batching needs an attention-only LM "
+                "(ragged per-slot decode cursors)"
+            )
         # fleet-level SLO queue (default: deque-compatible FIFO) in
         # front of the load-balanced per-row prefill scheduler
         self.sched = sched if sched is not None else FleetScheduler.fifo()
         self.ledger = FleetLedger()
         self.prefill_sched = PrefillScheduler(cfg.n_prefill_rows, cfg.prefill_chunk)
-        self.handoff: deque[tuple[Request, dict, jax.Array]] = deque()
+        # handoff entries: (req, cache1 | None, first | None, logits | None)
+        # — cache1 None marks a whole-prompt prefix-cache hit that
+        # skipped prefill and re-resolves at refill time
+        self.handoff: deque[tuple] = deque()
         self.slots: list[Request | None] = [None] * cfg.decode_slots
         self.finished: list[Request] = []
         self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
         self._decode = jax.jit(model.decode_step)
-        self._migrate = jax.jit(migrate_cache_into_slot)
-        self.cache = model.init_cache(cfg.decode_slots, cfg.max_len)
+        self.kv = make_kvstore(model, cfg.decode_slots, cfg.max_len, cfg.kv,
+                               ragged=cfg.mode == "continuous")
         self.tokens = jnp.zeros((cfg.decode_slots, 1), jnp.int32)
         self.last_logits = None
         self.tick = 0
         # rejected submits live on the scheduler (sched.rejected)
-        self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0, "handoffs": 0}
+        self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0, "handoffs": 0,
+                      "prefix_hit_tokens": 0, "prefill_skips": 0}
         self.last_tick: dict = {}
+
+    @property
+    def cache(self) -> dict:
+        """The slot KV as a dense cache dict (read view; the paged
+        store gathers its block tables)."""
+        if self.kv.kind == "dense":
+            return self.kv.cache
+        return self.kv.view([i for i, s in enumerate(self.slots) if s is not None])
 
     def submit(self, req: Request) -> bool:
         req.submitted_tick = self.tick
         return self.sched.submit(req, now=self.tick)
 
+    def _inflight(self) -> list[Request]:
+        """Requests admitted past the fleet queue but not yet in a
+        decode slot (prefill rows + handoff)."""
+        out = [req for row in self.prefill_sched.rows for req in row]
+        out.extend(item[0] for item in self.handoff)
+        return out
+
     def _inflight_prompt_tokens(self) -> int:
-        """FULL prompt tokens of requests admitted past the fleet queue
-        but not yet in a decode slot (prefill rows + handoff) — the
-        quantity the token budget bounds. Whole prompts, not remaining
-        row work: retiring chunks must not free budget the handoff
-        queue still occupies, or the bound would be transiently
-        violable."""
-        pending = sum(
-            int(req.prompt.shape[0])
-            for row in self.prefill_sched.rows
-            for req in row
-        )
-        return pending + sum(
-            int(req.prompt.shape[0]) for req, _, _ in self.handoff
-        )
+        """FULL prompt tokens of in-flight requests — the quantity the
+        token budget bounds. Whole prompts, not remaining row work:
+        retiring chunks must not free budget the handoff queue still
+        occupies, or the bound would be transiently violable."""
+        return sum(int(req.prompt.shape[0]) for req in self._inflight())
 
     def _prefill_tick(self) -> list[int]:
+        budget, cost_fn = None, None
+        if self.cfg.mode == "continuous":
+            # page-aware gate: in-flight prefill/handoff work has no
+            # blocks yet but will need them, so it is charged as
+            # extra need alongside the decode pool's growth reserve
+            extra = sum(
+                request_block_tokens(self.kv, req, self.cfg.max_len)
+                for req in self._inflight()
+            ) if self.kv.block_size is not None else 0
+            budget, cost_fn = page_admission_budget(
+                self.kv, self.slots, self.cfg.max_len, extra_need_tokens=extra
+            )
+        # dense stores have no page budget; keep the take() call
+        # wire-identical to the pre-paging scheduler interface so
+        # PR-1-style scheduler duck types still work
+        gate = {} if budget is None else {"free_tokens": budget, "cost_fn": cost_fn}
         for req in self.sched.take(
-            self.tick, inflight_tokens=self._inflight_prompt_tokens()
+            self.tick, inflight_tokens=self._inflight_prompt_tokens(), **gate,
         ):
+            if self.cfg.mode == "continuous" and self.kv.full_hit(req.prompt):
+                # whole-prompt prefix hit: no prefill work at all —
+                # straight to the handoff queue (resolved at refill)
+                self.handoff.append((req, None, None, None))
+                self.stats["prefill_skips"] += 1
+                continue
             self.prefill_sched.admit(req)
         finished, work = self.prefill_sched.tick()
-        for req in finished:
-            logits, cache1 = self._prefill(req.prompt)
-            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
-            self.handoff.append((req, cache1, first))
-            self.stats["prefills"] += 1
+        if self.cfg.mode == "continuous" and len(finished) > 1:
+            logits, batch = self._prefill.run_batch([r.prompt for r in finished])
+            for i, req in enumerate(finished):
+                n = int(req.prompt.shape[0])
+                cache1 = {k: (jnp.int32(n) if k == "pos" else v[:, i : i + 1])
+                          for k, v in batch.items()}
+                first = jnp.argmax(logits[i, -1]).astype(jnp.int32)
+                self.handoff.append((req, cache1, first, logits[i, -1]))
+                self.stats["prefills"] += 1
+        else:
+            for req in finished:
+                logits, cache1 = self._prefill(req.prompt)
+                first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+                self.handoff.append((req, cache1, first, logits[0, -1]))
+                self.stats["prefills"] += 1
         return work
 
     def _refill_slots(self) -> int:
         n = 0
+        continuous = self.cfg.mode == "continuous"
         for slot, occupant in enumerate(self.slots):
             if occupant is not None or not self.handoff:
                 continue
-            req, cache1, first = self.handoff.popleft()
+            req, cache1, first, logits = self.handoff.popleft()
             self.slots[slot] = req
-            self.cache = self._migrate(self.cache, cache1, slot)
+            if cache1 is None:
+                # whole-prompt hit marker: re-resolve (the entry may
+                # have been evicted while queued — then prefill late)
+                entry = self.kv.full_hit(req.prompt)
+                if entry is not None:
+                    info = self.kv.admit_from_full(slot, entry)
+                    self.stats["prefix_hit_tokens"] += info["prefix_tokens"]
+                    self.tokens = self.tokens.at[slot, 0].set(entry.first)
+                    self.stats["handoffs"] += 1
+                    n += 1
+                    continue
+                out_logits, cache1 = self._prefill(req.prompt)
+                first = jnp.argmax(out_logits[0, -1]).astype(jnp.int32)
+                logits = out_logits[0, -1]
+                self.stats["prefills"] += 1
+            plen = int(req.prompt.shape[0])
+            if continuous:
+                info = self.kv.admit(slot, cache1, plen, tokens=req.prompt,
+                                     logits=logits, first=int(first))
+                self.stats["prefix_hit_tokens"] += info["prefix_tokens"]
+            else:
+                self.kv.admit(slot, cache1, plen)
             self.tokens = self.tokens.at[slot, 0].set(first)
             self.stats["handoffs"] += 1
             n += 1
         return n
 
     def step(self) -> None:
+        continuous = self.cfg.mode == "continuous"
         work = self._prefill_tick()
         handoffs = self._refill_slots()
         self.tick += 1
@@ -222,9 +306,14 @@ class DisaggEngine:
             # per-decode-row work signal (serve/fleet.py)
             "slots_active": [s is not None for s in self.slots],
         }
-        if self.last_tick["decode_batch"] == 0:
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            if continuous:
+                self.last_tick["kv"] = self.kv.stats
             return
-        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        view = self.kv.view(active) if continuous else self.kv.view()
+        logits, cache = self._decode(self.params, view, self.tokens)
+        self.kv.absorb(cache, active)
         self.last_logits = logits
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         next_np = np.asarray(next_tok)
@@ -242,7 +331,15 @@ class DisaggEngine:
                 self.finished.append(req)
                 self.ledger.record_done(req, self.sched.slo(req.tenant), self.tick)
                 self.slots[i] = None
+                if continuous:
+                    self.kv.free(i)
         self.tokens = next_tok[:, None]
+        if continuous:
+            # same-tick insertion: a prefill finished this tick takes a
+            # slot retired this tick instead of waiting one boundary
+            self.last_tick["handoffs"] += self._refill_slots()
+            self.last_tick["slots_active"] = [s is not None for s in self.slots]
+            self.last_tick["kv"] = self.kv.stats
         self.stats["steps"] += 1
 
     def idle(self) -> bool:
@@ -283,28 +380,30 @@ class DisaggEngine:
         self.prefill_sched = PrefillScheduler(n_prefill_rows, self.cfg.prefill_chunk)
         for req in pending:
             self.prefill_sched.admit(req)
-        # decode side: compact in-flight slots into the new pool
-        old_cache, old_tokens, old_slots = self.cache, self.tokens, self.slots
-        self.cache = self.model.init_cache(decode_slots, self.cfg.max_len)
+        # decode side: compact in-flight slots into the new pool. The
+        # dense store re-runs the per-slot slice + migrate sequence
+        # (bit-identical to the inline PR-5 loop); the paged store just
+        # moves table rows — no KV bytes copied.
+        old_tokens, old_slots = self.tokens, self.slots
+        moves = list(enumerate(occupied))
+        self.kv = self.kv.resize(decode_slots, moves)
         self.tokens = jnp.zeros((decode_slots, 1), jnp.int32)
         self.slots = [None] * decode_slots
-        for dst, src in enumerate(occupied):
-            slot_cache = {
-                k: (v if k == "pos" else v[:, src : src + 1])
-                for k, v in old_cache.items()
-            }
-            self.cache = self._migrate(self.cache, slot_cache, dst)
+        for dst, src in moves:
             self.tokens = self.tokens.at[dst, 0].set(old_tokens[src, 0])
             self.slots[dst] = old_slots[src]
         self.cfg = dataclasses.replace(
             self.cfg, n_prefill_rows=n_prefill_rows, decode_slots=decode_slots
         )
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def drain(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
             if self.idle():
                 return
             self.step()
+
+    # pre-PR-6 name, kept as an alias for existing call sites
+    run_until_drained = drain
 
     def workload_sample(self) -> dict:
         return {

@@ -1,19 +1,27 @@
-"""Batched serving engine: slot-based continuous batching over the
-model zoo's prefill/decode interface.
+"""Batched serving engine: slot-based batching over the model zoo's
+prefill/decode interface, in two disciplines.
 
-A fixed pool of B slots holds active requests; when a request finishes
-(EOS or max_tokens) its slot is refilled from the queue at the next
-step boundary. Decode steps are a single jitted call over the whole
-slot batch. Admission runs a real batch-1 ``model.prefill`` per request
-and migrates the resulting KV cache into the free slot with the same
-``migrate_cache_into_slot`` operator the disaggregated engine streams
-through its channel — the colocated engine is the disaggregated one
-with a zero-length wire, which is what makes the two bit-for-bit
-comparable (tests/test_serve_disagg.py).
+``mode="aligned"`` (default) is the paper's *conventional*
+construction and the PR-5 behavior kept bit-identical: admission only
+at the tick head, one shared decode cursor, dense KV. A long prefill
+stalls every decode slot for the whole tick.
 
-This is the paper's *conventional* construction (every process performs
-every operation): a long prefill stalls every decode slot for the whole
-tick. `repro/serve/disagg.py` is the decoupled construction.
+``mode="continuous"`` is slot-level continuous batching: a finished
+prefill is inserted into a decode slot the same tick the slot frees
+(admission runs again after retirement), admitted prompts prefill as
+one packed multi-prompt call (`PrefillRunner.run_batch`), each slot
+decodes on its own cursor (the ragged ``(B,)`` position vector), and
+KV is routed through a `KVStore` — dense or paged with the cross-
+tenant prefix cache (`serve/kvstore.py`). Page-aware admission
+reserves every in-flight request's remaining block growth before
+taking new work, so a decode append can always allocate its tail
+block.
+
+Admission runs a real ``model.prefill`` per admitted prompt and
+migrates the resulting KV into the free slot with the same operators
+the disaggregated engine streams through its channel — the colocated
+engine is the disaggregated one with a zero-length wire, which is what
+makes the two bit-for-bit comparable (tests/test_serve_disagg.py).
 
 The decoupled-analytics hook streams per-step serving stats (tokens/s,
 active slots, queue depth) through a `workload_stats` operator — the
@@ -27,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.operators import migrate_cache_into_slot
+from repro.serve.api import ServeConfig
+from repro.serve.kvstore import make_kvstore
 from repro.serve.sched import FleetLedger, FleetScheduler
 
 
@@ -62,11 +71,15 @@ def supports_length_masked_prefill(cfg) -> bool:
 
 
 class PrefillRunner:
-    """Jitted batch-1 prefill shared by both engines.
+    """Jitted prefill shared by both engines.
 
     Attention-only LMs go through the power-of-two padded bucket with
-    the length-masked prefill (a constant number of compiled prefill
-    programs); other families compile per distinct prompt length.
+    the length-masked prefill; other families compile per distinct
+    prompt length. Compilation is keyed on ``(bucket, batch)`` — the
+    batch-1 `__call__` and the packed multi-prompt `run_batch` share
+    one jitted wrapper whose shape signature carries both dimensions,
+    so continuous admission does not recompile per prompt-count beyond
+    the first sighting of each (bucket, batch) pair.
     """
 
     def __init__(self, model, params, max_len: int | None = None):
@@ -86,6 +99,21 @@ class PrefillRunner:
         padded[0, :n] = prompt
         return self._masked(self.params, padded, n)
 
+    def run_batch(self, prompts: list) -> tuple:
+        """Packed multi-prompt prefill: prompts right-padded to one
+        shared bucket, per-row true lengths -> (per-row last-position
+        logits (n, 1, V), batched cache with per-row ``pos``). Needs
+        the length-masked (ragged) prefill; batch-1 falls back to
+        `__call__`'s exact path for other families."""
+        if not self._bucketed:
+            raise ValueError("packed prefill needs a length-maskable model")
+        lens = [int(p.shape[0]) for p in prompts]
+        b = prefill_bucket(max(lens), max_len=self.max_len)
+        padded = np.zeros((len(prompts), b), prompts[0].dtype)
+        for i, p in enumerate(prompts):
+            padded[i, : lens[i]] = p
+        return self._masked(self.params, padded, jnp.asarray(lens, jnp.int32))
+
 
 @dataclasses.dataclass
 class Request:
@@ -101,11 +129,42 @@ class Request:
     tenant: str = "default"  # FleetScheduler queue key (traffic.TenantSpec)
 
 
+def request_block_tokens(kv, req: "Request", max_len: int) -> int:
+    """Block tokens ``req`` occupies through completion, net of its
+    prefix-cache discount — the page-aware admission price."""
+    bs = kv.block_size
+    n = min(int(req.prompt.shape[0]) + req.max_new_tokens, max_len)
+    covered = kv.covered_tokens(req.prompt, int(req.prompt.shape[0]))
+    return (-(-n // bs)) * bs - covered
+
+
+def page_admission_budget(kv, slots, max_len: int, *, extra_need_tokens: int = 0):
+    """(free_tokens, cost_fn) for `FleetScheduler.take`, or
+    (None, None) when the store is not page-limited.
+
+    The budget is the pool's free (plus prefix-evictable) block tokens
+    minus the growth every in-flight request may still need to finish
+    (the admission math of DESIGN.md §12) — reserving growth up front
+    is what guarantees a decode append can always allocate its tail
+    block. ``extra_need_tokens`` charges work admitted but not yet in a
+    slot (the disaggregated engine's prefill rows + handoff queue)."""
+    if kv.block_size is None:
+        return None, None
+    bs = kv.block_size
+    reserve = 0
+    for i, req in enumerate(slots):
+        if req is None:
+            continue
+        n = int(kv.lens[i])
+        target = min(n + req.max_new_tokens - len(req.out_tokens), max_len)
+        reserve += (-(-target // bs) - (-(-n // bs))) * bs
+    free = max(0, kv.free_tokens() - reserve - extra_need_tokens)
+    return free, lambda req: request_block_tokens(kv, req, max_len)
+
+
 @dataclasses.dataclass
-class EngineConfig:
+class EngineConfig(ServeConfig):
     max_batch: int = 8
-    max_len: int = 512
-    eos_id: int = -1  # -1: never stop early
 
 
 class Engine:
@@ -114,6 +173,11 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        if cfg.mode == "continuous" and not supports_length_masked_prefill(model.cfg):
+            raise ValueError(
+                "continuous batching needs an attention-only LM "
+                "(ragged per-slot decode cursors)"
+            )
         # the ServeFleet queue: default is the FIFO scheduler, which
         # pops in submit order with no budget — the sequence of jitted
         # calls (hence the output bits) is identical to the historic
@@ -124,14 +188,23 @@ class Engine:
         self.finished: list[Request] = []
         self._decode = jax.jit(model.decode_step)
         self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
-        self._migrate = jax.jit(migrate_cache_into_slot)
-        self.cache = model.init_cache(cfg.max_batch, cfg.max_len)
+        self.kv = make_kvstore(model, cfg.max_batch, cfg.max_len, cfg.kv,
+                               ragged=cfg.mode == "continuous")
         self.tokens = jnp.zeros((cfg.max_batch, 1), jnp.int32)
         self.last_logits = None  # (B, 1, V) of the latest decode step
         self.tick = 0
         # rejected submits live on the scheduler (sched.rejected)
-        self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0}
+        self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0,
+                      "prefix_hit_tokens": 0, "prefill_skips": 0}
         self.last_tick: dict = {"prefill_lens": [], "decode_batch": 0}
+
+    @property
+    def cache(self) -> dict:
+        """The slot KV as a dense cache dict (read view; the paged
+        store gathers its block tables)."""
+        if self.kv.kind == "dense":
+            return self.kv.cache
+        return self.kv.view([i for i, s in enumerate(self.slots) if s is not None])
 
     def submit(self, req: Request) -> bool:
         req.submitted_tick = self.tick
@@ -139,6 +212,10 @@ class Engine:
 
     def idle(self) -> bool:
         return self.sched.pending() == 0 and all(s is None for s in self.slots)
+
+    # -- page-aware admission budget ---------------------------------------
+    def _page_budget(self):
+        return page_admission_budget(self.kv, self.slots, self.cfg.max_len)
 
     # -- prefill one request into a free slot ------------------------------------
     def _admit(self) -> None:
@@ -151,24 +228,116 @@ class Engine:
             # batch-1 prefill, then migrate the per-request cache into
             # the slot (zero-extended to max_len)
             logits, cache1 = self._prefill(req.prompt)
-            self.cache = self._migrate(self.cache, cache1, slot)
+            self.kv.admit(slot, cache1, int(req.prompt.shape[0]))
             first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
             self.tokens = self.tokens.at[slot, 0].set(first)
             self.stats["prefills"] += 1
             self.last_tick["prefill_lens"].append(int(req.prompt.shape[0]))
 
+    def _admit_continuous(self) -> None:
+        """Admit into whatever slots are free *right now* — called both
+        at the tick head and again after retirement, so a slot freed
+        this tick refills this tick. Admitted prompts prefill packed
+        (one jitted call), except whole-prompt prefix-cache hits, which
+        skip prefill entirely."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return
+        budget, cost_fn = self._page_budget()
+        # dense stores have no page budget; keep the take() call
+        # wire-identical to the pre-paging scheduler interface so
+        # PR-1-style scheduler duck types still work
+        gate = {} if budget is None else {"free_tokens": budget, "cost_fn": cost_fn}
+        taken = self.sched.take(self.tick, max_n=len(free), **gate)
+        cold: list[tuple[int, Request]] = []
+        for req in taken:
+            slot = free.pop(0)
+            self.slots[slot] = req
+            entry = self.kv.full_hit(req.prompt)
+            if entry is not None:
+                info = self.kv.admit_from_full(slot, entry)
+                self.tokens = self.tokens.at[slot, 0].set(entry.first)
+                self.stats["prefill_skips"] += 1
+                self.stats["prefix_hit_tokens"] += info["prefix_tokens"]
+                self.last_tick["prefix_hit_tokens"] += info["prefix_tokens"]
+            else:
+                cold.append((slot, req))
+        if not cold:
+            return
+        logits, batch = self._prefill.run_batch([r.prompt for _, r in cold])
+        call_nets = []
+        for i, (slot, req) in enumerate(cold):
+            n = int(req.prompt.shape[0])
+            cache1 = {k: (jnp.int32(n) if k == "pos" else v[:, i : i + 1])
+                      for k, v in batch.items()}
+            row_logits = logits[i, -1]
+            first = jnp.argmax(row_logits).astype(jnp.int32)
+            info = self.kv.admit(slot, cache1, n, tokens=req.prompt,
+                                 logits=row_logits, first=int(first))
+            self.tokens = self.tokens.at[slot, 0].set(first)
+            self.stats["prefills"] += 1
+            self.stats["prefix_hit_tokens"] += info["prefix_tokens"]
+            self.last_tick["prefix_hit_tokens"] += info["prefix_tokens"]
+            # the virtual clock prices the packed call by its bucket
+            # and batch; per-request lens let it discount prefix hits
+            self.last_tick["prefill_lens"].append(n - info["prefix_tokens"])
+            call_nets.append(n - info["prefix_tokens"])
+        # one packed jitted call; its clock price is the bucket of the
+        # longest *uncovered* suffix (a cache-aware prefill computes
+        # only what the prefix cache did not already hold) at this batch
+        if max(call_nets) > 0:
+            self.last_tick["prefill_calls"].append(
+                (prefill_bucket(max(call_nets), max_len=self.cfg.max_len),
+                 len(cold)))
+
+    # -- one tick ----------------------------------------------------------
     def step(self) -> None:
-        """One engine tick: admit, decode one token for every slot."""
+        """One engine tick: admit, decode one token for every slot
+        (continuous mode re-admits after retirement — same-tick slot
+        refill)."""
+        if self.cfg.mode == "continuous":
+            return self._step_continuous()
         self.last_tick = {"prefill_lens": [], "decode_batch": 0}
         self._admit()
         self.tick += 1
         if all(s is None for s in self.slots):
             return
-        logits, self.cache = self._decode(self.params, self.cache, self.tokens)
+        logits, cache = self._decode(self.params, self.kv.view(), self.tokens)
+        self.kv.absorb(cache, [i for i, s in enumerate(self.slots) if s is not None])
         self.last_logits = logits
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         next_np = np.asarray(next_tok)
         self.last_tick["decode_batch"] = sum(s is not None for s in self.slots)
+        self._retire(next_np)
+        self.tokens = next_tok[:, None]
+        self.stats["steps"] += 1
+
+    def _step_continuous(self) -> None:
+        self.last_tick = {"prefill_lens": [], "prefill_calls": [],
+                          "decode_batch": 0, "prefix_hit_tokens": 0}
+        self._admit_continuous()
+        self.tick += 1
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            logits, cache = self._decode(self.params, self.kv.view(active),
+                                         self.tokens)
+            self.kv.absorb(cache, active)
+            self.last_logits = logits
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            next_np = np.asarray(next_tok)
+            self.last_tick["decode_batch"] = len(active)
+            for slot in self._retire(next_np):
+                self.kv.free(slot)
+            self.tokens = next_tok[:, None]
+        # same-tick insertion: slots retired above refill immediately
+        self._admit_continuous()
+        self.last_tick["kv"] = self.kv.stats
+        self.stats["steps"] += 1
+
+    def _retire(self, next_np: np.ndarray) -> list[int]:
+        """Record this tick's token per active slot; finish requests at
+        EOS / length. Returns the freed slot indices."""
+        freed = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -183,14 +352,17 @@ class Engine:
                 self.finished.append(req)
                 self.ledger.record_done(req, self.sched.slo(req.tenant), self.tick)
                 self.slots[i] = None
-        self.tokens = next_tok[:, None]
-        self.stats["steps"] += 1
+                freed.append(i)
+        return freed
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def drain(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
             if self.idle():
                 return
             self.step()
+
+    # pre-PR-6 name, kept as an alias for existing call sites
+    run_until_drained = drain
 
     def workload_sample(self) -> dict:
         """Per-tick analytics payload for the decoupled analytics group."""

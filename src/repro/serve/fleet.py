@@ -44,13 +44,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.adapt import AdaptPolicy, ReplanController, StageTrait
 from repro.core.groups import GroupedMesh
-from repro.launch.elastic import reshard_state
+from repro.launch.elastic import repack_block_pool, reshard_state
+from repro.serve.api import ServeConfig
 from repro.serve.disagg import PREFILL, DisaggConfig, DisaggEngine, serving_graph
 from repro.serve.sched import FleetScheduler
 
 
 @dataclasses.dataclass
-class FleetConfig:
+class FleetConfig(ServeConfig):
     """Sizing + adaptation knobs of a serving fleet.
 
     ``n_rows`` is the total row budget (prefill + decode);
@@ -61,14 +62,14 @@ class FleetConfig:
     ``prefill_bytes_per_token`` are the prefill stage's `StageTrait`
     constants: seconds per prompt token over seconds per decode
     slot-step, and KV bytes migrated per prompt token (calibrate them
-    from measured per-op costs, as fig13 does).
+    from measured per-op costs, as fig13 does). The inherited
+    `ServeConfig` fields (``max_len``/``eos_id``/``mode``/``kv``) flow
+    straight into the wrapped `DisaggEngine`.
     """
 
     n_rows: int = 8
     prefill_rows: int = 2
     slots_per_row: int = 2
-    max_len: int = 512
-    eos_id: int = -1
     prefill_chunk: int = 32
     adapt: AdaptPolicy | None = None
     prefill_cost_ratio: float = 1.0
@@ -128,6 +129,8 @@ class FleetEngine:
                 decode_slots=cfg.decode_rows * cfg.slots_per_row,
                 max_len=cfg.max_len,
                 eos_id=cfg.eos_id,
+                mode=cfg.mode,
+                kv=cfg.kv,
                 prefill_chunk=cfg.prefill_chunk,
             ),
             sched=sched,
@@ -285,11 +288,14 @@ class FleetEngine:
         self.regroups += 1
         return True
 
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
+    def drain(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
             if self.idle():
                 return
             self.step()
+
+    # pre-PR-6 name, kept as an alias for existing call sites
+    run_until_drained = drain
 
 
 # -- SPMD-layer slot migration --------------------------------------------------
@@ -372,4 +378,68 @@ def reshard_serving_state(
     return new_cache, new_tokens
 
 
-__all__ = ["FleetConfig", "FleetEngine", "reshard_serving_state"]
+def reshard_paged_serving_state(
+    k_pool,
+    v_pool,
+    tables,
+    lens,
+    tokens,
+    old_gmesh: GroupedMesh,
+    new_gmesh: GroupedMesh,
+    *,
+    slots_per_row: int,
+    keep: Sequence[int] | None = None,
+    n_blocks: int | None = None,
+):
+    """Paged counterpart of `reshard_serving_state`: migrate a block
+    pool + slot tables between two prefill/decode splits.
+
+    Paged state is mostly *indirection*: the heavy KV bytes live in the
+    pool (host-shared across decode rows — per-row pool sharding is the
+    ROADMAP's paged-decode-kernel item), so a regroup only has to
+    `launch.elastic.repack_block_pool` the live blocks onto the
+    surviving slots and re-deal the per-slot token row. ``keep``
+    selects surviving global slot indices (default: the occupied head
+    of the pool, like the dense path); the repacked pool is replicated
+    over the new mesh and tokens get the axis sharding.
+    """
+    n = new_gmesh.axis_size
+    old_c = old_gmesh.compute.size
+    new_c = new_gmesh.compute.size
+    spr = int(slots_per_row)
+    lens = np.asarray(lens)
+    if keep is None:
+        keep = list(range(min(old_c * spr, new_c * spr)))
+    if len(keep) > new_c * spr:
+        raise ValueError(f"{len(keep)} kept slots exceed capacity {new_c * spr}")
+    new_k, new_v, kept_tables, kept_lens = repack_block_pool(
+        k_pool, v_pool, tables, lens, keep=keep, n_blocks=n_blocks
+    )
+    # the global slot index space spans every row (init_disagg_state's
+    # rows * slots_per_row layout), decode slots at the head
+    new_tables = np.full((n * spr, np.asarray(tables).shape[1]), -1, np.int32)
+    new_tables[: len(keep)] = kept_tables
+    new_lens = np.zeros(n * spr, lens.dtype)
+    new_lens[: len(keep)] = kept_lens
+    host_tokens = np.zeros((n * spr, 1), np.int32)
+    host_tokens[: len(keep)] = np.asarray(tokens)[list(keep)]
+    mesh, axis = new_gmesh.mesh, new_gmesh.axis
+    pool_sharding = NamedSharding(mesh, P())  # replicated: shared host pool
+    new_tokens = jax.device_put(
+        jnp.asarray(host_tokens), NamedSharding(mesh, P(axis, None))
+    )
+    return (
+        jax.device_put(new_k, pool_sharding),
+        jax.device_put(new_v, pool_sharding),
+        new_tables,
+        new_lens,
+        new_tokens,
+    )
+
+
+__all__ = [
+    "FleetConfig",
+    "FleetEngine",
+    "reshard_paged_serving_state",
+    "reshard_serving_state",
+]

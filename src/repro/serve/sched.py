@@ -164,6 +164,8 @@ class FleetScheduler:
         *,
         max_n: int | None = None,
         inflight_tokens: int = 0,
+        free_tokens: int | None = None,
+        cost_fn=None,
     ) -> list["Request"]:
         """Pop up to ``max_n`` requests for admission at tick ``now``.
 
@@ -175,9 +177,19 @@ class FleetScheduler:
         fit). Work-conserving: if the queue is non-empty and both the
         budget and ``max_n`` allow the scheduled head request, at least
         one request is returned.
+
+        ``free_tokens``/``cost_fn`` is the page-aware gate (paged KV):
+        the engine reports how many block tokens remain after reserving
+        in-flight decode growth, and ``cost_fn(req)`` prices a request
+        in block tokens through completion, net of its prefix-cache
+        discount. Admission stops before the priced sum would exceed
+        ``free_tokens`` — against *free blocks*, not dense slot
+        capacity, which is what lets a paged pool oversubscribe slots
+        safely.
         """
         out: list[Request] = []
         used = int(inflight_tokens)
+        pages = 0
         while max_n is None or len(out) < max_n:
             head = self._pick(now)
             if head is None:
@@ -185,8 +197,12 @@ class FleetScheduler:
             cost = int(head.req.prompt.shape[0])
             if self.token_budget is not None and used + cost > self.token_budget:
                 break
+            page_cost = cost if cost_fn is None else int(cost_fn(head.req))
+            if free_tokens is not None and pages + page_cost > free_tokens:
+                break
             self._queues[head.tenant].popleft()
             used += cost
+            pages += page_cost
             out.append(head.req)
             if self.token_budget is not None and used >= self.token_budget:
                 break

@@ -111,6 +111,12 @@ class TenantSpec:
     slo: SLOClass = SLOClass()
     surge_at: int = -1  # tick at which the rate jumps (-1: never)
     surge_factor: float = 1.0
+    # system-prompt modeling: every request of this tenant starts with
+    # the same `shared_prefix` tokens (drawn once per tenant), the
+    # workload shape the cross-tenant prefix cache (serve/kvstore.py)
+    # deduplicates. 0 = fully independent prompts (the historic draw,
+    # bit-for-bit).
+    shared_prefix: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,14 +191,32 @@ class TrafficScenario:
         """Materialize events into `(event, Request)` pairs.
 
         Token ids are drawn from a generator keyed by (seed, uid), so a
-        replayed trace reproduces the exact prompts bit-for-bit.
+        replayed trace reproduces the exact prompts bit-for-bit. A
+        tenant with ``shared_prefix > 0`` gets its per-tenant system
+        prompt (keyed by (seed, tenant index)) spliced in front, with
+        the per-uid draw filling the rest of the declared length.
         """
         from repro.serve.engine import Request
+
+        prefixes: dict[str, np.ndarray] = {}
+        for idx, ten in enumerate(self.tenants):
+            if ten.shared_prefix > 0:
+                prng = np.random.default_rng((self.seed, 0x51F1, idx))
+                prefixes[ten.name] = prng.integers(
+                    0, vocab_size, ten.shared_prefix
+                ).astype(np.int32)
 
         out = []
         for e in events if events is not None else self.generate():
             rng = np.random.default_rng((self.seed, 0x70C5, e.uid))
-            prompt = rng.integers(0, vocab_size, e.prompt_len).astype(np.int32)
+            pre = prefixes.get(e.tenant)
+            if pre is None:
+                prompt = rng.integers(0, vocab_size, e.prompt_len).astype(np.int32)
+            else:
+                head = pre[: e.prompt_len]
+                tail_n = e.prompt_len - head.shape[0]
+                tail = rng.integers(0, vocab_size, tail_n).astype(np.int32)
+                prompt = np.concatenate([head, tail])
             out.append(
                 (e, Request(uid=e.uid, prompt=prompt, max_new_tokens=e.max_new_tokens,
                             tenant=e.tenant))
@@ -363,10 +387,31 @@ def _diurnal_mix() -> TrafficScenario:
     )
 
 
+def _bursty_prefix() -> TrafficScenario:
+    """bursty-multitenant's arrival shape with system prompts: chat and
+    rag requests share a long per-tenant prefix (the agent/system
+    prompt every production request carries), so the cross-tenant
+    prefix cache gets full-block hits while the background tenant
+    stays cold. fig14's prefix-cache scenario."""
+    base = _bursty_multitenant()
+    tenants = tuple(
+        dataclasses.replace(
+            t,
+            shared_prefix={"chat": 24, "rag": 48}.get(t.name, 0),
+            prompt=dataclasses.replace(
+                t.prompt, mean=t.prompt.mean + {"chat": 24, "rag": 48}.get(t.name, 0)
+            ),
+        )
+        for t in base.tenants
+    )
+    return dataclasses.replace(base, name="bursty-prefix", tenants=tenants)
+
+
 SCENARIOS = {
     "single-fifo": _single_fifo,
     "bursty-multitenant": _bursty_multitenant,
     "diurnal-mix": _diurnal_mix,
+    "bursty-prefix": _bursty_prefix,
 }
 
 

@@ -1,0 +1,365 @@
+"""ContinuousServe KV stores: paged-vs-dense bit-identity, prefix-cache
+correctness, page-aware admission, and paged migration/repack."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.launch.elastic import repack_block_pool
+from repro.models import build
+from repro.serve import (
+    DisaggConfig,
+    DisaggEngine,
+    Engine,
+    EngineConfig,
+    FleetEngine,
+    KVSpec,
+    Request,
+    ServeConfig,
+    make_engine,
+    make_kvstore,
+)
+from repro.serve.engine import page_admission_budget, request_block_tokens
+from repro.serve.sched import FleetScheduler
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, max_new=5, seed=0):
+    if np.isscalar(max_new):
+        max_new = [max_new] * len(lens)
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, int(n)).astype(np.int32),
+                max_new_tokens=int(m))
+        for i, (n, m) in enumerate(zip(lens, max_new))
+    ]
+
+
+def _drained_outputs(engine, reqs, max_steps=500):
+    for r in reqs:
+        engine.submit(r)
+    engine.drain(max_steps=max_steps)
+    return {r.uid: tuple(r.out_tokens) for r in engine.finished}
+
+
+# -- paged vs dense bit-identity -----------------------------------------------
+
+def test_continuous_paged_bitwise_equals_continuous_dense(tiny_model):
+    """Under FIFO admission with a full-capacity pool, the paged store's
+    gathered view is bitwise the zero-extended dense cache, so the whole
+    continuous run — every emitted token and every live KV row — is
+    bit-identical between the two stores."""
+    cfg, model, params = tiny_model
+    lens = [5, 19, 33, 7, 12, 26, 9, 17, 40, 3]
+    max_new = [4, 7, 3, 9, 5, 6, 2, 8, 4, 5]
+    dense = Engine(model, params, EngineConfig(
+        max_batch=3, max_len=64, mode="continuous", kv=KVSpec(kind="dense")))
+    paged = Engine(model, params, EngineConfig(
+        max_batch=3, max_len=64, mode="continuous",
+        kv=KVSpec(kind="paged", block_size=16)))
+    for rd, rp in zip(_requests(cfg, lens, max_new),
+                      _requests(cfg, lens, max_new)):
+        dense.submit(rd)
+        paged.submit(rp)
+    while not (dense.idle() and paged.idle()):
+        dense.step()
+        paged.step()
+        act = [i for i, s in enumerate(dense.slots) if s is not None]
+        assert act == [i for i, s in enumerate(paged.slots) if s is not None]
+        vk_d = np.asarray(dense.kv.cache["k"])
+        vk_p = np.asarray(paged.kv.view(act)["k"])
+        for i in act:
+            n = int(dense.kv.lens[i])
+            assert n == int(paged.kv.lens[i])
+            np.testing.assert_array_equal(vk_d[:, i, :n], vk_p[:, i, :n])
+        assert dense.tick < 100
+    outs_d = {r.uid: tuple(r.out_tokens) for r in dense.finished}
+    outs_p = {r.uid: tuple(r.out_tokens) for r in paged.finished}
+    assert outs_d == outs_p
+    assert all(len(v) for v in outs_d.values())
+
+
+def test_paged_blocks_track_live_tokens(tiny_model):
+    """KV memory scales with live tokens: at every tick the private
+    blocks in use equal exactly the live-token block demand, and the
+    peak never exceeds what the in-flight requests actually needed."""
+    cfg, model, params = tiny_model
+    eng = Engine(model, params, EngineConfig(
+        max_batch=4, max_len=64, mode="continuous",
+        kv=KVSpec(kind="paged", block_size=16)))
+    for r in _requests(cfg, [30, 17, 8, 25, 40, 5, 12], max_new=6):
+        eng.submit(r)
+    demand_peak = 0
+    while not eng.idle():
+        eng.step()
+        st = eng.kv.stats
+        assert st["blocks_in_use"] - st["evictable_blocks"] == st["live_block_demand"]
+        demand_peak = max(demand_peak, st["live_block_demand"])
+        assert eng.tick < 200
+    st = eng.kv.stats
+    assert st["blocks_in_use"] == 0  # every retirement returned its blocks
+    assert st["peak_blocks"] <= demand_peak
+    # and far below the dense reservation (4 slots * 4 blocks)
+    assert st["peak_blocks"] < 16
+
+
+def test_dense_aligned_fifo_matches_legacy_loop(tiny_model):
+    """mode="aligned" + dense KV reproduces the historic engine's
+    jitted call sequence; run_until_drained survives as an alias."""
+    cfg, model, params = tiny_model
+    eng = Engine(model, params, EngineConfig(max_batch=2, max_len=64))
+    reqs = _requests(cfg, [3, 5, 4, 2, 6], max_new=3)
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
+    assert eng.kv.kind == "dense" and eng.kv.block_size is None
+    assert eng.cache is eng.kv.cache  # aligned cache is a direct view
+
+
+# -- prefix cache --------------------------------------------------------------
+
+def _prefix_requests(cfg, n_pre, tails, seed=3, max_new=5):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, n_pre).astype(np.int32)
+    out = []
+    for i, t in enumerate(tails):
+        tail = rng.integers(0, cfg.vocab_size, int(t)).astype(np.int32)
+        out.append(Request(uid=i, prompt=np.concatenate([pre, tail]),
+                           max_new_tokens=max_new))
+    return out
+
+
+def test_prefix_cache_hits_match_cold_outputs(tiny_model):
+    """Partial chain hits and the full-hit skip-prefill path both emit
+    exactly what a cold engine (no prefix cache) emits."""
+    cfg, model, params = tiny_model
+
+    def build_engine(prefix):
+        kv = KVSpec(kind="paged", block_size=16, prefix_cache=prefix)
+        return Engine(model, params, EngineConfig(
+            max_batch=2, max_len=64, mode="continuous", kv=kv))
+
+    reqs = _prefix_requests(cfg, 32, [5, 9])
+    repeat = Request(uid=2, prompt=reqs[0].prompt.copy(), max_new_tokens=5)
+    warm = build_engine(True)
+    outs = _drained_outputs(warm, reqs + [repeat])
+    st = warm.stats
+    assert st["prefill_skips"] == 1  # the exact repeat never prefilled
+    assert st["prefix_hit_tokens"] >= 32 + len(repeat.prompt)
+    assert warm.kv.stats["prefix_hits"] == 2
+
+    for r in _prefix_requests(cfg, 32, [5, 9]) + [
+        Request(uid=2, prompt=reqs[0].prompt.copy(), max_new_tokens=5)
+    ]:
+        cold = build_engine(False)
+        cold_out = _drained_outputs(cold, [r])
+        assert outs[r.uid] == cold_out[r.uid]
+
+
+def test_prefix_refcount_never_frees_live_block(tiny_model):
+    """Under eviction pressure in a tiny pool, blocks a live slot still
+    reads survive prefix-entry eviction — outputs stay correct and the
+    refcount invariants hold throughout."""
+    cfg, model, params = tiny_model
+    kv = KVSpec(kind="paged", block_size=16, prefix_cache=True,
+                n_blocks=12, prefix_capacity=64)
+    eng = Engine(model, params, EngineConfig(
+        max_batch=2, max_len=64, mode="continuous", kv=kv))
+    # distinct prompts churn the pool so allocation must evict prefix
+    # entries while earlier requests still hold their shared blocks
+    reqs = _requests(cfg, [33, 40, 35, 48, 37, 41], max_new=6, seed=11)
+    outs = {}
+    for r in _requests(cfg, [33, 40, 35, 48, 37, 41], max_new=6, seed=11):
+        solo = Engine(model, params, EngineConfig(
+            max_batch=2, max_len=64, mode="continuous",
+            kv=KVSpec(kind="paged", block_size=16)))
+        outs.update(_drained_outputs(solo, [r]))
+    for r in reqs:
+        eng.submit(r)
+    while not eng.idle():
+        eng.step()
+        store = eng.kv
+        assert np.all(store.ref >= store._pref)  # prefix never outcounts total
+        assert np.all(store.ref[1:][store._pref[1:] > 0] > 0)
+        for b in store._free:
+            assert store.ref[b] == 0  # nothing live sits on the free list
+        assert eng.tick < 200
+    assert {r.uid: tuple(r.out_tokens) for r in eng.finished} == outs
+
+
+# -- page-aware admission ------------------------------------------------------
+
+def test_scheduler_page_gate_stops_at_free_tokens():
+    sched = FleetScheduler.fifo()
+    for i, n in enumerate([10, 10, 10]):
+        sched.submit(Request(uid=i, prompt=np.zeros(n, np.int32),
+                             max_new_tokens=6), now=0)
+    # each request prices at ceil(16/16)*16 = 16 block tokens
+    taken = sched.take(0, free_tokens=40, cost_fn=lambda r: 16)
+    assert [r.uid for r in taken] == [0, 1]  # third would exceed 40
+    assert [r.uid for r in sched.take(1, free_tokens=40, cost_fn=lambda r: 16)] == [2]
+
+
+def test_page_budget_reserves_inflight_growth(tiny_model):
+    """The admission budget subtracts the growth in-flight slots may
+    still need, so decode tail allocation can never exhaust the pool."""
+    cfg, model, params = tiny_model
+    eng = Engine(model, params, EngineConfig(
+        max_batch=4, max_len=64, mode="continuous",
+        kv=KVSpec(kind="paged", block_size=16, n_blocks=9)))
+    # 4 slots want 16 blocks at completion; only 8 usable blocks exist —
+    # admission must wave requests through without ever raising
+    reqs = _requests(cfg, [20, 30, 25, 18, 22, 28], max_new=8, seed=5)
+    for r in reqs:
+        eng.submit(r)
+    eng.drain(max_steps=400)
+    assert all(r.done for r in reqs)
+    assert eng.kv.stats["peak_blocks"] <= 8
+
+    free, cost = page_admission_budget(eng.kv, eng.slots, 64)
+    assert free == 8 * 16 and cost is not None  # idle engine: whole pool free
+    price = cost(reqs[0])
+    assert price == request_block_tokens(eng.kv, reqs[0], 64) == 32  # ceil(28/16)
+
+
+def test_dense_store_is_not_page_limited(tiny_model):
+    cfg, model, params = tiny_model
+    kv = make_kvstore(model, 2, 64, KVSpec(kind="dense"), ragged=True)
+    assert kv.free_tokens() is None
+    assert page_admission_budget(kv, [None, None], 64) == (None, None)
+
+
+# -- migration / repack --------------------------------------------------------
+
+def test_paged_resize_mid_decode_matches_dense(tiny_model):
+    """DisaggEngine.resize mid-decode: the paged store migrates by table
+    moves, the dense store by slice+migrate — same resize tick, same
+    outputs, bitwise."""
+    cfg, model, params = tiny_model
+
+    def run(kv):
+        dis = DisaggEngine(model, params, DisaggConfig(
+            n_prefill_rows=2, decode_slots=3, max_len=64,
+            mode="continuous", kv=kv))
+        reqs = _requests(cfg, [6, 9, 4, 7, 5, 8], max_new=6, seed=2)
+        for r in reqs:
+            dis.submit(r)
+        for _ in range(4):
+            dis.step()
+        before = {
+            i: np.asarray(dis.kv.slot_cache(i)["k"])
+            for i, s in enumerate(dis.slots) if s is not None
+        }
+        dis.resize(2, 5)  # grow decode, in-flight slots compact to the head
+        occupied = [i for i, s in enumerate(dis.slots) if s is not None]
+        assert len(occupied) == len(before)
+        for dst, src in zip(occupied, sorted(before)):
+            np.testing.assert_array_equal(
+                np.asarray(dis.kv.slot_cache(dst)["k"]), before[src])
+        dis.drain(max_steps=400)
+        assert all(r.done for r in reqs)
+        return {r.uid: tuple(r.out_tokens) for r in reqs}
+
+    assert run(KVSpec(kind="dense")) == run(KVSpec(kind="paged", block_size=16))
+
+
+def test_repack_block_pool_preserves_views_and_sharing(tiny_model):
+    """Repacking onto surviving slots keeps each kept slot's gathered
+    KV bitwise and keeps cross-slot shared blocks shared (one copy)."""
+    cfg, model, params = tiny_model
+    store = make_kvstore(model, 3, 64, KVSpec(
+        kind="paged", block_size=16, prefix_cache=True), ragged=True)
+    runner = Engine(model, params, EngineConfig(
+        max_batch=1, max_len=64, mode="continuous"))._prefill
+    reqs = _prefix_requests(cfg, 32, [5, 9, 2], seed=9)
+    for slot, r in enumerate(reqs):
+        logits, cache1 = runner(r.prompt)
+        store.admit(slot, cache1, len(r.prompt), tokens=r.prompt,
+                    logits=logits[0, -1], first=0)
+    # slots 1-2 share the 32-token prefix blocks with slot 0
+    assert set(store.tables[1][:2]) == set(store.tables[0][:2])
+    views = {i: np.asarray(store.slot_cache(i)["k"]) for i in (0, 2)}
+    k2, v2, tables2, lens2 = repack_block_pool(
+        store.k_pool, store.v_pool, store.tables, store.lens, keep=[0, 2])
+    assert lens2.tolist() == [int(store.lens[0]), int(store.lens[2])]
+    # sharing preserved: both kept tables reference the same new ids
+    assert tables2[0][:2].tolist() == tables2[1][:2].tolist()
+    live = {int(b) for row in tables2 for b in row if b > 0}
+    assert k2.shape[1] == len(live) + 1  # exactly live-demand sized
+    from repro.core.operators import paged_gather
+    for new, old in enumerate((0, 2)):
+        got = np.asarray(paged_gather(k2, jnp.asarray(tables2[new : new + 1])))
+        np.testing.assert_array_equal(got, views[old])
+    with pytest.raises(ValueError):
+        repack_block_pool(store.k_pool, store.v_pool, store.tables,
+                          store.lens, keep=[0, 2], n_blocks=2)
+
+
+# -- config validation / dispatch ----------------------------------------------
+
+def test_serveconfig_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(mode="aligned", kv=KVSpec(kind="paged"))
+    with pytest.raises(ValueError):
+        ServeConfig(kv=KVSpec(kind="nope"))
+    with pytest.raises(ValueError):
+        ServeConfig(mode="sometimes")
+
+
+def test_paged_store_validates_geometry(tiny_model):
+    cfg, model, params = tiny_model
+    with pytest.raises(ValueError, match="multiple"):
+        make_kvstore(model, 2, 60, KVSpec(kind="paged", block_size=16),
+                     ragged=True)
+    with pytest.raises(ValueError, match="cannot hold"):
+        make_kvstore(model, 2, 64, KVSpec(kind="paged", block_size=16,
+                                          n_blocks=3), ragged=True)
+
+
+def test_make_engine_dispatch(tiny_model):
+    cfg, model, params = tiny_model
+    eng = make_engine(model, params, EngineConfig(max_batch=2, max_len=64))
+    assert isinstance(eng, Engine)
+    dis = make_engine(model, params, DisaggConfig(
+        n_prefill_rows=2, decode_slots=2, max_len=64))
+    assert isinstance(dis, DisaggEngine)
+    bare = make_engine(model, params, ServeConfig(max_len=64))
+    assert isinstance(bare, Engine)
+    # unified loop: same driver code drains either engine type
+    for e in (eng, dis):
+        reqs = _requests(cfg, [3, 4, 5], max_new=2)
+        outs = _drained_outputs(e, reqs)
+        assert len(outs) == 3 and all(len(v) == 2 for v in outs.values())
+    assert isinstance(FleetEngine, type)  # FleetConfig dispatch covered by fig13
+
+
+def test_prefill_runner_keys_on_bucket_and_batch(tiny_model):
+    """The packed prefill's jit is shape-keyed on (bucket, batch): rows
+    of a packed call match the batch-1 path bitwise, across batch sizes
+    sharing one bucket."""
+    cfg, model, params = tiny_model
+    eng = Engine(model, params, EngineConfig(max_batch=4, max_len=64))
+    runner = eng._prefill
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 12)]
+    for batch in (prompts[:2], prompts):  # two batch sizes, same bucket
+        logits, cache = runner.run_batch(batch)
+        for i, p in enumerate(batch):
+            l1, c1 = runner(p)
+            np.testing.assert_array_equal(np.asarray(logits[i]),
+                                          np.asarray(l1[0]))
+            n = len(p)
+            np.testing.assert_array_equal(
+                np.asarray(cache["k"])[:, i, :n], np.asarray(c1["k"])[:, 0, :n])
