@@ -21,14 +21,26 @@ root: ``BENCH_channel.json`` (per-figure wall seconds + CSV rows, plus
 the structured ChannelWire record from ``fig11_channel``),
 ``BENCH_adaptive.json`` (the AdaptiveGraph record from
 ``fig12_adaptive``), ``BENCH_fleet.json`` (the ServeFleet record from
-``fig13_fleet``) and ``BENCH_serve_continuous.json`` (the
-ContinuousServe record from ``fig14_continuous``). Before overwriting,
-EVERY committed ``BENCH_*.json`` is read back and its wall-seconds
-entries (``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they
-sit) are diffed — a WARNING (never a failure: containers differ) flags
-any entry >20% slower than the baseline, so the perf trajectory is
-actually consumed, not just written. CI uploads all four JSONs as
-artifacts.
+``fig13_fleet``), ``BENCH_serve_continuous.json`` (the
+ContinuousServe record from ``fig14_continuous``) and
+``BENCH_decode.json`` (the PagedDecode record from
+``fig15_decode_kernel``). Before overwriting, EVERY committed
+``BENCH_*.json`` is read back and its wall-seconds entries
+(``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they sit) are
+diffed — a WARNING flags any entry both >20% and >0.25s slower than
+the baseline, so the perf trajectory is actually consumed, not just
+written. By default
+regressions never fail the run (containers differ); ``--strict`` turns
+them into a nonzero exit (the CI quick sweep runs strict). CI uploads
+all five JSONs as artifacts.
+
+Every record additionally carries a ``phase_cost`` section: per
+serving phase (prefill, dense decode, paged-kernel decode) the
+HLO-accounted FLOPs / HBM bytes and the three-term roofline of the
+compiled program (`utils.hloanalyze` + `utils.roofline`) — the
+transferable cost ledger behind the container wall clocks.
+`collect_walls` only reads wall-seconds leaves, so baselines written
+before this section existed still diff cleanly.
 """
 import argparse
 import json
@@ -36,6 +48,11 @@ import time
 import traceback
 
 REGRESSION_WARN = 0.20  # warn when an entry is >20% slower than baseline
+# a relative gate alone flags sub-second figures whose walls swing by
+# ~0.1s between healthy back-to-back runs; a regression must also be
+# this many absolute seconds slower before it earns a WARNING (and,
+# under --strict, a nonzero exit)
+ABS_REGRESSION_S = 0.25
 WALL_KEYS = frozenset({"seconds", "wall_s", "total_s"})
 # sub-floor entries (micro-timings like the fig11 sweep variants) swing
 # far past 20% between healthy runs; comparing them would bury the
@@ -71,8 +88,10 @@ def compare_to_baseline(name: str, baseline: dict | None, fresh: dict) -> list[s
     Works on any record shape (per-figure ``seconds``, the adaptive
     record's ``wall_s`` samples, the fleet curve's ``total_s`` points).
     Returns printable report lines; regressions beyond REGRESSION_WARN
-    are flagged as WARNING but never fail the run (quick-mode configs
-    and container wall clocks are too noisy for a hard gate)."""
+    that are also more than ABS_REGRESSION_S slower in absolute terms
+    are flagged as WARNING — fatal only under --strict (quick-mode
+    configs and container wall clocks are too noisy for a bare
+    relative gate)."""
     if not baseline:
         return [f"# {name}: no baseline found, skipping delta report"]
     lines = []
@@ -93,7 +112,7 @@ def compare_to_baseline(name: str, baseline: dict | None, fresh: dict) -> list[s
             continue
         delta = (new - old) / old
         tag = ""
-        if delta > REGRESSION_WARN:
+        if delta > REGRESSION_WARN and new - old > ABS_REGRESSION_S:
             tag = f"  WARNING: >{REGRESSION_WARN:.0%} regression"
         lines.append(
             f"# {name} {path}: {new:.3f}s vs baseline {old:.3f}s ({delta:+.1%}){tag}"
@@ -106,10 +125,77 @@ def compare_to_baseline(name: str, baseline: dict | None, fresh: dict) -> list[s
     return lines
 
 
+def serving_phase_costs() -> dict:
+    """HLO-accounted cost + roofline of one compiled program per
+    serving phase on the smoke model: batch-1 prefill, dense-store
+    decode, paged-kernel decode. Cheap (tiny model, lower+parse only,
+    nothing is executed) and deterministic — the same ledger
+    `fig15_decode_kernel` sweeps, at one representative shape."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import build
+    from repro.serve.api import KVSpec
+    from repro.serve.kvstore import make_kvstore
+    from repro.utils import hloanalyze, roofline
+
+    cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    batch, plen, max_len, blk = 4, 64, 128, 16
+
+    def cost_of(lowered, model_flops: float) -> dict:
+        c = hloanalyze.analyze(lowered.compile().as_text())
+        rl = roofline.from_dryrun(
+            {"flops": c.flops, "bytes accessed": c.bytes},
+            c.coll_wire, model_flops, n_chips=1,
+        )
+        return {"flops": c.flops, "bytes": c.bytes, "roofline": rl.as_dict()}
+
+    out = {}
+    pf = jax.jit(lambda p, t: model.prefill(p, t)[:2])
+    toks = jnp.zeros((1, plen), jnp.int32)
+    out["prefill"] = cost_of(pf.lower(params, toks), 2.0 * n_params * plen)
+
+    dense = make_kvstore(model, batch, max_len, KVSpec(), ragged=True)
+    paged = make_kvstore(
+        model, batch, max_len,
+        KVSpec(kind="paged", block_size=blk,
+               n_blocks=batch * (max_len // blk) + 1),
+        ragged=True,
+    )
+    c1 = model.init_cache(1, plen)
+    c1["pos"] = jnp.int32(plen)
+    for slot in range(batch):
+        dense.admit(slot, c1, plen)
+        paged.admit(slot, c1, plen)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    active = list(range(batch))
+    mflops = 2.0 * n_params * batch
+    out["decode_dense"] = cost_of(
+        jax.jit(model.decode_step).lower(params, dense.view(active), tok),
+        mflops,
+    )
+    out["decode_paged_kernel"] = cost_of(
+        jax.jit(model.decode_step_paged).lower(
+            params, paged.kernel_view(active), tok
+        ),
+        mflops,
+    )
+    return out
+
+
 def main() -> None:
     parser = argparse.ArgumentParser()
     parser.add_argument("--quick", action="store_true",
                         help="small configs / single rep where supported")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit nonzero on >20%% wall-time regressions "
+                             "vs the committed baselines")
     parser.add_argument("--json", default=os.path.join(_REPO, "BENCH_channel.json"),
                         help="where to write the machine-readable trajectory")
     parser.add_argument("--adaptive-json",
@@ -121,6 +207,9 @@ def main() -> None:
     parser.add_argument("--serve-json",
                         default=os.path.join(_REPO, "BENCH_serve_continuous.json"),
                         help="where to write the ContinuousServe record")
+    parser.add_argument("--decode-json",
+                        default=os.path.join(_REPO, "BENCH_decode.json"),
+                        help="where to write the PagedDecode record")
     args = parser.parse_args()
 
     import jax
@@ -138,6 +227,7 @@ def main() -> None:
         fig12_adaptive,
         fig13_fleet,
         fig14_continuous,
+        fig15_decode_kernel,
         roofline_table,
     )
 
@@ -153,6 +243,7 @@ def main() -> None:
         "BENCH_adaptive": read_baseline(args.adaptive_json),
         "BENCH_fleet": read_baseline(args.fleet_json),
         "BENCH_serve_continuous": read_baseline(args.serve_json),
+        "BENCH_decode": read_baseline(args.decode_json),
     }
 
     mesh = make_mesh((8,), ("data",))
@@ -161,7 +252,8 @@ def main() -> None:
     figures: dict[str, dict] = {}
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
-                fig12_adaptive, fig13_fleet, fig14_continuous, roofline_table):
+                fig12_adaptive, fig13_fleet, fig14_continuous,
+                fig15_decode_kernel, roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
@@ -192,23 +284,37 @@ def main() -> None:
         "figures": figures,
         "channel": fig11_channel.LAST,  # structured ChannelWire record
     }
+    try:
+        phase_cost = serving_phase_costs()
+    except Exception:
+        traceback.print_exc(file=sys.stderr)
+        phase_cost = {"error": traceback.format_exc().strip().rsplit("\n", 1)[-1]}
     records = {
         "BENCH_channel": (args.json, trajectory),
         "BENCH_adaptive": (args.adaptive_json, fig12_adaptive.LAST),
         "BENCH_fleet": (args.fleet_json, fig13_fleet.LAST),
         "BENCH_serve_continuous": (args.serve_json, fig14_continuous.LAST),
+        "BENCH_decode": (args.decode_json, fig15_decode_kernel.LAST),
     }
+    regressions = 0
     for name, (path, rec) in records.items():
         if not rec:
             continue
+        rec["phase_cost"] = phase_cost
         for line in compare_to_baseline(name, baselines[name], rec):
             print(line, file=sys.stderr)
+            regressions += "WARNING" in line
         with open(path, "w") as f:
             json.dump(rec, f, indent=2, sort_keys=True, default=str)
             f.write("\n")
         print(f"# wrote {path}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
+    if args.strict and regressions:
+        raise SystemExit(
+            f"{regressions} wall-time regressions beyond "
+            f"{REGRESSION_WARN:.0%} (--strict)"
+        )
 
 
 if __name__ == "__main__":

@@ -254,6 +254,85 @@ def migrate_cache_into_blocks(
     return k_pool.at[:, block_ids].set(k_rows), v_pool.at[:, block_ids].set(v_rows)
 
 
+# -- int8 KV blocks --------------------------------------------------------------
+#
+# `KVSpec(kv_dtype="int8")` stores pool blocks as int8 plus a per-row
+# fp32 scale sidecar (L, n_blocks, bs) — the same symmetric-scale
+# scheme as wire.Int8Codec (scale = max|x|/127 + eps, round, clip),
+# applied per (layer, token) row of the flattened d_kv axis instead of
+# per stream chunk. Data bytes halve vs the bf16 pool (the scale
+# sidecar adds 4B per token per layer, accounted separately), so the
+# same pool budget holds 2x the pages. Dequantization happens inside
+# the decode kernel (or these gather helpers for the legacy view
+# path); quantized zeros decode to exact zeros, so the permanent zero
+# block and fresh-block zeroing behave identically to the fp pool.
+
+def kv_quantize(rows: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization over the last axis, one scale per row.
+
+    (..., d) fp -> ((..., d) int8, (...) f32 scales); wire.Int8Codec's
+    exact formula, computed in f32.
+    """
+    buf = rows.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(buf), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(buf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def kv_dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of `kv_quantize`: (..., d) int8 + (...) scales -> fp."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def paged_gather_cache_int8(
+    k_pool, v_pool, k_scale, v_scale, table, lens, *, dtype=jnp.bfloat16
+) -> dict:
+    """Dense decode view of an int8 pool: gather blocks + scales, dequantize.
+
+    Same shape contract as `paged_gather_cache`; the view dtype defaults
+    to bf16, the canonical cache dtype the fp pool would have held.
+    """
+    ln = k_pool.shape[0]
+    b, mb = table.shape
+    bs = k_pool.shape[2]
+    idx = jnp.maximum(table, 0).reshape(-1)
+    ks = jnp.take(k_scale, idx, axis=1).reshape(ln, b, mb * bs)
+    vs = jnp.take(v_scale, idx, axis=1).reshape(ln, b, mb * bs)
+    return {
+        "k": kv_dequantize(paged_gather(k_pool, table), ks, dtype),
+        "v": kv_dequantize(paged_gather(v_pool, table), vs, dtype),
+        "pos": jnp.asarray(lens, jnp.int32),
+    }
+
+
+def paged_append_int8(pool, scale, rows, blocks, offsets):
+    """`paged_append` for int8 pools: quantize the (L, n, d) rows and
+    scatter data + per-row scales into the tail blocks."""
+    q, s = kv_quantize(rows)
+    return pool.at[:, blocks, offsets].set(q), scale.at[:, blocks, offsets].set(s)
+
+
+def migrate_cache_into_blocks_int8(
+    k_pool, v_pool, k_scale, v_scale, cache1, block_ids, *, start: int,
+    block_size: int,
+):
+    """int8 counterpart of `migrate_cache_into_blocks`: blockify the
+    batch-1 cache, quantize per token row, write data + scales."""
+    n = int(block_ids.shape[0])
+    if n == 0:
+        return k_pool, v_pool, k_scale, v_scale
+    k_rows = blockify_cache_leaf(cache1["k"], start, n, block_size)
+    v_rows = blockify_cache_leaf(cache1["v"], start, n, block_size)
+    kq, ks = kv_quantize(k_rows)
+    vq, vs = kv_quantize(v_rows)
+    return (
+        k_pool.at[:, block_ids].set(kq),
+        v_pool.at[:, block_ids].set(vq),
+        k_scale.at[:, block_ids].set(ks),
+        v_scale.at[:, block_ids].set(vs),
+    )
+
+
 # -- buffering I/O group -------------------------------------------------------
 
 def buffer_op(capacity_chunks: int, chunk_elems: int, dtype=jnp.float32) -> StreamOperator:

@@ -1,0 +1,17 @@
+"""Paged decode-attention kernel family.
+
+Single-token decode attention that reads the `PagedKVStore` block pool
+directly through per-slot block tables (dense caches route through the
+same op with an identity table). See ops.paged_decode_attention.
+"""
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.paged_attention import (
+    paged_decode_attention_kernel,
+)
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+
+__all__ = [
+    "paged_decode_attention",
+    "paged_decode_attention_kernel",
+    "paged_decode_attention_ref",
+]

@@ -1,0 +1,61 @@
+"""Public paged decode-attention op with impl dispatch.
+
+`paged_decode_attention` is the op the model decode path calls once per
+layer. Unlike the other kernel families it is *not* jit-wrapped here:
+it always runs inside the engines' jitted decode step, and the
+``impl`` dispatch must happen at trace time anyway. Dispatch:
+
+- ``impl=None``: the Pallas kernel on a real TPU, the reference path
+  everywhere else. The reference is bitwise identical to the legacy
+  `paged_gather` + `attention_decode` path (see ref.py), so routing CPU
+  decode through this op preserves every bit-identity contract; the
+  kernel is exercised on CPU via the interpreter in tests/benchmarks.
+- ``impl="kernel"``: the Pallas kernel (compiled on TPU, interpreter
+  elsewhere per `resolve_interpret` / REPRO_KERNEL_INTERPRET).
+- ``impl="ref"``: the reference path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import (
+    paged_decode_attention_kernel,
+)
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.runtime import on_tpu
+
+
+def paged_decode_attention(
+    q: jax.Array,        # (B, 1, H, hd)
+    k_new: jax.Array,    # (B, d_kv)
+    v_new: jax.Array,    # (B, d_kv)
+    k_blocks: jax.Array, # (nb, bs, d_kv) fp or int8 pool, one layer
+    v_blocks: jax.Array,
+    table: jax.Array,    # (B, mb) int32
+    pos: jax.Array,      # (B,) int32
+    *,
+    n_kv: int,
+    window: jax.Array | int,
+    scale: float,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    dequant_dtype=None,  # int8 ref path only; kernel dequantizes in f32
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if impl is None:
+        impl = "kernel" if on_tpu() else "ref"
+    if impl == "kernel":
+        return paged_decode_attention_kernel(
+            q, k_new, v_new, k_blocks, v_blocks, table, pos,
+            n_kv=n_kv, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+        )
+    if impl == "ref":
+        kw = {} if dequant_dtype is None else {"dequant_dtype": dequant_dtype}
+        return paged_decode_attention_ref(
+            q, k_new, v_new, k_blocks, v_blocks, table, pos,
+            n_kv=n_kv, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale, **kw,
+        )
+    raise ValueError(f"unknown impl {impl!r} (use 'kernel', 'ref' or None)")

@@ -1,0 +1,79 @@
+"""Reference paged decode-attention: the bitwise oracle.
+
+Reproduces, op for op, what the historic decode path computed for one
+layer: gather the slot's blocks into a contiguous view
+(`operators.paged_gather` semantics: ``-1`` table entries clamp to the
+permanent zero block), lane-insert the step's new K/V row at each
+slot's cursor (the ragged masked write of `decode_step_lm`), then run
+`layers.attention_decode` — the same einsum / mask / `jax.nn.softmax`
+sequence. Because every op and its order match, routing decode through
+this reference is *bitwise identical* to the `paged_gather` +
+dense-attention path it replaces (asserted by
+tests/test_paged_decode.py on every geometry), which is what keeps the
+PR-5/PR-6 bit-identity suites green on CPU while the Pallas kernel
+(paged_attention.py) carries the same contract to TPU within fp
+tolerance.
+
+The int8 path dequantizes gathered blocks with their per-row scales
+(``dequant_dtype``, bf16 by default — the canonical cache dtype) before
+the identical attention math; it is tolerance-, not bitwise-, matched
+against the fp path (DESIGN.md §13's divergence budget).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def gather_blocks(blocks: jax.Array, table: jax.Array) -> jax.Array:
+    """One layer's block-table gather: (nb, bs, d), (B, mb) -> (B, mb*bs, d).
+
+    Bitwise the per-layer slice of `operators.paged_gather` (same
+    clamp-to-zero-block on ``-1`` entries, same take + reshape).
+    """
+    nb, bs, d = blocks.shape
+    b, mb = table.shape
+    picked = jnp.take(blocks, jnp.maximum(table, 0).reshape(-1), axis=0)
+    return picked.reshape(b, mb * bs, d)
+
+
+def dequant_blocks(q8: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    """(nb, bs, d) int8 + (nb, bs) per-row scales -> fp blocks."""
+    return (q8.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,        # (B, 1, H, hd)
+    k_new: jax.Array,    # (B, d_kv) — this step's K row (flattened layout)
+    v_new: jax.Array,    # (B, d_kv)
+    k_blocks: jax.Array, # (nb, bs, d_kv) — one layer's pool (fp or int8)
+    v_blocks: jax.Array,
+    table: jax.Array,    # (B, mb) int32, -1 = unmapped
+    pos: jax.Array,      # (B,) int32 per-slot cursors
+    *,
+    n_kv: int,
+    window: jax.Array | int,
+    scale: float,
+    k_scale: jax.Array | None = None,  # (nb, bs) f32, int8 pools only
+    v_scale: jax.Array | None = None,
+    dequant_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """One decode step of attention over a block pool, reference path."""
+    if k_blocks.dtype == jnp.int8:
+        if k_scale is None or v_scale is None:
+            raise ValueError("int8 KV blocks need k_scale/v_scale")
+        k_blocks = dequant_blocks(k_blocks, k_scale, dequant_dtype)
+        v_blocks = dequant_blocks(v_blocks, v_scale, dequant_dtype)
+    kc = gather_blocks(k_blocks, table)
+    vc = gather_blocks(v_blocks, table)
+    # ragged lane insert: slot i's new row lands at pos[i]; a cursor
+    # at/past the view length writes nothing (exactly decode_step_lm)
+    lane = (jnp.arange(kc.shape[1])[None, :] == pos[:, None])[:, :, None]
+    kc = jnp.where(lane, k_new[:, None, :].astype(kc.dtype), kc)
+    vc = jnp.where(lane, v_new[:, None, :].astype(vc.dtype), vc)
+    return layers.attention_decode(q, kc, vc, n_kv, pos + 1, window, scale)
+
+
+__all__ = ["paged_decode_attention_ref", "gather_blocks", "dequant_blocks"]

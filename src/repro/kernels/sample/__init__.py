@@ -1,0 +1,10 @@
+"""Fused last-token sampling kernel family.
+
+Logits -> next token in one op (streaming argmax over the vocab axis,
+top-k fallback). See ops.sample_last.
+"""
+from repro.kernels.sample.ops import sample_last
+from repro.kernels.sample.ref import sample_last_ref
+from repro.kernels.sample.sample import argmax_last_kernel
+
+__all__ = ["sample_last", "sample_last_ref", "argmax_last_kernel"]

@@ -1,0 +1,39 @@
+"""Public fused last-token sampling op.
+
+`sample_last(logits)` replaces every inline
+``jnp.argmax(logits[:, -1], axis=-1)`` in the serving engines: one op
+that slices the last position and reduces the vocab axis. Dispatch
+follows the family convention — ``impl=None`` picks the Pallas kernel
+on a real TPU and the reference (the identical jnp op sequence, hence
+bitwise) everywhere else; ``impl="kernel"``/``"ref"`` force a path.
+k>1 (top-k candidates) always uses `jax.lax.top_k` on the sliced row —
+the k=1 greedy path is the only one hot enough to fuse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.runtime import on_tpu
+from repro.kernels.sample.ref import sample_last_ref
+from repro.kernels.sample.sample import argmax_last_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl", "interpret"))
+def sample_last(
+    logits: jax.Array,  # (B, S, V)
+    *,
+    k: int = 1,
+    impl: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Greedy (k=1 -> (B,) int32) or top-k (-> (B, k) int32) sampling
+    of the last position."""
+    if impl is None:
+        impl = "kernel" if on_tpu() else "ref"
+    if impl not in ("kernel", "ref"):
+        raise ValueError(f"unknown impl {impl!r} (use 'kernel', 'ref' or None)")
+    if impl == "kernel" and k == 1:
+        return argmax_last_kernel(logits[:, -1], interpret=interpret)
+    return sample_last_ref(logits, k)

@@ -1,0 +1,26 @@
+"""Reference fused last-token sampling.
+
+The k=1 path is *literally* ``jnp.argmax(logits[:, -1], axis=-1)`` —
+the exact op sequence the engines used inline before this family
+existed — so routing the engines through `ops.sample_last` with the
+reference impl is bitwise identical to the code it replaces (this is
+what keeps the PR-5/PR-6 bit-identity suites green). k>1 returns the
+top-k token ids of the last position via `jax.lax.top_k` (ties broken
+by lower index, same as argmax).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_last_ref(logits: jax.Array, k: int = 1) -> jax.Array:
+    """(B, S, V) logits -> (B,) int32 token ids (k=1) or (B, k) int32."""
+    last = logits[:, -1]
+    if k == 1:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    _, idx = jax.lax.top_k(last, k)
+    return idx.astype(jnp.int32)
+
+
+__all__ = ["sample_last_ref"]

@@ -1,0 +1,79 @@
+"""Fused last-token argmax kernel for TPU.
+
+Greedy sampling used to be a full-vocab `jnp.argmax` over a logits
+tensor XLA had already materialized; fused here it streams the last
+position's vocab row chunk-by-chunk through VMEM, carrying a running
+(max, first-index) pair in scratch — one pass over V bytes, no
+intermediate. Grid = (batch, vocab_chunk) with the chunk index
+minor-most. Tie-break matches `jnp.argmax`: the *first* maximal index
+wins (strict ``>`` across chunks; in-chunk argmax picks the first).
+
+Only k=1 (the serving hot path) runs in the kernel; `ops.sample_last`
+handles k>1 with `jax.lax.top_k` on the sliced last row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, o_ref, m_scr, i_scr, *, block: int, nchunks: int, vocab: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[0, 0] = -jnp.inf
+        i_scr[0, 0] = 0
+
+    x = x_ref[0].astype(jnp.float32)  # (block,)
+    idx = j * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)[0]
+    x = jnp.where(idx < vocab, x, -jnp.inf)  # mask the padded tail
+    cm = jnp.max(x)
+    ci = j * block + jnp.argmax(x).astype(jnp.int32)
+    better = cm > m_scr[0, 0]
+    m_scr[0, 0] = jnp.where(better, cm, m_scr[0, 0])
+    i_scr[0, 0] = jnp.where(better, ci, i_scr[0, 0])
+
+    @pl.when(j == nchunks - 1)
+    def _fin():
+        o_ref[0] = i_scr[0, 0]
+
+
+def argmax_last_kernel(
+    last: jax.Array,  # (B, V) — logits of the last position
+    *,
+    block: int = 1024,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Streaming argmax over the vocab axis -> (B,) int32."""
+    interpret = resolve_interpret(interpret)
+    b, vocab = last.shape
+    block = min(block, vocab)
+    nchunks = -(-vocab // block)
+    pad = nchunks * block - vocab
+    if pad:
+        last = jnp.pad(last, ((0, 0), (0, pad)))
+    kernel = functools.partial(_kernel, block=block, nchunks=nchunks, vocab=vocab)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nchunks),
+        in_specs=[pl.BlockSpec((1, block), lambda b_, j: (b_, j))],
+        out_specs=pl.BlockSpec((1,), lambda b_, j: (b_,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(last)
+
+
+__all__ = ["argmax_last_kernel"]

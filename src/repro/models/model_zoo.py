@@ -31,6 +31,10 @@ class Model:
     prefill: Callable[..., tuple]
     decode_step: Callable[[Params, dict, jax.Array], tuple]
     init_cache: Callable[..., dict]
+    # paged-kernel decode: (params, kernel_view, token) ->
+    # (logits, rows_k, rows_v); None when the family can't run it
+    # (SSM/hybrid recurrent state, enc-dec cross caches)
+    decode_step_paged: Callable[[Params, dict, jax.Array], tuple] | None = None
 
 
 def _frontend_key(cfg) -> str | None:
@@ -79,7 +83,13 @@ def _build_lm(cfg) -> Model:
     def decode_step(params, cache, token):
         return transformer.decode_step_lm(cfg, params, cache, token)
 
-    return Model(cfg, init, loss, prefill, decode_step, init_cache)
+    decode_step_paged = None
+    if cfg.family != "ssm" and not cfg.hybrid:
+        def decode_step_paged(params, pview, token):
+            return transformer.decode_step_paged_lm(cfg, params, pview, token)
+
+    return Model(cfg, init, loss, prefill, decode_step, init_cache,
+                 decode_step_paged)
 
 
 def _build_encdec(cfg) -> Model:

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.paged_attention import ops as paged_ops
 from repro.models import layers, moe, ssm
 
 Params = dict
@@ -410,3 +411,83 @@ def decode_step_lm(cfg, params: Params, cache: dict, token: jax.Array):
     cache["pos"] = pos + 1
     x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
     return lm_logits(cfg, params, x), cache
+
+
+def decode_step_paged_lm(cfg, params: Params, pview: dict, token: jax.Array,
+                         *, impl: str | None = None):
+    """Paged-kernel decode step: attention reads the KV block pool
+    directly, no `paged_gather` dense materialization.
+
+    ``pview`` is a KV store's `kernel_view`: ``k_pool``/``v_pool``
+    ``(L, nb, bs, d_kv)`` (the dense store passes its ``(L, B, S,
+    d_kv)`` cache as a one-block-per-slot pool with an identity
+    ``tables``), ``tables`` ``(B, mb)`` int32 block tables, ``pos``
+    ``(B,)`` per-slot cursors, optional ``k_scale``/``v_scale`` int8
+    sidecars, and ``rows_like`` (a zero-length dtype exemplar) naming
+    the dtype new K/V rows should be returned in.
+
+    Returns ``(logits (B,1,V), rows_k (L,B,d_kv), rows_v)`` — instead
+    of handing back a whole updated cache, the step returns just the
+    per-layer K/V rows it produced (cast to ``rows_like``; the same
+    bits the ragged lane write would have stored) for the store to
+    scatter via `absorb_rows`. Attention-family only: ragged cursors
+    and the block pool have no SSM-state analogue (`model_zoo` leaves
+    `decode_step_paged` unset for ssm/hybrid). ``impl`` forwards to
+    `kernels.paged_attention.ops.paged_decode_attention` (None = kernel
+    on TPU, bitwise reference elsewhere).
+    """
+    if cfg.family == "ssm" or cfg.hybrid:
+        raise ValueError("paged decode needs an attention-only cache")
+    dtype = cfg.dtype
+    x = layers.embed(params["embed"], token, dtype)  # (B,1,d)
+    pos = pview["pos"]
+    tables = pview["tables"]
+    if getattr(pos, "ndim", 0) != 1:
+        raise ValueError("paged decode is ragged-only: pos must be (B,)")
+    if cfg.pos_kind == "sinusoidal":
+        emb = jax.vmap(lambda p: layers.sinusoidal_at(p, cfg.d_model))(pos)
+        x = x + emb.astype(dtype)[:, None]
+    windows = layer_windows_array(cfg)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(hd) if hd else 1.0
+    row_dtype = pview.get("rows_like", pview["k_pool"]).dtype
+    quantized = pview["k_pool"].dtype == jnp.int8
+
+    def body(x, inp):
+        if quantized:
+            p, window, kb, vb, ks, vs = inp
+        else:
+            p, window, kb, vb = inp
+            ks = vs = None
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        q = layers.linear(p["attn"]["wq"], h, dtype).reshape(b, 1, cfg.n_heads, hd)
+        kn = layers.linear(p["attn"]["wk"], h, dtype).reshape(b, 1, cfg.n_kv_heads, hd)
+        vn = layers.linear(p["attn"]["wv"], h, dtype)
+        if cfg.pos_kind == "rope":
+            pos_arr = pos[:, None]
+            q = layers.apply_rope(q, pos_arr, cfg.rope_theta)
+            kn = layers.apply_rope(kn, pos_arr, cfg.rope_theta)
+        kn = kn.reshape(b, cfg.d_kv)
+        vn = vn.reshape(b, cfg.d_kv)
+        attn = paged_ops.paged_decode_attention(
+            q, kn, vn, kb, vb, tables, pos,
+            n_kv=cfg.n_kv_heads, window=window, scale=scale,
+            k_scale=ks, v_scale=vs, dequant_dtype=row_dtype, impl=impl,
+        )
+        attn = layers.linear(p["attn"]["wo"], attn.reshape(b, 1, cfg.d_q), dtype)
+        x = x + attn
+        h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+        if cfg.n_experts:
+            mo, _ = moe.apply_moe(p["moe"], h2, cfg, dtype)
+            x = x + mo
+        else:
+            x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+        return x, (kn.astype(row_dtype), vn.astype(row_dtype))
+
+    xs = (params["layers"], windows, pview["k_pool"], pview["v_pool"])
+    if quantized:
+        xs += (pview["k_scale"], pview["v_scale"])
+    x, (rows_k, rows_v) = jax.lax.scan(body, x, xs)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return lm_logits(cfg, params, x), rows_k, rows_v

@@ -49,6 +49,11 @@ class KVSpec:
     ``prefix_cache`` turns on the cross-tenant shared-prefix cache:
     full blocks of previously-prefilled prompts are refcounted and
     reused by any request whose prompt starts with the same tokens.
+    ``kv_dtype`` selects the pool element codec: ``"cache"`` stores
+    blocks in the model cache dtype (bitwise the dense layout),
+    ``"int8"`` quantizes K/V per token row at absorb time (symmetric
+    scale, `operators.kv_quantize`) so the same pool byte budget holds
+    2x the pages — paged-only, tolerance-matched (DESIGN.md §13).
     """
 
     kind: str = "dense"  # dense | paged
@@ -56,12 +61,19 @@ class KVSpec:
     n_blocks: int | None = None  # None: dense-equivalent capacity
     prefix_cache: bool = False
     prefix_capacity: int = 256  # LRU entries before eviction
+    kv_dtype: str = "cache"  # cache | int8
 
     def __post_init__(self):
         if self.kind not in ("dense", "paged"):
             raise ValueError(f"kv kind must be 'dense' or 'paged', got {self.kind!r}")
         if self.block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.kv_dtype not in ("cache", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'cache' or 'int8', got {self.kv_dtype!r}"
+            )
+        if self.kv_dtype == "int8" and self.kind != "paged":
+            raise ValueError("kv_dtype='int8' requires kind='paged'")
 
 
 @dataclasses.dataclass

@@ -44,6 +44,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import COMPUTE, GroupedMesh, ServiceGraph, StreamChannel, WireSpec
 from repro.core.decouple import group_psum, select_by_role
+from repro.kernels.sample import sample_last
 from repro.core.operators import (
     cache_migration_op,
     cache_stream_plan,
@@ -177,6 +178,10 @@ class DisaggEngine:
         self.finished: list[Request] = []
         self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
         self._decode = jax.jit(model.decode_step)
+        self._decode_paged = (
+            None if model.decode_step_paged is None
+            else jax.jit(model.decode_step_paged)
+        )
         self.kv = make_kvstore(model, cfg.decode_slots, cfg.max_len, cfg.kv,
                                ragged=cfg.mode == "continuous")
         self.tokens = jnp.zeros((cfg.decode_slots, 1), jnp.int32)
@@ -247,13 +252,13 @@ class DisaggEngine:
                 n = int(req.prompt.shape[0])
                 cache1 = {k: (jnp.int32(n) if k == "pos" else v[:, i : i + 1])
                           for k, v in batch.items()}
-                first = jnp.argmax(logits[i, -1]).astype(jnp.int32)
+                first = sample_last(logits[i : i + 1])[0]
                 self.handoff.append((req, cache1, first, logits[i, -1]))
                 self.stats["prefills"] += 1
         else:
             for req in finished:
                 logits, cache1 = self._prefill(req.prompt)
-                first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+                first = sample_last(logits)[0]
                 self.handoff.append((req, cache1, first, logits[0, -1]))
                 self.stats["prefills"] += 1
         return work
@@ -278,7 +283,7 @@ class DisaggEngine:
                     n += 1
                     continue
                 out_logits, cache1 = self._prefill(req.prompt)
-                first = jnp.argmax(out_logits[0, -1]).astype(jnp.int32)
+                first = sample_last(out_logits)[0]
                 logits = out_logits[0, -1]
                 self.stats["prefills"] += 1
             plen = int(req.prompt.shape[0])
@@ -311,11 +316,19 @@ class DisaggEngine:
             if continuous:
                 self.last_tick["kv"] = self.kv.stats
             return
-        view = self.kv.view(active) if continuous else self.kv.view()
-        logits, cache = self._decode(self.params, view, self.tokens)
-        self.kv.absorb(cache, active)
+        if continuous and self._decode_paged is not None:
+            # paged decode kernel: per-slot rows in/out, no dense
+            # (L, B, S, d) gather per step
+            logits, rows_k, rows_v = self._decode_paged(
+                self.params, self.kv.kernel_view(active), self.tokens
+            )
+            self.kv.absorb_rows(rows_k, rows_v, active)
+        else:
+            view = self.kv.view(active) if continuous else self.kv.view()
+            logits, cache = self._decode(self.params, view, self.tokens)
+            self.kv.absorb(cache, active)
         self.last_logits = logits
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        next_tok = sample_last(logits)
         next_np = np.asarray(next_tok)
         for i, req in enumerate(self.slots):
             if req is None:
@@ -522,7 +535,7 @@ def build_disagg_spmd_step(
         # -- 1. prefill rows produce (packed cache, first token, length)
         def prefill_branch():
             logits, c1, _ = model.prefill(params, prompts, length=plen[0])
-            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            first = sample_last(logits)[0]
             return pack_cache(c1, plan), first, plen[0]
 
         def idle_branch():
@@ -566,7 +579,7 @@ def build_disagg_spmd_step(
             c, toks, outs = dict(row_cache), tokens, []
             for _ in range(decode_steps):
                 logits, c = model.decode_step(params, c, toks)
-                toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                toks = sample_last(logits)[:, None]
                 outs.append(toks[:, 0])
             return c, toks, jnp.stack(outs, axis=1)
 

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.sample import sample_last
 from repro.serve.api import ServeConfig
 from repro.serve.kvstore import make_kvstore
 from repro.serve.sched import FleetLedger, FleetScheduler
@@ -187,6 +188,13 @@ class Engine:
         self.slots: list[Request | None] = [None] * cfg.max_batch
         self.finished: list[Request] = []
         self._decode = jax.jit(model.decode_step)
+        # kernel-path decode (continuous mode): attention reads the KV
+        # pool through block tables, no per-step paged_gather; absent
+        # for families without a paged decode (SSM/hybrid, enc-dec)
+        self._decode_paged = (
+            None if model.decode_step_paged is None
+            else jax.jit(model.decode_step_paged)
+        )
         self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
         self.kv = make_kvstore(model, cfg.max_batch, cfg.max_len, cfg.kv,
                                ragged=cfg.mode == "continuous")
@@ -215,7 +223,18 @@ class Engine:
 
     # -- page-aware admission budget ---------------------------------------
     def _page_budget(self):
-        return page_admission_budget(self.kv, self.slots, self.cfg.max_len)
+        budget, cost_fn = page_admission_budget(
+            self.kv, self.slots, self.cfg.max_len
+        )
+        if budget is None and self.cfg.mode == "continuous":
+            # dense stores aren't page-limited, but they now report an
+            # honest free-token count: gate on it with a uniform
+            # max_len cost per request. Budget = free_slots * max_len
+            # with every candidate priced at max_len admits exactly the
+            # same set (in the same order) as the bare max_n gate —
+            # both KV modes drive take() through one interface.
+            return self.kv.free_tokens(), lambda req: self.cfg.max_len
+        return budget, cost_fn
 
     # -- prefill one request into a free slot ------------------------------------
     def _admit(self) -> None:
@@ -229,7 +248,7 @@ class Engine:
             # the slot (zero-extended to max_len)
             logits, cache1 = self._prefill(req.prompt)
             self.kv.admit(slot, cache1, int(req.prompt.shape[0]))
-            first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            first = sample_last(logits)[0]
             self.tokens = self.tokens.at[slot, 0].set(first)
             self.stats["prefills"] += 1
             self.last_tick["prefill_lens"].append(int(req.prompt.shape[0]))
@@ -271,7 +290,7 @@ class Engine:
             cache1 = {k: (jnp.int32(n) if k == "pos" else v[:, i : i + 1])
                       for k, v in batch.items()}
             row_logits = logits[i, -1]
-            first = jnp.argmax(row_logits).astype(jnp.int32)
+            first = sample_last(logits[i : i + 1])[0]
             info = self.kv.admit(slot, cache1, n, tokens=req.prompt,
                                  logits=row_logits, first=int(first))
             self.tokens = self.tokens.at[slot, 0].set(first)
@@ -305,7 +324,7 @@ class Engine:
         logits, cache = self._decode(self.params, self.kv.view(), self.tokens)
         self.kv.absorb(cache, [i for i, s in enumerate(self.slots) if s is not None])
         self.last_logits = logits
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        next_tok = sample_last(logits)
         next_np = np.asarray(next_tok)
         self.last_tick["decode_batch"] = sum(s is not None for s in self.slots)
         self._retire(next_np)
@@ -319,11 +338,21 @@ class Engine:
         self.tick += 1
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if active:
-            logits, cache = self._decode(self.params, self.kv.view(active),
-                                         self.tokens)
-            self.kv.absorb(cache, active)
+            if self._decode_paged is not None:
+                # kernel path: decode attends straight into the pool
+                # through the block tables; the step returns just its
+                # new K/V rows and the store scatters them — no dense
+                # view materialized, no whole-cache round trip
+                logits, rows_k, rows_v = self._decode_paged(
+                    self.params, self.kv.kernel_view(active), self.tokens
+                )
+                self.kv.absorb_rows(rows_k, rows_v, active)
+            else:
+                logits, cache = self._decode(self.params, self.kv.view(active),
+                                             self.tokens)
+                self.kv.absorb(cache, active)
             self.last_logits = logits
-            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            next_tok = sample_last(logits)
             next_np = np.asarray(next_tok)
             self.last_tick["decode_batch"] = len(active)
             for slot in self._retire(next_np):

@@ -51,10 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.operators import (
+    kv_dequantize,
+    kv_quantize,
     migrate_cache_into_blocks,
+    migrate_cache_into_blocks_int8,
     migrate_cache_into_slot,
     paged_gather,
     paged_gather_cache,
+    paged_gather_cache_int8,
 )
 from repro.serve.api import KVSpec
 
@@ -94,6 +98,7 @@ class DenseKVStore:
         self.cache = model.init_cache(slots, max_len)
         self.lens = np.zeros(slots, np.int64)
         self._mig = jax.jit(migrate_cache_into_slot)
+        self._scatter = jax.jit(_dense_scatter_rows)
 
     # -- decode surface ----------------------------------------------------
     def view(self, active: Sequence[int] | None = None) -> dict:
@@ -118,6 +123,44 @@ class DenseKVStore:
             # rope position between dense and paged runs
             self.lens[i] = min(self.lens[i] + 1, self.max_len)
 
+    # -- paged-kernel surface ----------------------------------------------
+    def kernel_view(self, active: Sequence[int] | None = None) -> dict:
+        """The dense cache as a trivially-paged pool: one block of
+        ``max_len`` tokens per slot, identity block table — the layout
+        `decode_step_paged` consumes, so both stores share one decode
+        code path (continuous mode only)."""
+        if not self.ragged:
+            raise RuntimeError("kernel_view needs ragged mode (per-slot cursors)")
+        pos = np.full(self.slots, self.max_len, np.int32)
+        for i in active or ():
+            pos[i] = self.lens[i]
+        return {
+            "k_pool": self.cache["k"],
+            "v_pool": self.cache["v"],
+            "tables": jnp.arange(self.slots, dtype=jnp.int32)[:, None],
+            "pos": jnp.asarray(pos),
+            # dtype exemplar: new rows come back in the cache dtype, the
+            # same bits the ragged lane write stored
+            "rows_like": jnp.zeros((0,), self.cache["k"].dtype),
+        }
+
+    def absorb_rows(self, rows_k: jax.Array, rows_v: jax.Array,
+                    active: Sequence[int]) -> None:
+        """Write the paged decode step's per-slot K/V rows (L, B, d) at
+        each active slot's cursor. Bitwise the lane-masked cache write
+        `absorb` took back: the rows are already cast to the cache dtype
+        and land at the same (slot, position)."""
+        idx = [i for i in active if self.lens[i] < self.max_len]
+        if idx:
+            k, v = self._scatter(
+                self.cache["k"], self.cache["v"], rows_k, rows_v,
+                jnp.asarray(idx, jnp.int32),
+                jnp.asarray(self.lens[list(idx)], jnp.int32),
+            )
+            self.cache = {"k": k, "v": v, "pos": self.cache["pos"]}
+        for i in active:
+            self.lens[i] = min(self.lens[i] + 1, self.max_len)
+
     # -- admission / retirement --------------------------------------------
     def admit(self, slot: int, cache1: dict, length: int, *,
               tokens=None, logits=None, first=None) -> dict:
@@ -132,8 +175,14 @@ class DenseKVStore:
         self.lens[slot] = 0  # KV stays; the next admit zero-extends over it
 
     # -- capacity ----------------------------------------------------------
-    def free_tokens(self) -> int | None:
-        return None  # dense admission is not page-limited
+    def free_tokens(self) -> int:
+        """Honest token capacity: every free slot can hold ``max_len``
+        tokens (the dense layout reserves whole slots, so partially
+        filled slots contribute nothing). Lets `FleetScheduler.take`'s
+        ``free_tokens=`` gate work identically in both KV modes;
+        `page_admission_budget` still reports dense stores as
+        not-page-limited (the reservation is per slot, not per page)."""
+        return int(np.sum(self.lens == 0)) * self.max_len
 
     def covered_tokens(self, tokens, length: int) -> int:
         return 0
@@ -299,7 +348,16 @@ class PagedKVStore:
         self.spec = spec
         bs = self.block_size = spec.block_size
         self.max_blocks = mb = max_len // bs
-        n_blocks = spec.n_blocks if spec.n_blocks is not None else slots * mb + 1
+        self.quantized = spec.kv_dtype == "int8"
+        self._cache_dtype = probe["k"].dtype  # dequant target / fp pool dtype
+        # int8 halves the per-token bytes vs the cache dtype, so the
+        # *same pool byte budget* holds itemsize-times the pages — the
+        # default capacity scales by that ratio (2x for bf16 caches)
+        ratio = np.dtype(self._cache_dtype).itemsize if self.quantized else 1
+        n_blocks = (
+            spec.n_blocks if spec.n_blocks is not None
+            else slots * mb * ratio + 1
+        )
         if n_blocks < mb + 1:
             raise ValueError(
                 f"n_blocks={n_blocks} cannot hold one full request "
@@ -308,8 +366,15 @@ class PagedKVStore:
         self.n_blocks = n_blocks
         ln, _, _, dk = probe["k"].shape
         dv = probe["v"].shape[-1]
-        self.k_pool = jnp.zeros((ln, n_blocks, bs, dk), probe["k"].dtype)
-        self.v_pool = jnp.zeros((ln, n_blocks, bs, dv), probe["v"].dtype)
+        pool_dtype = jnp.int8 if self.quantized else self._cache_dtype
+        self.k_pool = jnp.zeros((ln, n_blocks, bs, dk), pool_dtype)
+        self.v_pool = jnp.zeros((ln, n_blocks, bs, dv), pool_dtype)
+        if self.quantized:
+            # per-(layer, token-row) symmetric scales (operators.kv_quantize)
+            self.k_scale = jnp.zeros((ln, n_blocks, bs), jnp.float32)
+            self.v_scale = jnp.zeros((ln, n_blocks, bs), jnp.float32)
+        else:
+            self.k_scale = self.v_scale = None
         self.tables = np.full((slots, mb), -1, np.int32)
         self.lens = np.zeros(slots, np.int64)
         self.ref = np.zeros(n_blocks, np.int64)
@@ -319,10 +384,19 @@ class PagedKVStore:
         heapq.heapify(self._free)
         self.peak_blocks = 0
         self.prefix = PrefixCache(spec.prefix_capacity) if spec.prefix_cache else None
-        self._gather = jax.jit(paged_gather_cache)
-        self._fill = jax.jit(migrate_cache_into_blocks,
-                             static_argnames=("block_size",))
-        self._absorb = jax.jit(_absorb_rows)
+        if self.quantized:
+            self._gather = jax.jit(paged_gather_cache_int8,
+                                   static_argnames=("dtype",))
+            self._fill = jax.jit(migrate_cache_into_blocks_int8,
+                                 static_argnames=("block_size",))
+            self._absorb = jax.jit(_absorb_rows_int8)
+            self._scatter = jax.jit(_paged_scatter_rows_int8)
+        else:
+            self._gather = jax.jit(paged_gather_cache)
+            self._fill = jax.jit(migrate_cache_into_blocks,
+                                 static_argnames=("block_size",))
+            self._absorb = jax.jit(_absorb_rows)
+            self._scatter = jax.jit(_paged_scatter_rows)
 
     # -- block accounting --------------------------------------------------
     def _alloc(self, n: int) -> list[int]:
@@ -360,13 +434,33 @@ class PagedKVStore:
         eviction, so admission counts them as available."""
         return int(np.sum((self._pref > 0) & (self.ref == self._pref)))
 
+    # -- jit dispatch (fp vs int8 pools) ------------------------------------
+    def _gather_call(self, tables, pos) -> dict:
+        if self.quantized:
+            return self._gather(self.k_pool, self.v_pool, self.k_scale,
+                                self.v_scale, tables, pos,
+                                dtype=self._cache_dtype)
+        return self._gather(self.k_pool, self.v_pool, tables, pos)
+
+    def _fill_call(self, cache1: dict, new_ids, *, start: int) -> None:
+        ids = jnp.asarray(new_ids, jnp.int32)
+        if self.quantized:
+            self.k_pool, self.v_pool, self.k_scale, self.v_scale = self._fill(
+                self.k_pool, self.v_pool, self.k_scale, self.v_scale,
+                cache1, ids, start=start, block_size=self.block_size,
+            )
+        else:
+            self.k_pool, self.v_pool = self._fill(
+                self.k_pool, self.v_pool, cache1, ids,
+                start=start, block_size=self.block_size,
+            )
+
     # -- decode surface ----------------------------------------------------
     def view(self, active: Sequence[int] | None = None) -> dict:
         pos = np.full(self.slots, self.max_len, np.int32)
         for i in active or ():
             pos[i] = self.lens[i]
-        return self._gather(self.k_pool, self.v_pool,
-                            jnp.asarray(self.tables), jnp.asarray(pos))
+        return self._gather_call(jnp.asarray(self.tables), jnp.asarray(pos))
 
     def absorb(self, cache: dict, active: Sequence[int]) -> None:
         """Write the decode step's appended rows back into the pool.
@@ -378,25 +472,92 @@ class PagedKVStore:
         the row lands (a recycled block holds a retired request's data,
         and the dense comparison expects zeros past the cursor).
         """
-        idx = [i for i in active if self.lens[i] < self.max_len]
+        idx, pos, blocks, offs, fresh = self._tail_slots(active)
         if idx:
-            fresh = []
-            for i in idx:
-                b = int(self.lens[i]) // self.block_size
-                if self.tables[i, b] < 0:
-                    (nb,) = self._alloc(1)
-                    self.ref[nb] = 1
-                    self.tables[i, b] = nb
-                    fresh.append(nb)
-            pos = self.lens[list(idx)]
-            blocks = self.tables[list(idx), pos // self.block_size]
-            offs = pos % self.block_size
-            self.k_pool, self.v_pool = self._absorb(
-                self.k_pool, self.v_pool, cache["k"], cache["v"],
+            args = (
                 jnp.asarray(idx, jnp.int32), jnp.asarray(pos, jnp.int32),
                 jnp.asarray(blocks, jnp.int32), jnp.asarray(offs, jnp.int32),
                 jnp.asarray(fresh, jnp.int32),
             )
+            if self.quantized:
+                (self.k_pool, self.v_pool, self.k_scale,
+                 self.v_scale) = self._absorb(
+                    self.k_pool, self.v_pool, self.k_scale, self.v_scale,
+                    cache["k"], cache["v"], *args,
+                )
+            else:
+                self.k_pool, self.v_pool = self._absorb(
+                    self.k_pool, self.v_pool, cache["k"], cache["v"], *args,
+                )
+        for i in active:
+            self.lens[i] = min(self.lens[i] + 1, self.max_len)
+
+    def _tail_slots(self, active: Sequence[int]):
+        """Host half of a decode append: the slots whose cursor is still
+        inside the view, their (block, offset) targets, and any freshly
+        allocated tail blocks (block-boundary crossings)."""
+        idx = [i for i in active if self.lens[i] < self.max_len]
+        if not idx:
+            return idx, None, None, None, None
+        fresh = []
+        for i in idx:
+            b = int(self.lens[i]) // self.block_size
+            if self.tables[i, b] < 0:
+                (nb,) = self._alloc(1)
+                self.ref[nb] = 1
+                self.tables[i, b] = nb
+                fresh.append(nb)
+        pos = self.lens[list(idx)]
+        blocks = self.tables[list(idx), pos // self.block_size]
+        offs = pos % self.block_size
+        return idx, pos, blocks, offs, fresh
+
+    # -- paged-kernel surface ----------------------------------------------
+    def kernel_view(self, active: Sequence[int] | None = None) -> dict:
+        """The raw pool + block tables for `decode_step_paged`: no
+        gather, no dense materialization — the kernel chases the table
+        per block. int8 pools ride with their scale sidecars."""
+        pos = np.full(self.slots, self.max_len, np.int32)
+        for i in active or ():
+            pos[i] = self.lens[i]
+        out = {
+            "k_pool": self.k_pool,
+            "v_pool": self.v_pool,
+            "tables": jnp.asarray(self.tables),
+            "pos": jnp.asarray(pos),
+            # new rows (and the int8 dequant target) use the cache
+            # dtype, matching what the view/lane-write path stored
+            "rows_like": jnp.zeros((0,), self._cache_dtype),
+        }
+        if self.quantized:
+            out["k_scale"] = self.k_scale
+            out["v_scale"] = self.v_scale
+        return out
+
+    def absorb_rows(self, rows_k: jax.Array, rows_v: jax.Array,
+                    active: Sequence[int]) -> None:
+        """Scatter the paged decode step's per-slot K/V rows (L, B, d)
+        into each active slot's tail block — the kernel-path `absorb`,
+        minus the view round-trip. int8 pools quantize the rows here
+        (per-row symmetric scale) before the scatter; fresh tail blocks
+        are zeroed in the same jitted call."""
+        idx, pos, blocks, offs, fresh = self._tail_slots(active)
+        if idx:
+            args = (
+                jnp.asarray(idx, jnp.int32),
+                jnp.asarray(blocks, jnp.int32), jnp.asarray(offs, jnp.int32),
+                jnp.asarray(fresh, jnp.int32),
+            )
+            if self.quantized:
+                (self.k_pool, self.v_pool, self.k_scale,
+                 self.v_scale) = self._scatter(
+                    self.k_pool, self.v_pool, self.k_scale, self.v_scale,
+                    rows_k, rows_v, *args,
+                )
+            else:
+                self.k_pool, self.v_pool = self._scatter(
+                    self.k_pool, self.v_pool, rows_k, rows_v, *args,
+                )
         for i in active:
             self.lens[i] = min(self.lens[i] + 1, self.max_len)
 
@@ -421,11 +582,7 @@ class PagedKVStore:
         n_new = -((start - length) // self.block_size) if length > start else 0
         new_ids = self._alloc(n_new)
         if n_new:
-            self.k_pool, self.v_pool = self._fill(
-                self.k_pool, self.v_pool, cache1,
-                jnp.asarray(new_ids, jnp.int32),
-                start=start, block_size=self.block_size,
-            )
+            self._fill_call(cache1, new_ids, start=start)
         row = np.full(self.max_blocks, -1, np.int32)
         row[: len(shared)] = shared
         row[len(shared) : len(shared) + n_new] = new_ids
@@ -462,11 +619,7 @@ class PagedKVStore:
             tail = {"k": jnp.asarray(entry.k_tail)[:, None],
                     "v": jnp.asarray(entry.v_tail)[:, None],
                     "pos": jnp.int32(rem)}
-            self.k_pool, self.v_pool = self._fill(
-                self.k_pool, self.v_pool, tail,
-                jnp.asarray([nb], jnp.int32),
-                start=0, block_size=self.block_size,
-            )
+            self._fill_call(tail, [nb], start=0)
             self.ref[nb] = 1
             row[len(entry.blocks)] = nb
         self.tables[slot] = row
@@ -501,9 +654,22 @@ class PagedKVStore:
         return self.n_blocks - 1 - len(self._free)
 
     @property
+    def pool_bytes(self) -> int:
+        """K/V *data* bytes (the budget int8 halves per token; the f32
+        scale sidecar — 4B per token row per layer — is reported
+        separately in stats)."""
+        return self.k_pool.size * self.k_pool.dtype.itemsize + \
+            self.v_pool.size * self.v_pool.dtype.itemsize
+
+    @property
     def stats(self) -> dict:
         out = {
             "kind": "paged",
+            "kv_dtype": self.spec.kv_dtype,
+            "pool_bytes": self.pool_bytes,
+            "scale_bytes": 0 if not self.quantized else (
+                self.k_scale.size + self.v_scale.size
+            ) * 4,
             "block_size": self.block_size,
             "n_blocks": self.n_blocks,
             "blocks_in_use": self.blocks_in_use,
@@ -523,8 +689,14 @@ class PagedKVStore:
 
     # -- migration ---------------------------------------------------------
     def slot_cache(self, slot: int) -> dict:
-        """A slot as a batch-1 dense cache (cross-store migration)."""
+        """A slot as a batch-1 dense cache (cross-store migration);
+        int8 pools dequantize on the way out."""
         table1 = jnp.asarray(self.tables[slot : slot + 1])
+        if self.quantized:
+            view = self._gather_call(table1, jnp.asarray([self.lens[slot]],
+                                                         jnp.int32))
+            return {"k": view["k"], "v": view["v"],
+                    "pos": jnp.int32(self.lens[slot])}
         return {"k": paged_gather(self.k_pool, table1),
                 "v": paged_gather(self.v_pool, table1),
                 "pos": jnp.int32(self.lens[slot])}
@@ -564,6 +736,62 @@ def _absorb_rows(k_pool, v_pool, view_k, view_v, slot_idx, positions,
                                  axis=2)[:, :, 0]
     return (k_pool.at[:, blocks, offs].set(rows_k),
             v_pool.at[:, blocks, offs].set(rows_v))
+
+
+def _absorb_rows_int8(k_pool, v_pool, k_scale, v_scale, view_k, view_v,
+                      slot_idx, positions, blocks, offs, fresh):
+    """int8 `_absorb_rows`: extract the fp rows from the dequantized
+    view, re-quantize per row, scatter data + scales."""
+    k_pool = k_pool.at[:, fresh].set(0)
+    v_pool = v_pool.at[:, fresh].set(0)
+    k_scale = k_scale.at[:, fresh].set(0)
+    v_scale = v_scale.at[:, fresh].set(0)
+    sel = positions.reshape(1, -1, 1, 1)
+    rows_k = jnp.take_along_axis(jnp.take(view_k, slot_idx, axis=1), sel,
+                                 axis=2)[:, :, 0]
+    rows_v = jnp.take_along_axis(jnp.take(view_v, slot_idx, axis=1), sel,
+                                 axis=2)[:, :, 0]
+    kq, ks = kv_quantize(rows_k)
+    vq, vs = kv_quantize(rows_v)
+    return (k_pool.at[:, blocks, offs].set(kq),
+            v_pool.at[:, blocks, offs].set(vq),
+            k_scale.at[:, blocks, offs].set(ks),
+            v_scale.at[:, blocks, offs].set(vs))
+
+
+def _paged_scatter_rows(k_pool, v_pool, rows_k, rows_v, slot_idx, blocks,
+                        offs, fresh):
+    """Kernel-path append: the decode step hands back its per-slot K/V
+    rows (L, B, d) directly — select the active ones and scatter, no
+    gathered view to extract from. Fresh tail blocks are zeroed first
+    (recycled blocks hold a retired request's data and the dense
+    comparison expects zeros past the cursor)."""
+    k_pool = k_pool.at[:, fresh].set(0)
+    v_pool = v_pool.at[:, fresh].set(0)
+    return (k_pool.at[:, blocks, offs].set(rows_k[:, slot_idx]),
+            v_pool.at[:, blocks, offs].set(rows_v[:, slot_idx]))
+
+
+def _paged_scatter_rows_int8(k_pool, v_pool, k_scale, v_scale, rows_k,
+                             rows_v, slot_idx, blocks, offs, fresh):
+    k_pool = k_pool.at[:, fresh].set(0)
+    v_pool = v_pool.at[:, fresh].set(0)
+    k_scale = k_scale.at[:, fresh].set(0)
+    v_scale = v_scale.at[:, fresh].set(0)
+    kq, ks = kv_quantize(rows_k[:, slot_idx])
+    vq, vs = kv_quantize(rows_v[:, slot_idx])
+    return (k_pool.at[:, blocks, offs].set(kq),
+            v_pool.at[:, blocks, offs].set(vq),
+            k_scale.at[:, blocks, offs].set(ks),
+            v_scale.at[:, blocks, offs].set(vs))
+
+
+def _dense_scatter_rows(k_cache, v_cache, rows_k, rows_v, slot_idx, positions):
+    """Dense kernel-path append: slot ``slot_idx[i]``'s row lands at
+    sequence position ``positions[i]`` — the same (value, place) the
+    ragged lane write produced, so the cache stays bitwise identical."""
+    return (k_cache.at[:, slot_idx, positions].set(rows_k[:, slot_idx]),
+            v_cache.at[:, slot_idx, positions].set(rows_v[:, slot_idx]))
 
 
 __all__ = ["DenseKVStore", "PagedKVStore", "PrefixCache", "make_kvstore"]

@@ -234,10 +234,18 @@ def test_page_budget_reserves_inflight_growth(tiny_model):
 
 
 def test_dense_store_is_not_page_limited(tiny_model):
+    """Dense stores now report an honest token count (free slots x
+    max_len) so FleetScheduler free_tokens gating works in both modes,
+    but page_admission_budget still treats them as not page-limited:
+    the reservation is per slot, not per page."""
     cfg, model, params = tiny_model
     kv = make_kvstore(model, 2, 64, KVSpec(kind="dense"), ragged=True)
-    assert kv.free_tokens() is None
+    assert kv.free_tokens() == 2 * 64
     assert page_admission_budget(kv, [None, None], 64) == (None, None)
+    kv.lens[0] = 10  # an occupied slot contributes nothing
+    assert kv.free_tokens() == 64
+    kv.lens[0] = 0
+    assert kv.free_tokens() == 2 * 64
 
 
 # -- migration / repack --------------------------------------------------------
