@@ -24,7 +24,8 @@ the structured ChannelWire record from ``fig11_channel``),
 ``fig13_fleet``), ``BENCH_serve_continuous.json`` (the
 ContinuousServe record from ``fig14_continuous``) and
 ``BENCH_decode.json`` (the PagedDecode record from
-``fig15_decode_kernel``). Before overwriting, EVERY committed
+``fig15_decode_kernel``) and ``BENCH_faults.json`` (the FaultFleet
+record from ``fig16_faults``). Before overwriting, EVERY committed
 ``BENCH_*.json`` is read back and its wall-seconds entries
 (``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they sit) are
 diffed — a WARNING flags any entry both >20% and >0.25s slower than
@@ -32,7 +33,7 @@ the baseline, so the perf trajectory is actually consumed, not just
 written. By default
 regressions never fail the run (containers differ); ``--strict`` turns
 them into a nonzero exit (the CI quick sweep runs strict). CI uploads
-all five JSONs as artifacts.
+all six JSONs as artifacts.
 
 Every record additionally carries a ``phase_cost`` section: per
 serving phase (prefill, dense decode, paged-kernel decode) the
@@ -210,6 +211,9 @@ def main() -> None:
     parser.add_argument("--decode-json",
                         default=os.path.join(_REPO, "BENCH_decode.json"),
                         help="where to write the PagedDecode record")
+    parser.add_argument("--faults-json",
+                        default=os.path.join(_REPO, "BENCH_faults.json"),
+                        help="where to write the FaultFleet record")
     args = parser.parse_args()
 
     import jax
@@ -228,6 +232,7 @@ def main() -> None:
         fig13_fleet,
         fig14_continuous,
         fig15_decode_kernel,
+        fig16_faults,
         roofline_table,
     )
 
@@ -244,6 +249,7 @@ def main() -> None:
         "BENCH_fleet": read_baseline(args.fleet_json),
         "BENCH_serve_continuous": read_baseline(args.serve_json),
         "BENCH_decode": read_baseline(args.decode_json),
+        "BENCH_faults": read_baseline(args.faults_json),
     }
 
     mesh = make_mesh((8,), ("data",))
@@ -253,7 +259,7 @@ def main() -> None:
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
                 fig12_adaptive, fig13_fleet, fig14_continuous,
-                fig15_decode_kernel, roofline_table):
+                fig15_decode_kernel, fig16_faults, roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
@@ -295,6 +301,7 @@ def main() -> None:
         "BENCH_fleet": (args.fleet_json, fig13_fleet.LAST),
         "BENCH_serve_continuous": (args.serve_json, fig14_continuous.LAST),
         "BENCH_decode": (args.decode_json, fig15_decode_kernel.LAST),
+        "BENCH_faults": (args.faults_json, fig16_faults.LAST),
     }
     regressions = 0
     for name, (path, rec) in records.items():

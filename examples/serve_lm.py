@@ -22,9 +22,17 @@ paged KV store with the cross-tenant prefix cache. Every combination
 builds through the one `make_engine(model, params, cfg)` entry point —
 the driver below never branches on engine type.
 
+`--fail-at TICK` / `--preempt-at TICK` inject a fault mid-replay
+(repro/serve/faults.py): a device loss orphans the dying rows'
+in-flight requests (re-admitted at their original arrival ticks —
+zero lost), a preemption stages them to host and the fleet re-grows
+when the rows return. Fault flags need `--scenario` and route through
+the FleetEngine in continuous mode.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py [--disagg]
       PYTHONPATH=src python examples/serve_lm.py --scenario bursty-prefix --paged
       PYTHONPATH=src python examples/serve_lm.py --scenario bursty-multitenant --adapt
+      PYTHONPATH=src python examples/serve_lm.py --scenario bursty-multitenant --fail-at 12
 """
 import argparse
 import time
@@ -60,10 +68,11 @@ def drive_legacy(eng, cfg, n_requests=10):
     return n_requests, analytics
 
 
-def drive_scenario(eng, cfg, sc):
+def drive_scenario(eng, cfg, sc, **fault_kw):
     analytics = []
     pairs = replay(eng, sc, cfg.vocab_size,
-                   on_tick=lambda e: analytics.append(e.workload_sample()))
+                   on_tick=lambda e: analytics.append(e.workload_sample()),
+                   **fault_kw)
     return len(pairs), analytics
 
 
@@ -82,7 +91,17 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV blocks + cross-tenant prefix cache "
                          "(implies --continuous)")
+    ap.add_argument("--fail-at", type=int, default=None, metavar="TICK",
+                    help="lose --fault-rows rows WITHOUT notice at TICK "
+                         "(device loss; orphans re-admitted, zero lost)")
+    ap.add_argument("--preempt-at", type=int, default=None, metavar="TICK",
+                    help="preempt --fault-rows rows WITH notice at TICK "
+                         "(slots stage to host; rows return after "
+                         "--preempt-duration ticks)")
+    ap.add_argument("--fault-rows", type=int, default=1)
+    ap.add_argument("--preempt-duration", type=int, default=8)
     args = ap.parse_args()
+    faulted = args.fail_at is not None or args.preempt_at is not None
 
     cfg = get_smoke("qwen2.5-3b")
     model = build(cfg)
@@ -93,22 +112,28 @@ def main():
 
     # the serving mode rides on the shared ServeConfig base: the same
     # two fields pick batching + KV for every engine construction
-    batching = "continuous" if (args.continuous or args.paged) else "aligned"
+    batching = ("continuous" if (args.continuous or args.paged or faulted)
+                else "aligned")
     kv = (KVSpec(kind="paged", block_size=16, prefix_cache=True)
           if args.paged else KVSpec())
 
-    if args.adapt:
+    if args.adapt or faulted:
         if sc is None:
-            raise SystemExit("--adapt needs --scenario")
-        from repro.core.adapt import AdaptPolicy
+            raise SystemExit("--adapt / fault injection need --scenario")
         from repro.serve import FleetConfig
 
+        adapt = None
+        if args.adapt:
+            from repro.core.adapt import AdaptPolicy
+
+            adapt = AdaptPolicy(window=4, cooldown=4,
+                                speedup_threshold=1.1, row_budget=5)
         engine_cfg = FleetConfig(
             n_rows=8, prefill_rows=2, slots_per_row=1, max_len=160,
-            prefill_chunk=16, mode=batching, kv=kv,
-            adapt=AdaptPolicy(window=4, cooldown=4,
-                              speedup_threshold=1.1, row_budget=5))
-        mode = "adaptive-disagg"
+            prefill_chunk=16, mode=batching, kv=kv, adapt=adapt)
+        mode = "adaptive-disagg" if args.adapt else "fleet"
+        if faulted:
+            mode += "+faults"
     elif args.disagg:
         engine_cfg = DisaggConfig(n_prefill_rows=2, decode_slots=4, max_len=160,
                                   mode=batching, kv=kv)
@@ -123,7 +148,11 @@ def main():
 
     t0 = time.time()
     if sc is not None:
-        n_requests, analytics = drive_scenario(eng, cfg, sc)
+        n_requests, analytics = drive_scenario(
+            eng, cfg, sc,
+            fail_at=args.fail_at, preempt_at=args.preempt_at,
+            fault_rows=args.fault_rows,
+            preempt_duration=args.preempt_duration)
     else:
         n_requests, analytics = drive_legacy(eng, cfg)
     dt = time.time() - t0
@@ -145,6 +174,14 @@ def main():
         print(f"regroups: {eng.regroups} (deferred {eng.deferrals}), final "
               f"prefill rows {eng.prefill_rows}/{eng.cfg.n_rows}, "
               f"decode slots {eng.decode_slots}")
+    if faulted:
+        finished = {r.uid for r in eng.finished}
+        rec = eng.recoveries
+        print(f"faults: {len(eng.fault_log)} events, recoveries "
+              f"staged={rec['staged']} restored={rec['restored']} "
+              f"retried={rec['retried']}, regrows={eng.regrows}, "
+              f"rows {eng.n_rows}/{eng.cfg.n_rows}, "
+              f"lost {n_requests - len(finished)}")
     if sc is not None:
         snap = eng.ledger.snapshot()
         print(f"fleet: ttft p50/p99 = {snap['ttft_p50']:.0f}/{snap['ttft_p99']:.0f} "

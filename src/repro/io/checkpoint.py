@@ -9,6 +9,8 @@ Layout on disk:
 Guarantees:
   * atomic: written into step_XXXX.tmp then renamed; COMMIT written last.
     A crash mid-write leaves no COMMIT -> the loader ignores the dir.
+    Leaves, manifest and marker are fsynced before each rename (and the
+    parent dir after), so a power cut never leaves a torn "latest" step.
   * mesh-agnostic: leaves are stored unsharded (gathered); `restore`
     re-device_puts onto any target sharding — this is what makes
     elastic re-scaling possible (launch/elastic.py).
@@ -19,8 +21,10 @@ Guarantees:
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
+import re
 import shutil
 import threading
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -39,6 +43,28 @@ def _leaf_paths(tree: Any) -> list[str]:
     return paths
 
 
+def _fsync_dir(path: str) -> None:
+    # directory fsync makes the rename itself durable; not every
+    # filesystem supports opening a directory, so failures are benign
+    with contextlib.suppress(OSError):
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+
+def _durable_write(path: str, data: str) -> None:
+    """fsync-then-rename file write: readers see old bytes or new bytes,
+    never a torn file — even across a crash mid-write."""
+    tmp = path + ".part"
+    with open(tmp, "w") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
 def save(directory: str, step: int, tree: Any) -> str:
     """Synchronous atomic checkpoint write. Returns the final dir."""
     final = os.path.join(directory, f"step_{step:08d}")
@@ -54,15 +80,21 @@ def save(directory: str, step: int, tree: Any) -> str:
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
     }
     for i, leaf in enumerate(leaves):
-        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), np.asarray(leaf))
-    with open(os.path.join(tmp, "treedef.json"), "w") as f:
-        json.dump(meta, f)
+        with open(os.path.join(tmp, f"leaf_{i:05d}.npy"), "wb") as f:
+            np.save(f, np.asarray(leaf))
+            f.flush()
+            os.fsync(f.fileno())
+    _durable_write(os.path.join(tmp, "treedef.json"), json.dumps(meta))
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(directory)
     # commit marker written after the rename: dir contents are complete
-    with open(os.path.join(final, COMMIT), "w") as f:
-        f.write("ok\n")
+    # and durable, so a crash anywhere above leaves no COMMIT and the
+    # loader ignores the dir — `latest_step` never picks up a torn step
+    _durable_write(os.path.join(final, COMMIT), "ok\n")
+    _fsync_dir(final)
     return final
 
 
@@ -111,6 +143,33 @@ def restore(directory: str, step: int, like: Any, shardings: Any | None = None) 
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def restore_tree(directory: str, step: int) -> Any:
+    """Load a checkpoint with no shape prior: rebuild a nested dict from
+    the recorded key paths alone.
+
+    `restore` needs a shape-matched `like` tree, which a cold restart
+    cannot always produce (e.g. serving-state snapshots whose array
+    shapes depend on what was in flight at save time). Works for
+    checkpoints whose tree is dicts-of-dicts with string keys — exactly
+    what `serve/checkpoint_bridge.py` writes. Leaves come back as host
+    numpy arrays (0-d arrays for scalars)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    if not os.path.exists(os.path.join(d, COMMIT)):
+        raise FileNotFoundError(f"no committed checkpoint at {d}")
+    with open(os.path.join(d, "treedef.json")) as f:
+        meta = json.load(f)
+    out: dict = {}
+    for i, path in enumerate(meta["paths"]):
+        keys = re.findall(r"\['([^']*)'\]", path)
+        if not keys:
+            raise ValueError(f"leaf {i}: non-dict key path {path!r}")
+        node = out
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+    return out
+
+
 def retain(directory: str, keep: int) -> None:
     if not os.path.isdir(directory):
         return
@@ -137,13 +196,28 @@ class AsyncCheckpointer:
         self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
         self._last: Future | None = None
         self._lock = threading.Lock()
+        self._closed = False
 
     def save(self, step: int, tree: Any) -> None:
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         with self._lock:
-            if self._last is not None:
-                self._last.result()  # backpressure: one in flight
+            if self._closed:
+                raise RuntimeError("save() on a closed AsyncCheckpointer")
+            self._drain_last()  # backpressure: one in flight
             self._last = self._pool.submit(self._write, step, host_tree)
+
+    def _drain_last(self) -> None:
+        # a worker-thread failure would otherwise vanish: re-raise it on
+        # the caller's thread at the next save()/wait()
+        if self._last is None:
+            return
+        last, self._last = self._last, None
+        try:
+            last.result()
+        except Exception as exc:
+            raise RuntimeError(
+                f"async checkpoint write to {self.directory} failed"
+            ) from exc
 
     def _write(self, step: int, host_tree: Any) -> None:
         save(self.directory, step, host_tree)
@@ -151,9 +225,12 @@ class AsyncCheckpointer:
 
     def wait(self) -> None:
         with self._lock:
-            if self._last is not None:
-                self._last.result()
+            self._drain_last()
 
     def close(self) -> None:
-        self.wait()
-        self._pool.shutdown()
+        try:
+            self.wait()
+        finally:
+            with self._lock:
+                self._closed = True
+            self._pool.shutdown()

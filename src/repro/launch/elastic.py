@@ -17,6 +17,7 @@ Two paths:
 from __future__ import annotations
 
 import math
+import time
 from typing import Any, Callable
 
 import jax
@@ -42,11 +43,21 @@ def restore_for_mesh(ckpt_dir: str, step: int, like_state: dict, mesh) -> dict:
     return restored
 
 
-def healthy_mesh(preferred_shape: tuple[int, ...], axis_names: tuple[str, ...]):
+def healthy_mesh(
+    preferred_shape: tuple[int, ...],
+    axis_names: tuple[str, ...],
+    n_devices: int | None = None,
+):
     """Build the largest mesh the surviving devices allow: shrink the
     data axis (axis 0) until the device budget fits — model parallelism
-    is topology-bound, so the other axes are never shrunk."""
+    is topology-bound, so the other axes are never shrunk.
+
+    ``n_devices`` caps the budget below the physically visible device
+    count (the fault path: a prober reports fewer healthy rows than
+    `jax.devices()` still lists)."""
     n = len(jax.devices())
+    if n_devices is not None:
+        n = min(n, int(n_devices))
     shape = list(preferred_shape)
     total = math.prod(shape)
     while total > n and shape[0] > 1:
@@ -55,6 +66,41 @@ def healthy_mesh(preferred_shape: tuple[int, ...], axis_names: tuple[str, ...]):
     if total > n:
         raise RuntimeError(f"not enough devices: need {total}, have {n}")
     return compat.make_mesh(tuple(shape), axis_names)
+
+
+def healthy_mesh_with_backoff(
+    preferred_shape: tuple[int, ...],
+    axis_names: tuple[str, ...],
+    *,
+    prober: Callable[[], int] | None = None,
+    attempts: int = 4,
+    base_delay: float = 0.05,
+    sleep: Callable[[float], None] = time.sleep,
+    on_retry: Callable[[int, float], None] | None = None,
+):
+    """`healthy_mesh` behind a bounded exponential backoff probe.
+
+    A transient slow node looks exactly like a lost one to a single
+    probe; declaring the shrink immediately triggers a full resharding
+    storm for nothing. So: ask ``prober`` (-> healthy device count,
+    default `len(jax.devices())`) up to ``attempts`` times, doubling the
+    delay from ``base_delay`` between probes, and only build the
+    shrunken mesh once the budget still falls short after the last
+    probe. ``sleep``/``on_retry`` are injectable for tests."""
+    if attempts < 1:
+        raise ValueError(f"attempts must be >= 1, got {attempts}")
+    probe = prober if prober is not None else (lambda: len(jax.devices()))
+    need = math.prod(preferred_shape)
+    n = probe()
+    for attempt in range(1, attempts):
+        if n >= need:
+            break
+        delay = base_delay * (2 ** (attempt - 1))
+        if on_retry is not None:
+            on_retry(attempt, delay)
+        sleep(delay)
+        n = probe()
+    return healthy_mesh(preferred_shape, axis_names, n_devices=n)
 
 
 def reshard_state(
@@ -81,18 +127,19 @@ def reshard_state(
     the ragged tail) — the natural move for masked item buffers
     (documents, stream chunks). Leaves of rank 1 have no item axis to
     re-deal, so they require an explicit ``repartition``.
+
+    The two grouped meshes may differ in axis size (the fault path: a
+    shrink onto a `healthy_mesh` with fewer rows, or the re-grow back).
+    Row leaves are recognized against the OLD axis size and re-placed at
+    the NEW one; pass-through leaves must already fit the new mesh.
     """
-    if old_gmesh.axis_size != new_gmesh.axis_size:
-        raise ValueError(
-            f"row partitions live on the same mesh axis: "
-            f"{old_gmesh.axis_size} != {new_gmesh.axis_size}"
-        )
-    n = old_gmesh.axis_size
+    n_old = old_gmesh.axis_size
+    n_new = new_gmesh.axis_size
     old_rows = old_gmesh.compute.size
     new_rows = new_gmesh.compute.size
 
     def is_row_leaf(x) -> bool:
-        return getattr(x, "ndim", 0) >= 1 and x.shape[0] == n
+        return getattr(x, "ndim", 0) >= 1 and x.shape[0] == n_old
 
     leaves, treedef = jax.tree.flatten(state)
     row_mask = [is_row_leaf(leaf) for leaf in leaves]
@@ -133,7 +180,7 @@ def reshard_state(
             raise ValueError(
                 f"repartition returned {rows.shape[0]} rows, expected {new_rows}"
             )
-        pad = n - new_rows
+        pad = n_new - new_rows
         if pad:
             rows = np.concatenate(
                 [rows, np.zeros((pad,) + rows.shape[1:], rows.dtype)]

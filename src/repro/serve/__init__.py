@@ -15,6 +15,12 @@ The curated surface (PR 6, ContinuousServe):
     continuous batching) and ``ServeConfig.kv`` (a `KVSpec`: dense, or
     paged blocks with the cross-tenant prefix cache).
   * drive traffic: `scenario(name)` / `replay(engine, sc, vocab)`.
+  * survive faults (PR 8, FaultFleet): a `FaultSchedule` of seeded
+    device-loss / preemption / slow-node events (or `replay`'s
+    ``fail_at``/``preempt_at`` hooks) drives `FleetEngine`'s recovery
+    path — mesh shrink, in-memory KV migration or
+    `ServingCheckpointer` restore, re-admission at original arrival
+    ticks — zero requests lost.
 
 Migration note: `run_until_drained` is now `drain` (old name kept as an
 alias); engine KV state lives behind ``engine.kv`` (`serve/kvstore.py`)
@@ -22,8 +28,10 @@ with ``engine.cache`` kept as a dense read view.
 """
 
 from repro.serve.api import KVSpec, ServeConfig, ServingEngine, make_engine
+from repro.serve.checkpoint_bridge import ServingCheckpointer
 from repro.serve.disagg import DisaggConfig, DisaggEngine
 from repro.serve.engine import Engine, EngineConfig, PrefillRunner, Request
+from repro.serve.faults import FailureMonitor, FaultEvent, FaultSchedule
 from repro.serve.fleet import (
     FleetConfig,
     FleetEngine,
@@ -48,6 +56,9 @@ __all__ = [
     "DisaggEngine",
     "Engine",
     "EngineConfig",
+    "FailureMonitor",
+    "FaultEvent",
+    "FaultSchedule",
     "FleetConfig",
     "FleetEngine",
     "FleetLedger",
@@ -59,6 +70,7 @@ __all__ = [
     "Request",
     "SLOClass",
     "ServeConfig",
+    "ServingCheckpointer",
     "ServingEngine",
     "TenantSpec",
     "TrafficScenario",

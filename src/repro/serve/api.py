@@ -120,8 +120,10 @@ class ServingEngine(Protocol):
         """One engine tick: admit, decode, retire."""
         ...
 
-    def drain(self, max_steps: int = 10_000) -> None:
-        """Step until idle (or give up after ``max_steps``)."""
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Step until idle; return the steps taken. Raises RuntimeError
+        if the engine is still not idle after ``max_steps`` — a stalled
+        drain means stuck in-flight work, never a silent return."""
         ...
 
     def idle(self) -> bool:

@@ -1,0 +1,455 @@
+"""Serving-state checkpoints: KV pool + block tables + request queues.
+
+When a fault kills KV that only lived on the dead rows, in-memory
+migration (`fleet.reshard_serving_state`) has nothing to migrate — the
+fallback the paper's decoupling strategy demands is a periodic snapshot
+of the *serving* state, not just the params: the KV store (dense cache
+or paged pool + tables + refcounts + prefix-cache entries), the decode
+token row, and every request the engine knows about (in-slot with its
+generated tokens so far, or queued with its original arrival tick).
+
+`ServingCheckpointer` wires this through `io.checkpoint.AsyncCheckpointer`
+on a configurable tick cadence; `FleetEngine` calls `maybe_save` every
+step and `slot_entry` per orphan on the checkpoint-recovery path.
+Restores replay decode from the last checkpointed position: a recovered
+request keeps its checkpointed ``out_tokens`` and continues decoding
+from its saved cursor, and the recovery stall (ticks between the
+snapshot and the fault) is charged to the request's original
+``submitted_tick`` — the ledger sees the failure, zero requests are
+lost.
+
+Snapshot encoding notes (everything must survive
+`jax.tree.map(np.asarray)` + ``np.save`` without pickle):
+
+  * all tree keys are strings (`io.checkpoint.restore_tree` contract);
+  * bfloat16 leaves are widened to float32 for storage with their dtype
+    name alongside (`_pack`/`_unpack`) — widening is exact, so the
+    round-trip is bitwise;
+  * prefix-cache entries are stored in LRU order with their exact key
+    token bytes (recovered via ``np.frombuffer``), and restore does NOT
+    re-ref their blocks — ``ref``/``_pref`` are restored verbatim and
+    the free list is rebuilt as every unreferenced block id.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.io import checkpoint as ckpt_io
+from repro.serve.engine import Request
+from repro.serve.kvstore import _FullEntry
+
+
+# ---------------------------------------------------------------------------
+# leaf helpers
+# ---------------------------------------------------------------------------
+
+
+def _pack(x) -> dict:
+    """Host-storable array + its original dtype name (bf16 widened)."""
+    x = np.asarray(x)
+    name = x.dtype.name
+    if name == "bfloat16":
+        x = x.astype(np.float32)
+    return {"data": x, "dtype": np.asarray(name)}
+
+
+def _unpack(d: dict, *, device: bool = False):
+    x = np.asarray(d["data"])
+    name = str(np.asarray(d["dtype"]))
+    if device:
+        return jnp.asarray(x).astype(name)
+    if x.dtype.name != name:
+        x = x.astype(np.dtype(name))
+    return x
+
+
+def _flat(arrays, dtype) -> tuple[np.ndarray, np.ndarray]:
+    """Ragged list of 1-d arrays -> (flat, offsets)."""
+    offs = np.zeros(len(arrays) + 1, np.int64)
+    for i, a in enumerate(arrays):
+        offs[i + 1] = offs[i] + len(a)
+    flat = (np.concatenate([np.asarray(a, dtype) for a in arrays])
+            if arrays and offs[-1] else np.zeros(0, dtype))
+    return flat, offs
+
+
+def _unflat(flat, offs, i) -> np.ndarray:
+    flat = np.asarray(flat)
+    offs = np.asarray(offs, np.int64)
+    return flat[offs[i]: offs[i + 1]]
+
+
+# ---------------------------------------------------------------------------
+# KV store snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+def _snapshot_prefix(pc) -> dict:
+    """`PrefixCache` entries in LRU order (kinds + exact key tokens +
+    block ids; full entries carry their host tails/logits)."""
+    kinds, toks, blks, full = [], [], [], {}
+    for i, (key, entry) in enumerate(pc.entries.items()):
+        kind, tok_bytes = key
+        kinds.append(0 if kind == "chain" else 1)
+        toks.append(np.frombuffer(tok_bytes, np.int64))
+        if isinstance(entry, _FullEntry):
+            blks.append(np.asarray(entry.blocks, np.int64))
+            full[str(i)] = {
+                "length": np.int64(entry.length),
+                "first": np.int64(entry.first),
+                "logits": _pack(entry.logits),
+                "k_tail": _pack(entry.k_tail),
+                "v_tail": _pack(entry.v_tail),
+            }
+        else:
+            blks.append(np.asarray(entry, np.int64))
+    tok_flat, tok_off = _flat(toks, np.int64)
+    blk_flat, blk_off = _flat(blks, np.int64)
+    return {
+        "kinds": np.asarray(kinds, np.int64),
+        "tok_flat": tok_flat, "tok_off": tok_off,
+        "blk_flat": blk_flat, "blk_off": blk_off,
+        "full": full,
+        "hits": np.int64(pc.hits),
+        "misses": np.int64(pc.misses),
+        "hit_tokens": np.int64(pc.hit_tokens),
+        "capacity": np.int64(pc.capacity),
+    }
+
+
+def _restore_prefix(pc, sub: dict) -> None:
+    kinds = np.asarray(sub["kinds"], np.int64)
+    full = sub.get("full", {})  # an empty dict leaves no treedef paths
+    pc.entries.clear()
+    for i in range(len(kinds)):
+        tokens = np.ascontiguousarray(_unflat(sub["tok_flat"], sub["tok_off"], i))
+        blocks = tuple(int(b) for b in _unflat(sub["blk_flat"], sub["blk_off"], i))
+        if int(kinds[i]) == 0:
+            pc.entries[("chain", tokens.tobytes())] = blocks
+        else:
+            f = full[str(i)]
+            pc.entries[("full", tokens.tobytes())] = _FullEntry(
+                length=int(f["length"]),
+                blocks=blocks,
+                k_tail=_unpack(f["k_tail"]),
+                v_tail=_unpack(f["v_tail"]),
+                logits=_unpack(f["logits"]),
+                first=int(f["first"]),
+            )
+    pc.hits = int(sub["hits"])
+    pc.misses = int(sub["misses"])
+    pc.hit_tokens = int(sub["hit_tokens"])
+    pc.capacity = int(sub["capacity"])
+
+
+def snapshot_kvstore(store) -> dict:
+    """Host snapshot of a `DenseKVStore` or `PagedKVStore` — bitwise
+    round-trippable through `restore_kvstore` (asserted by
+    tests/test_faults.py), including paged refcounts, the free set,
+    and prefix-cache entry order."""
+    if store.kind == "dense":
+        return {
+            "kind": np.int64(0),
+            "lens": store.lens.copy(),
+            "cache": {k: _pack(v) for k, v in store.cache.items()},
+        }
+    out = {
+        "kind": np.int64(1),
+        "k_pool": _pack(store.k_pool),
+        "v_pool": _pack(store.v_pool),
+        "tables": store.tables.copy(),
+        "lens": store.lens.copy(),
+        "ref": store.ref.copy(),
+        "pref": store._pref.copy(),
+        "peak": np.int64(store.peak_blocks),
+        "cache_dtype": np.asarray(np.dtype(store._cache_dtype).name),
+    }
+    if store.quantized:
+        out["k_scale"] = np.asarray(store.k_scale)
+        out["v_scale"] = np.asarray(store.v_scale)
+    if store.prefix is not None:
+        out["prefix"] = _snapshot_prefix(store.prefix)
+    return out
+
+
+def restore_kvstore(store, snap: dict) -> None:
+    """Restore `snapshot_kvstore` output into a same-geometry store."""
+    kind = int(np.asarray(snap["kind"]))
+    if kind == 0:
+        if store.kind != "dense":
+            raise ValueError("dense snapshot into a non-dense store")
+        cache = {k: _unpack(v, device=True) for k, v in snap["cache"].items()}
+        if set(cache) != set(store.cache):
+            raise ValueError(
+                f"cache leaves {sorted(cache)} != {sorted(store.cache)}"
+            )
+        store.cache = cache
+        store.lens = np.asarray(snap["lens"], np.int64).copy()
+        return
+    if store.kind != "paged":
+        raise ValueError("paged snapshot into a non-paged store")
+    tables = np.asarray(snap["tables"], np.int32)
+    if tables.shape != store.tables.shape:
+        raise ValueError(
+            f"snapshot tables {tables.shape} != store {store.tables.shape}"
+        )
+    ref = np.asarray(snap["ref"], np.int64)
+    if len(ref) != store.n_blocks:
+        raise ValueError(f"snapshot has {len(ref)} blocks, store {store.n_blocks}")
+    store.k_pool = _unpack(snap["k_pool"], device=True)
+    store.v_pool = _unpack(snap["v_pool"], device=True)
+    if store.quantized:
+        store.k_scale = jnp.asarray(np.asarray(snap["k_scale"]))
+        store.v_scale = jnp.asarray(np.asarray(snap["v_scale"]))
+    store.tables = tables.copy()
+    store.lens = np.asarray(snap["lens"], np.int64).copy()
+    store.ref = ref.copy()
+    store._pref = np.asarray(snap["pref"], np.int64).copy()
+    store.peak_blocks = int(snap["peak"])
+    store._free = [b for b in range(1, store.n_blocks) if store.ref[b] == 0]
+    heapq.heapify(store._free)
+    if store.prefix is not None:
+        if "prefix" in snap:
+            _restore_prefix(store.prefix, snap["prefix"])
+        else:
+            store.prefix.entries.clear()
+
+
+# ---------------------------------------------------------------------------
+# engine snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+def _pack_requests(entries) -> dict:
+    """``entries`` is (req, state, slot): state 0 = occupying a decode
+    slot (resumable from its KV), 1 = queued/in-prefill/in-handoff (a
+    cold restore re-prefills these from scratch)."""
+    reqs = [e[0] for e in entries]
+    return {
+        "uid": np.asarray([r.uid for r in reqs], np.int64),
+        "state": np.asarray([e[1] for e in entries], np.int64),
+        "slot": np.asarray([e[2] for e in entries], np.int64),
+        "submitted": np.asarray([r.submitted_tick for r in reqs], np.int64),
+        "first_tok": np.asarray([r.first_token_tick for r in reqs], np.int64),
+        "max_new": np.asarray([r.max_new_tokens for r in reqs], np.int64),
+        "tenants": np.asarray([r.tenant for r in reqs])
+        if reqs else np.zeros(0, "<U1"),
+        **dict(zip(("prompt_flat", "prompt_off"),
+                   _flat([r.prompt for r in reqs], np.int64))),
+        **dict(zip(("out_flat", "out_off"),
+                   _flat([r.out_tokens for r in reqs], np.int64))),
+    }
+
+
+def _unpack_requests(tab: dict) -> list[tuple[Request, int, int]]:
+    uids = np.asarray(tab["uid"], np.int64)
+    tenants = np.asarray(tab["tenants"])
+    out = []
+    for i in range(len(uids)):
+        req = Request(
+            uid=int(uids[i]),
+            prompt=np.ascontiguousarray(
+                _unflat(tab["prompt_flat"], tab["prompt_off"], i), np.int32
+            ),
+            max_new_tokens=int(tab["max_new"][i]),
+            out_tokens=[int(t) for t in _unflat(tab["out_flat"], tab["out_off"], i)],
+            submitted_tick=int(tab["submitted"][i]),
+            first_token_tick=int(tab["first_tok"][i]),
+            tenant=str(tenants[i]),
+        )
+        out.append((req, int(tab["state"][i]), int(tab["slot"][i])))
+    return out
+
+
+def snapshot_engine(eng) -> dict:
+    """Snapshot a serving engine (`DisaggEngine`, or anything with the
+    same slots/kv/tokens/sched surface): KV store + decode token row +
+    every live request. Ledger/stats are derived analytics and are NOT
+    snapshotted; WFQ virtual time resets on a cold restore (documented
+    scheduler contract)."""
+    entries = [
+        (r, 0, s) for s, r in enumerate(eng.slots) if r is not None
+    ]
+    queued = list(eng.sched.queued_requests())
+    prefill = getattr(eng, "prefill_sched", None)
+    if prefill is not None:
+        queued += [r for row in prefill.rows for r in row]
+    queued += [item[0] for item in getattr(eng, "handoff", ())]
+    queued += [item[0] for item in getattr(eng, "restores", ())]
+    entries += [(r, 1, -1) for r in queued]
+    return {
+        "tick": np.int64(eng.tick),
+        "tokens": np.asarray(eng.tokens, np.int32),
+        "kv": snapshot_kvstore(eng.kv),
+        "requests": _pack_requests(entries),
+    }
+
+
+def restore_engine(eng, snap: dict):
+    """Restore `snapshot_engine` output into a FRESH same-config engine.
+
+    In-slot requests land back in their slots with the KV pool restored
+    bitwise underneath them and their decode-input token re-staged;
+    queued requests re-enter the scheduler with their ORIGINAL
+    ``submitted_tick`` (out_tokens cleared — they re-prefill, and greedy
+    decode regenerates the same stream), so the ledger charges the full
+    stall from arrival to eventual finish against the SLOs.
+    """
+    tokens = np.asarray(snap["tokens"], np.int32)
+    if tokens.shape[0] != len(eng.slots):
+        raise ValueError(
+            f"snapshot has {tokens.shape[0]} slots, engine {len(eng.slots)}"
+        )
+    restore_kvstore(eng.kv, snap["kv"])
+    eng.tokens = jnp.asarray(tokens)
+    eng.tick = int(snap["tick"])
+    for req, state, slot in _unpack_requests(snap["requests"]):
+        req.done = False
+        if state == 0:
+            if eng.slots[slot] is not None:
+                raise ValueError(f"slot {slot} already occupied on restore")
+            eng.slots[slot] = req
+        else:
+            req.out_tokens.clear()
+            req.first_token_tick = -1
+            eng.sched.submit(req, now=max(req.submitted_tick, 0))
+    return eng
+
+
+def slot_entry_from_snapshot(snap: dict, uid: int):
+    """Rebuild one in-slot request's resume tuple ``(cache1, length,
+    next_token, out_tokens)`` from an engine snapshot — the payload
+    `DisaggEngine.restores` re-admits. Returns None when ``uid`` was
+    not occupying a slot at snapshot time (it re-enters via
+    drop-and-retry instead). int8 pools dequantize here and re-quantize
+    on admit: tolerance-matched, not bitwise (the documented int8
+    restore contract)."""
+    tab = snap["requests"]
+    hits = np.nonzero(
+        (np.asarray(tab["uid"], np.int64) == int(uid))
+        & (np.asarray(tab["state"], np.int64) == 0)
+    )[0]
+    if len(hits) == 0:
+        return None
+    i = int(hits[0])
+    slot = int(np.asarray(tab["slot"])[i])
+    kv = snap["kv"]
+    length = int(np.asarray(kv["lens"])[slot])
+    next_tok = int(np.asarray(snap["tokens"])[slot, 0])
+    out_tokens = [int(t) for t in _unflat(tab["out_flat"], tab["out_off"], i)]
+    if int(np.asarray(kv["kind"])) == 0:
+        k = _unpack(kv["cache"]["k"])
+        v = _unpack(kv["cache"]["v"])
+        cache1 = {
+            "k": jnp.asarray(k[:, slot: slot + 1]),
+            "v": jnp.asarray(v[:, slot: slot + 1]),
+            "pos": jnp.int32(length),
+        }
+        return cache1, length, next_tok, out_tokens
+    dt = np.dtype(str(np.asarray(kv["cache_dtype"])))
+    k_pool = _unpack(kv["k_pool"])
+    v_pool = _unpack(kv["v_pool"])
+    tables = np.asarray(kv["tables"], np.int32)
+    ln, _, bs, dk = k_pool.shape
+    max_len = tables.shape[1] * bs
+    k = np.zeros((ln, 1, max_len, dk), dt)
+    v = np.zeros((ln, 1, max_len, v_pool.shape[-1]), dt)
+    for j, b in enumerate(tables[slot]):
+        b = int(b)
+        if b <= 0:
+            continue
+        bk, bv = k_pool[:, b], v_pool[:, b]
+        if "k_scale" in kv:  # int8 pool: dequantize with the block scales
+            bk = (bk.astype(np.float32)
+                  * np.asarray(kv["k_scale"])[:, b][..., None]).astype(dt)
+            bv = (bv.astype(np.float32)
+                  * np.asarray(kv["v_scale"])[:, b][..., None]).astype(dt)
+        k[:, 0, j * bs: (j + 1) * bs] = bk.astype(dt)
+        v[:, 0, j * bs: (j + 1) * bs] = bv.astype(dt)
+    k[:, 0, length:] = 0  # zero-extended past the cursor, like the dense view
+    v[:, 0, length:] = 0
+    cache1 = {"k": jnp.asarray(k), "v": jnp.asarray(v), "pos": jnp.int32(length)}
+    return cache1, length, next_tok, out_tokens
+
+
+# ---------------------------------------------------------------------------
+# the cadence wrapper FleetEngine drives
+# ---------------------------------------------------------------------------
+
+
+class ServingCheckpointer:
+    """Periodic engine snapshots through `AsyncCheckpointer`.
+
+    ``cadence`` is in engine ticks: `maybe_save(eng, tick)` snapshots
+    whenever ``tick % cadence == 0`` (the snapshot is taken
+    synchronously on the host — cheap next to a decode step — and
+    written by the background thread). `slot_entry` serves the
+    checkpoint-recovery path per orphaned uid, caching the loaded
+    snapshot per step so a multi-row fault doesn't re-read the
+    directory once per orphan.
+    """
+
+    def __init__(self, directory: str, *, cadence: int = 0, keep: int = 3):
+        self.directory = directory
+        self.cadence = int(cadence)
+        self._writer = ckpt_io.AsyncCheckpointer(directory, keep=keep)
+        self.last_step = -1
+        self.saves = 0
+        self._loaded: tuple[int, Any] | None = None
+
+    def maybe_save(self, eng, tick: int) -> bool:
+        if self.cadence <= 0 or int(tick) % self.cadence != 0:
+            return False
+        self.save(eng, tick)
+        return True
+
+    def save(self, eng, tick: int) -> None:
+        self._writer.save(int(tick), snapshot_engine(eng))
+        self.last_step = int(tick)
+        self.saves += 1
+
+    def wait(self) -> None:
+        """Block until the last save commits (re-raising write errors)."""
+        self._writer.wait()
+
+    def load_latest(self):
+        """The most recent COMMITted snapshot tree, or None."""
+        self._writer.wait()
+        step = ckpt_io.latest_step(self.directory)
+        if step is None:
+            return None
+        if self._loaded is None or self._loaded[0] != step:
+            self._loaded = (step, ckpt_io.restore_tree(self.directory, step))
+        return self._loaded[1]
+
+    def slot_entry(self, uid: int):
+        snap = self.load_latest()
+        if snap is None:
+            return None
+        return slot_entry_from_snapshot(snap, uid)
+
+    def restore_into(self, eng) -> bool:
+        """Cold restore: load the latest snapshot into a fresh engine.
+        Returns False when the directory holds no committed snapshot."""
+        snap = self.load_latest()
+        if snap is None:
+            return False
+        restore_engine(eng, snap)
+        return True
+
+    def close(self) -> None:
+        self._writer.close()
+
+
+__all__ = [
+    "ServingCheckpointer",
+    "restore_engine",
+    "restore_kvstore",
+    "slot_entry_from_snapshot",
+    "snapshot_engine",
+    "snapshot_kvstore",
+]

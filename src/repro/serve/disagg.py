@@ -174,6 +174,11 @@ class DisaggEngine:
         # — cache1 None marks a whole-prompt prefix-cache hit that
         # skipped prefill and re-resolves at refill time
         self.handoff: deque[tuple] = deque()
+        # restore entries: (req, cache1, length, next_token) — KV staged
+        # off a dying row (preemption notice) or replayed from a
+        # checkpoint; installed ahead of fresh handoffs since their
+        # decode position is already paid for (serve/fleet.py recovery)
+        self.restores: deque[tuple] = deque()
         self.slots: list[Request | None] = [None] * cfg.decode_slots
         self.finished: list[Request] = []
         self._prefill = PrefillRunner(model, params, max_len=cfg.max_len)
@@ -189,8 +194,9 @@ class DisaggEngine:
         self.tick = 0
         # rejected submits live on the scheduler (sched.rejected)
         self.stats = {"steps": 0, "tokens_out": 0, "prefills": 0, "handoffs": 0,
-                      "prefix_hit_tokens": 0, "prefill_skips": 0}
+                      "prefix_hit_tokens": 0, "prefill_skips": 0, "restores": 0}
         self.last_tick: dict = {}
+        self._tick_restores = 0
 
     @property
     def cache(self) -> dict:
@@ -206,9 +212,10 @@ class DisaggEngine:
 
     def _inflight(self) -> list[Request]:
         """Requests admitted past the fleet queue but not yet in a
-        decode slot (prefill rows + handoff)."""
+        decode slot (prefill rows + handoff + staged restores)."""
         out = [req for row in self.prefill_sched.rows for req in row]
         out.extend(item[0] for item in self.handoff)
+        out.extend(item[0] for item in self.restores)
         return out
 
     def _inflight_prompt_tokens(self) -> int:
@@ -267,7 +274,20 @@ class DisaggEngine:
         n = 0
         continuous = self.cfg.mode == "continuous"
         for slot, occupant in enumerate(self.slots):
-            if occupant is not None or not self.handoff:
+            if occupant is not None or not (self.restores or self.handoff):
+                continue
+            if self.restores:
+                # a staged/checkpointed slot resumes mid-stream: its KV
+                # is installed verbatim (no prefix registration — the
+                # cache spans decoded tokens, not just the prompt) and
+                # decode continues from the saved next token
+                req, cache1, length, next_tok = self.restores.popleft()
+                self.slots[slot] = req
+                self.kv.admit(slot, cache1, int(length))
+                self.tokens = self.tokens.at[slot, 0].set(int(next_tok))
+                self.stats["restores"] += 1
+                self._tick_restores += 1
+                n += 1
                 continue
             req, cache1, first, logits = self.handoff.popleft()
             self.slots[slot] = req
@@ -300,12 +320,14 @@ class DisaggEngine:
 
     def step(self) -> None:
         continuous = self.cfg.mode == "continuous"
+        self._tick_restores = 0
         work = self._prefill_tick()
         handoffs = self._refill_slots()
         self.tick += 1
         self.last_tick = {
             "prefill_tokens_per_row": work,
             "handoffs": handoffs,
+            "restores": self._tick_restores,
             "decode_batch": sum(s is not None for s in self.slots),
             # per-slot occupancy at decode time: the closed loop's
             # per-decode-row work signal (serve/fleet.py)
@@ -351,6 +373,7 @@ class DisaggEngine:
             # same-tick insertion: a prefill finished this tick takes a
             # slot retired this tick instead of waiting one boundary
             self.last_tick["handoffs"] += self._refill_slots()
+            self.last_tick["restores"] = self._tick_restores
             self.last_tick["slots_active"] = [s is not None for s in self.slots]
             self.last_tick["kv"] = self.kv.stats
         self.stats["steps"] += 1
@@ -360,8 +383,38 @@ class DisaggEngine:
             self.sched.pending() == 0
             and self.prefill_sched.pending() == 0
             and not self.handoff
+            and not self.restores
             and all(s is None for s in self.slots)
         )
+
+    # -- fault actuators (the recovery path's hooks, serve/fleet.py) -------
+    def stage_out(self, slot: int) -> tuple:
+        """Evacuate an occupied slot to host-side staging (a preemption
+        notice arrived for its row): returns the restore entry
+        ``(req, cache1, length, next_token)`` and frees the slot. The
+        KV leaves as a batch-1 dense cache (`KVStore.slot_cache`), so
+        re-admission is the exact inverse — in-memory migration with
+        zero recompute. int8 pools dequantize on the way out and
+        re-quantize on re-admission (tolerance-matched, not bitwise)."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty")
+        entry = (req, self.kv.slot_cache(slot), int(self.kv.lens[slot]),
+                 int(self.tokens[slot, 0]))
+        self.slots[slot] = None
+        self.kv.free(slot)
+        return entry
+
+    def drop_slot(self, slot: int) -> Request:
+        """Abandon an occupied slot (its row died without notice): the
+        KV is gone with the row; the orphaned request is returned for
+        re-admission via retry or checkpoint restore."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty")
+        self.slots[slot] = None
+        self.kv.free(slot)
+        return req
 
     # -- regroup actuator (the closed loop's act leg, serve/fleet.py) ------
     def resize(self, n_prefill_rows: int, decode_slots: int) -> None:
@@ -409,11 +462,23 @@ class DisaggEngine:
             self.cfg, n_prefill_rows=n_prefill_rows, decode_slots=decode_slots
         )
 
-    def drain(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Step until idle; returns the steps taken. Hitting the cap
+        with work still queued raises — a recovery deadlock must be
+        loud, not a silently-truncated benchmark."""
+        for n in range(max_steps):
             if self.idle():
-                return
+                return n
             self.step()
+        if not self.idle():
+            raise RuntimeError(
+                f"engine stalled after {max_steps} steps: "
+                f"queue={self.sched.pending()} "
+                f"prefill={self.prefill_sched.pending()} "
+                f"handoff={len(self.handoff)} restores={len(self.restores)} "
+                f"slots={sum(s is not None for s in self.slots)}"
+            )
+        return max_steps
 
     # pre-PR-6 name, kept as an alias for existing call sites
     run_until_drained = drain
@@ -421,8 +486,10 @@ class DisaggEngine:
     def workload_sample(self) -> dict:
         return {
             "active_slots": sum(s is not None for s in self.slots),
-            "queue_depth": self.sched.pending() + self.prefill_sched.pending(),
+            "queue_depth": self.sched.pending() + self.prefill_sched.pending()
+            + len(self.restores),
             "handoff_depth": len(self.handoff),
+            "restore_depth": len(self.restores),
             "tokens_out": self.stats["tokens_out"],
         }
 

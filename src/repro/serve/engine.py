@@ -384,11 +384,21 @@ class Engine:
                 freed.append(i)
         return freed
 
-    def drain(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Step until idle; returns the steps taken. Hitting the cap
+        with work still queued raises — a scheduling deadlock must be
+        loud, not a silently-truncated benchmark."""
+        for n in range(max_steps):
             if self.idle():
-                return
+                return n
             self.step()
+        if not self.idle():
+            raise RuntimeError(
+                f"engine stalled after {max_steps} steps: "
+                f"queue={self.sched.pending()} "
+                f"slots={sum(s is not None for s in self.slots)}"
+            )
+        return max_steps
 
     # pre-PR-6 name, kept as an alias for existing call sites
     run_until_drained = drain

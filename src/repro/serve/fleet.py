@@ -44,9 +44,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.adapt import AdaptPolicy, ReplanController, StageTrait
 from repro.core.groups import GroupedMesh
-from repro.launch.elastic import repack_block_pool, reshard_state
+from repro.launch.elastic import (
+    healthy_mesh_with_backoff,
+    repack_block_pool,
+    reshard_state,
+)
 from repro.serve.api import ServeConfig
 from repro.serve.disagg import PREFILL, DisaggConfig, DisaggEngine, serving_graph
+from repro.serve.faults import FailureMonitor, FaultEvent, FaultSchedule
 from repro.serve.sched import FleetScheduler
 
 
@@ -85,6 +90,44 @@ class FleetConfig(ServeConfig):
     # wall history); a live fleet should bound it like the ledger's
     # tick window
     report_window: int | None = None
+    # -- FaultFleet (serve/faults.py + DESIGN.md §14) ----------------------
+    # deterministic fault schedule; None = the historic healthy fleet.
+    faults: FaultSchedule | None = None
+    # the fleet never shrinks below this many rows (a fleet of one row
+    # cannot hold both a prefill and a decode group)
+    min_rows: int = 2
+    # orphan policy when a row dies WITHOUT notice (device_loss):
+    # "retry" re-admits from scratch, "checkpoint" resumes decode from
+    # the last `ServingCheckpointer` snapshot (falling back to retry
+    # for requests the snapshot predates)
+    recovery: str = "retry"
+    # periodic serving-state snapshots (serve/checkpoint_bridge.py):
+    # every `ckpt_cadence` ticks into `ckpt_dir`. 0 = off.
+    ckpt_dir: str | None = None
+    ckpt_cadence: int = 0
+    # healthy_mesh_with_backoff knobs for the mesh-bound fault path
+    probe_attempts: int = 2
+    probe_base_delay: float = 0.01
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.recovery not in ("retry", "checkpoint"):
+            raise ValueError(
+                f"recovery must be 'retry' or 'checkpoint', got {self.recovery!r}"
+            )
+        if self.faults is not None and self.mode != "continuous":
+            raise ValueError(
+                "fault recovery needs mode='continuous' (mid-stream slot "
+                "restores require per-slot cursors)"
+            )
+        if self.recovery == "checkpoint" and (
+            self.ckpt_dir is None or self.ckpt_cadence <= 0
+        ):
+            raise ValueError(
+                "recovery='checkpoint' needs ckpt_dir and ckpt_cadence > 0"
+            )
+        if self.ckpt_cadence > 0 and self.ckpt_dir is None:
+            raise ValueError("ckpt_cadence > 0 needs ckpt_dir")
 
     @property
     def decode_rows(self) -> int:
@@ -120,7 +163,13 @@ class FleetEngine:
             )
         self.cfg = cfg
         self.clock = clock
+        self.model = model
+        self.params = params
         self.prefill_rows = cfg.prefill_rows
+        # live row budget: cfg.n_rows is the provisioned fleet, n_rows
+        # tracks the rows currently healthy (faults shrink it, returning
+        # preempted rows grow it back)
+        self.n_rows = cfg.n_rows
         self.eng = DisaggEngine(
             model,
             params,
@@ -136,6 +185,7 @@ class FleetEngine:
             sched=sched,
         )
         self.graph = None
+        self._mesh = mesh
         if mesh is not None:
             if mesh.shape["data"] != cfg.n_rows:
                 raise ValueError(
@@ -148,24 +198,49 @@ class FleetEngine:
             self.graph = serving_graph(gmesh)
         self.controller = None
         if cfg.adapt is not None:
-            self.controller = ReplanController(
-                cfg.n_rows,
-                {PREFILL: cfg.prefill_rows},
-                traits=(
-                    StageTrait(
-                        PREFILL,
-                        cost_ratio=cfg.prefill_cost_ratio,
-                        bytes_per_item=cfg.prefill_bytes_per_token,
-                    ),
-                ),
-                policy=cfg.adapt,
-            )
+            self.controller = self._build_controller(cfg.n_rows, cfg.prefill_rows)
         self.regroups = 0
         self.deferrals = 0
         self.discarded = 0
         self._pending_age = 0
         self.report: collections.deque[dict] = collections.deque(
             maxlen=cfg.report_window
+        )
+        # -- fault machinery (DESIGN.md §14) -------------------------------
+        self.monitor = None
+        if cfg.faults is not None:
+            self.monitor = FailureMonitor(
+                cfg.faults, cfg.n_rows, min_rows=cfg.min_rows
+            )
+        self.ckpt = None
+        if cfg.ckpt_dir is not None and cfg.ckpt_cadence > 0:
+            from repro.serve.checkpoint_bridge import ServingCheckpointer
+
+            self.ckpt = ServingCheckpointer(
+                cfg.ckpt_dir, cadence=cfg.ckpt_cadence
+            )
+        self.fault_log: list[dict] = []
+        self.recoveries = {"staged": 0, "restored": 0, "retried": 0}
+        self.regrows = 0
+
+    def _build_controller(self, n_rows: int, prefill_rows: int):
+        """A fresh planning loop sized to the (possibly degraded) fleet.
+
+        Rebuilt after every shrink/grow: `ReplanController` bakes the
+        row budget into its recommendation, so a degraded fleet re-plans
+        its prefill/decode split against the rows it actually has."""
+        cfg = self.cfg
+        return ReplanController(
+            n_rows,
+            {PREFILL: prefill_rows},
+            traits=(
+                StageTrait(
+                    PREFILL,
+                    cost_ratio=cfg.prefill_cost_ratio,
+                    bytes_per_item=cfg.prefill_bytes_per_token,
+                ),
+            ),
+            policy=cfg.adapt,
         )
 
     # -- engine facade -----------------------------------------------------
@@ -218,12 +293,19 @@ class FleetEngine:
         a trace on a virtual clock pass the modeled time); otherwise
         ``clock(last_tick)`` or the measured host wall is used.
         """
+        fault_events = self._poll_faults()
         t0 = time.perf_counter()
         self.eng.step()
         measured = time.perf_counter() - t0
         tick = self.eng.last_tick
         if wall_s is None:
             wall_s = self.clock(tick) if self.clock is not None else measured
+        if self.monitor is not None:
+            # a straggler stretches the whole lockstep tick: decode is
+            # batched, so the slowest row sets the tick wall
+            wall_s *= self.monitor.slow_factor(self.eng.tick)
+        if self.ckpt is not None:
+            self.ckpt.maybe_save(self.eng, self.eng.tick)
         prefill_work, decode_work = self._work_signals(tick)
         # the same sample feeds two windows with DIFFERENT lifetimes:
         # the FleetLedger tick window is observability (never cleared —
@@ -240,12 +322,14 @@ class FleetEngine:
         rec = {
             "tick": self.eng.tick,
             "wall_s": wall_s,
+            "rows": self.n_rows,
             "prefill_rows": self.prefill_rows,
             "decode_slots": self.decode_slots,
             "regrouped": False,
             "deferred": False,
             "discarded": False,
             "decision": None,
+            "faults": fault_events,
         }
         if self.controller is not None:
             decision = self.controller.step(
@@ -276,7 +360,9 @@ class FleetEngine:
     def _try_regroup(self, decision) -> bool:
         """Apply a pending regroup if the decode pool can absorb it."""
         new_pre = int(decision.rows[PREFILL])
-        new_slots = (self.cfg.n_rows - new_pre) * self.cfg.slots_per_row
+        # against the LIVE row budget: after a shrink the planner's
+        # recommendation already targets the degraded fleet
+        new_slots = (self.n_rows - new_pre) * self.cfg.slots_per_row
         occupied = sum(s is not None for s in self.eng.slots)
         if occupied > new_slots:
             return False  # defer: shrink would strand in-flight slots
@@ -288,17 +374,230 @@ class FleetEngine:
         self.regroups += 1
         return True
 
-    def drain(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
+    def drain(self, max_steps: int = 10_000) -> int:
+        """Step until idle; returns the steps taken. Hitting the cap
+        with work still queued raises — a recovery deadlock must be
+        loud, not a silently-truncated benchmark."""
+        for n in range(max_steps):
             if self.idle():
-                return
+                return n
             self.step()
+        if not self.idle():
+            w = self.eng.workload_sample()
+            raise RuntimeError(
+                f"fleet stalled after {max_steps} steps: "
+                f"queue={w['queue_depth']} handoff={w['handoff_depth']} "
+                f"restores={w.get('restore_depth', 0)} "
+                f"active={w['active_slots']} rows={self.n_rows}"
+            )
+        return max_steps
 
     # pre-PR-6 name, kept as an alias for existing call sites
     run_until_drained = drain
 
+    # -- failure handling (the FaultFleet recovery path, DESIGN.md §14) ----
+    def inject_fault(self, event: FaultEvent) -> None:
+        """Queue a fault mid-replay (`traffic.replay`'s ``fail_at`` /
+        ``preempt_at`` hooks land here). Creates the monitor on demand
+        so an unfaulted config can still be failed interactively."""
+        if self.cfg.mode != "continuous":
+            raise ValueError("fault injection needs mode='continuous'")
+        if self.monitor is None:
+            self.monitor = FailureMonitor(
+                None, self.cfg.n_rows, min_rows=self.cfg.min_rows
+            )
+        self.monitor.inject(event)
+
+    def _poll_faults(self) -> list[dict]:
+        """The fault leg of one tick: consume due events, shrink/stage/
+        drop, recover orphans, re-grow on returned rows."""
+        if self.monitor is None:
+            return []
+        health = self.monitor.poll(self.eng.tick)
+        out: list[dict] = []
+        if health.returned_rows:
+            # grow target = healthy BEFORE this tick's shrinks (which
+            # each `_apply_fault` below subtracts again)
+            target = self.monitor.healthy_rows + sum(e.rows for e in health.events)
+            rec = self._grow(target)
+            if rec is not None:
+                out.append(rec)
+        for ev in health.events:
+            out.append(self._apply_fault(ev))
+        self.fault_log.extend(out)
+        return out
+
+    def _apply_fault(self, ev: FaultEvent) -> dict:
+        """Shrink the fleet by one (pre-clamped) loss/preempt event.
+
+        Recovery decision tree (DESIGN.md §14): slots on preempted rows
+        are STAGED to host before the rows leave (in-memory migration,
+        zero recompute); slots on lost rows are orphaned and either
+        RESTORED from the last serving checkpoint or RETRIED from
+        scratch; surviving slots that no longer fit the smaller decode
+        pool are staged too (their KV is intact — they just wait for a
+        free slot). Either way the scheduler re-admits every orphan with
+        its original arrival timestamp, so the ledger charges the full
+        recovery stall against TTFT/latency SLOs."""
+        new_n = max(self.n_rows - ev.rows, self.cfg.min_rows)
+        new_pre = min(self.prefill_rows, new_n - 1)
+        new_slots = (new_n - new_pre) * self.cfg.slots_per_row
+        old_slots = len(self.eng.slots)
+        # the dying rows map to the TAIL of the slot pool (decode rows
+        # own slots_per_row consecutive slots; which physical rows die
+        # is the monitor's business — the pool is compacted either way)
+        n_dead = 0
+        if ev.kind == "device_loss":
+            n_dead = min(ev.rows * self.cfg.slots_per_row, old_slots)
+        dead = list(range(old_slots - n_dead, old_slots)) if n_dead else []
+        orphans = []
+        staged = 0
+        for i in dead:
+            if self.eng.slots[i] is not None:
+                orphans.append(self.eng.drop_slot(i))
+        if ev.kind == "preempt":
+            # preemption notice: evacuate the dying rows' slots to host
+            # staging before the rows leave
+            for i in range(old_slots - 1, -1, -1):
+                occupied = sum(s is not None for s in self.eng.slots)
+                if occupied <= new_slots:
+                    break
+                if self.eng.slots[i] is not None:
+                    self.eng.restores.append(self.eng.stage_out(i))
+                    staged += 1
+        else:
+            # survivors beyond the smaller pool: healthy KV, no slot —
+            # stage them (they re-enter as soon as a slot frees)
+            for i in range(old_slots - 1, -1, -1):
+                if i in dead:
+                    continue
+                occupied = sum(s is not None for s in self.eng.slots)
+                if occupied <= new_slots:
+                    break
+                if self.eng.slots[i] is not None:
+                    self.eng.restores.append(self.eng.stage_out(i))
+                    staged += 1
+        self.recoveries["staged"] += staged
+        self._resize_fleet(new_n, new_pre, new_slots)
+        restored = retried = 0
+        for req in orphans:
+            if self._restore_orphan(req):
+                restored += 1
+            else:
+                retried += 1
+        self.recoveries["restored"] += restored
+        self.recoveries["retried"] += retried
+        return {
+            "tick": self.eng.tick,
+            "kind": ev.kind,
+            "rows_lost": ev.rows,
+            "rows": self.n_rows,
+            "prefill_rows": self.prefill_rows,
+            "decode_slots": self.decode_slots,
+            "staged": staged,
+            "restored": restored,
+            "retried": retried,
+        }
+
+    def _grow(self, target_rows: int) -> dict | None:
+        """Preempted rows came back: grow the decode pool onto them."""
+        new_n = min(target_rows, self.cfg.n_rows)
+        if new_n <= self.n_rows:
+            return None
+        new_pre = self.prefill_rows
+        new_slots = (new_n - new_pre) * self.cfg.slots_per_row
+        self._resize_fleet(new_n, new_pre, new_slots)
+        self.regrows += 1
+        return {
+            "tick": self.eng.tick,
+            "kind": "regrow",
+            "rows": self.n_rows,
+            "prefill_rows": self.prefill_rows,
+            "decode_slots": self.decode_slots,
+        }
+
+    def _resize_fleet(self, new_n: int, new_pre: int, new_slots: int) -> None:
+        """Re-size rows/split/graph/controller to the new fleet size."""
+        if self.graph is not None:
+            # rebuild the serving topology on the largest mesh the
+            # surviving devices allow (probe-with-backoff first, so a
+            # transient straggler does not trigger the storm)
+            dpr = max(self._mesh.devices.size // self.cfg.n_rows, 1)
+            mesh = healthy_mesh_with_backoff(
+                (new_n,) + self._mesh.devices.shape[1:],
+                self._mesh.axis_names,
+                prober=self.monitor.prober(dpr) if self.monitor else None,
+                attempts=self.cfg.probe_attempts,
+                base_delay=self.cfg.probe_base_delay,
+            )
+            gmesh = GroupedMesh.build_rows(mesh, rows={PREFILL: new_pre})
+            self.graph = serving_graph(gmesh)
+        self.eng.resize(new_pre, new_slots)
+        self.n_rows = new_n
+        self.prefill_rows = new_pre
+        if self.cfg.adapt is not None:
+            # degraded-mode re-plan: a fresh controller sized to the
+            # surviving fleet; its window refills from live ticks and
+            # the usual calibrate -> recommend_allocation loop re-splits
+            # prefill/decode for the smaller (or re-grown) fleet
+            self.controller = self._build_controller(new_n, new_pre)
+            self._pending_age = 0
+
+    def _restore_orphan(self, req) -> bool:
+        """Resume an orphaned request from the last serving checkpoint;
+        fall back to drop-and-retry when no snapshot covers it. Either
+        way `sched.submit` is called directly — NOT `eng.submit`, which
+        would stamp a fresh ``submitted_tick`` and silently forgive the
+        recovery stall the SLO accounting must see."""
+        req.done = False
+        if self.cfg.recovery == "checkpoint" and self.ckpt is not None:
+            entry = self.ckpt.slot_entry(req.uid)
+            if entry is not None:
+                cache1, length, next_tok, out_tokens = entry
+                req.out_tokens[:] = list(out_tokens)
+                if not req.out_tokens:
+                    req.first_token_tick = -1
+                self.eng.restores.append((req, cache1, length, next_tok))
+                return True
+        # drop-and-retry: the stream restarts, so TTFT is honestly
+        # re-charged from the original arrival
+        req.out_tokens.clear()
+        req.first_token_tick = -1
+        self.eng.sched.submit(req, now=self.eng.tick)
+        return False
+
 
 # -- SPMD-layer slot migration --------------------------------------------------
+
+
+def _fault_keep(
+    old_c: int,
+    new_c: int,
+    spr: int,
+    keep: Sequence[int] | None,
+    dead_rows: Sequence[int] | None,
+) -> list[int]:
+    """Resolve the surviving-slot list of a reshard.
+
+    ``dead_rows`` names old DECODE-row indices lost to a fault: their
+    ``slots_per_row`` slots are excluded from the default keep (and an
+    explicit ``keep`` naming one of their slots is an error — KV on a
+    dead row cannot be migrated, only restored from a checkpoint)."""
+    dead = set(int(r) for r in (dead_rows or ()))
+    for r in dead:
+        if not 0 <= r < old_c:
+            raise ValueError(f"dead row {r} outside the {old_c} old decode rows")
+    if keep is None:
+        alive = [s for s in range(old_c * spr) if s // spr not in dead]
+        keep = alive[: new_c * spr]
+    else:
+        keep = [int(s) for s in keep]
+        for s in keep:
+            if s // spr in dead:
+                raise ValueError(f"kept slot {s} lives on dead row {s // spr}")
+    if len(keep) > new_c * spr:
+        raise ValueError(f"{len(keep)} kept slots exceed capacity {new_c * spr}")
+    return keep
 
 
 def reshard_serving_state(
@@ -309,9 +608,10 @@ def reshard_serving_state(
     *,
     slots_per_row: int,
     keep: Sequence[int] | None = None,
+    dead_rows: Sequence[int] | None = None,
 ):
     """Migrate `init_disagg_state`'s sharded cache/tokens between two
-    prefill/decode splits of the same mesh via `elastic.reshard_state`.
+    prefill/decode splits via `elastic.reshard_state`.
 
     The decode group IS the compute group of the serving `GroupedMesh`,
     so `reshard_state` does exactly the right thing once the state is
@@ -321,24 +621,28 @@ def reshard_serving_state(
     re-placed with the axis sharding. The per-row shared cursor ``pos``
     migrates as the max over old decode rows (the shared-position
     contract of `migrate_cache_into_slot`).
+
+    The meshes may differ in size (the fault path: old state on the
+    full mesh, new state on a `healthy_mesh` with fewer rows).
+    ``dead_rows`` names old decode rows lost to the fault — their slots
+    are dropped from the default keep, and naming them in an explicit
+    ``keep`` raises (dead KV cannot be migrated).
     """
-    n = old_gmesh.axis_size
+    n_old = old_gmesh.axis_size
+    n_new = new_gmesh.axis_size
     old_c = old_gmesh.compute.size
     new_c = new_gmesh.compute.size
     spr = int(slots_per_row)
-    if keep is None:
-        keep = list(range(min(old_c * spr, new_c * spr)))
-    if len(keep) > new_c * spr:
-        raise ValueError(f"{len(keep)} kept slots exceed capacity {new_c * spr}")
+    keep = _fault_keep(old_c, new_c, spr, keep, dead_rows)
 
     def rows_first(x):
         """(L, n*spr, ...) slot-batched leaf -> (n, spr, L, ...)."""
         x = np.asarray(x)
         moved = np.moveaxis(x, 1, 0)  # (n*spr, L, ...)
-        return moved.reshape((n, spr) + moved.shape[1:])
+        return moved.reshape((n_old, spr) + moved.shape[1:])
 
     state = {
-        "tokens": np.asarray(tokens).reshape(n, spr, 1),
+        "tokens": np.asarray(tokens).reshape(n_old, spr, 1),
         "pos": np.asarray(cache["pos"]),
         **{k: rows_first(v) for k, v in cache.items() if k != "pos"},
     }
@@ -359,8 +663,8 @@ def reshard_serving_state(
     mesh, axis = new_gmesh.mesh, new_gmesh.axis
 
     def slots_first(x):
-        """(n, spr, L, ...) -> (L, n*spr, ...) with the axis sharding."""
-        host = np.asarray(x).reshape((n * spr,) + x.shape[2:])
+        """(n_new, spr, L, ...) -> (L, n_new*spr, ...) with axis sharding."""
+        host = np.asarray(x).reshape((n_new * spr,) + x.shape[2:])
         arr = jnp.asarray(np.moveaxis(host, 0, 1))
         spec = P(None, axis, *(None,) * (arr.ndim - 2))
         return jax.device_put(arr, NamedSharding(mesh, spec))
@@ -372,7 +676,7 @@ def reshard_serving_state(
         jnp.asarray(np.asarray(migrated["pos"])), NamedSharding(mesh, P(axis))
     )
     new_tokens = jax.device_put(
-        jnp.asarray(np.asarray(migrated["tokens"]).reshape(n * spr, 1)),
+        jnp.asarray(np.asarray(migrated["tokens"]).reshape(n_new * spr, 1)),
         NamedSharding(mesh, P(axis, None)),
     )
     return new_cache, new_tokens
@@ -389,6 +693,7 @@ def reshard_paged_serving_state(
     *,
     slots_per_row: int,
     keep: Sequence[int] | None = None,
+    dead_rows: Sequence[int] | None = None,
     n_blocks: int | None = None,
 ):
     """Paged counterpart of `reshard_serving_state`: migrate a block
@@ -400,28 +705,27 @@ def reshard_paged_serving_state(
     `launch.elastic.repack_block_pool` the live blocks onto the
     surviving slots and re-deal the per-slot token row. ``keep``
     selects surviving global slot indices (default: the occupied head
-    of the pool, like the dense path); the repacked pool is replicated
-    over the new mesh and tokens get the axis sharding.
+    of the pool, like the dense path, minus any slot on a ``dead_rows``
+    decode row); the repacked pool is replicated over the new mesh and
+    tokens get the axis sharding. The meshes may differ in size (the
+    fault path).
     """
-    n = new_gmesh.axis_size
+    n_new = new_gmesh.axis_size
     old_c = old_gmesh.compute.size
     new_c = new_gmesh.compute.size
     spr = int(slots_per_row)
     lens = np.asarray(lens)
-    if keep is None:
-        keep = list(range(min(old_c * spr, new_c * spr)))
-    if len(keep) > new_c * spr:
-        raise ValueError(f"{len(keep)} kept slots exceed capacity {new_c * spr}")
+    keep = _fault_keep(old_c, new_c, spr, keep, dead_rows)
     new_k, new_v, kept_tables, kept_lens = repack_block_pool(
         k_pool, v_pool, tables, lens, keep=keep, n_blocks=n_blocks
     )
     # the global slot index space spans every row (init_disagg_state's
     # rows * slots_per_row layout), decode slots at the head
-    new_tables = np.full((n * spr, np.asarray(tables).shape[1]), -1, np.int32)
+    new_tables = np.full((n_new * spr, np.asarray(tables).shape[1]), -1, np.int32)
     new_tables[: len(keep)] = kept_tables
-    new_lens = np.zeros(n * spr, lens.dtype)
+    new_lens = np.zeros(n_new * spr, lens.dtype)
     new_lens[: len(keep)] = kept_lens
-    host_tokens = np.zeros((n * spr, 1), np.int32)
+    host_tokens = np.zeros((n_new * spr, 1), np.int32)
     host_tokens[: len(keep)] = np.asarray(tokens)[list(keep)]
     mesh, axis = new_gmesh.mesh, new_gmesh.axis
     pool_sharding = NamedSharding(mesh, P())  # replicated: shared host pool

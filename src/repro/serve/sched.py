@@ -132,6 +132,14 @@ class FleetScheduler:
             int(e.req.prompt.shape[0]) for q in self._queues.values() for e in q
         )
 
+    def queued_requests(self) -> list["Request"]:
+        """Every queued request in global submission (seq) order — the
+        checkpoint bridge serializes this so a cold restore re-submits
+        the queue with original arrival order intact."""
+        entries = [e for q in self._queues.values() for e in q]
+        entries.sort(key=lambda e: e.seq)
+        return [e.req for e in entries]
+
     # -- pop ---------------------------------------------------------------
     def _heads(self) -> list[_Queued]:
         return [q[0] for q in self._queues.values() if q]

@@ -31,6 +31,7 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from repro.core.imbalance import ImbalanceModel
+from repro.serve.faults import events_from_hooks, validate_events
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +141,12 @@ class TrafficScenario:
     seed: int = 0
     max_prompt: int | None = None  # cap prompt draws (engine max_len guard)
     max_output: int | None = None
+    # declared faults (serve.faults.FaultEvent) — part of the scenario so a
+    # recorded trace replays its failures as deterministically as its traffic
+    faults: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", validate_events(self.faults))
 
     def tenant(self, name: str) -> TenantSpec:
         for t in self.tenants:
@@ -235,6 +242,10 @@ def replay(
     events: Sequence[ArrivalEvent] | None = None,
     on_tick=None,
     max_ticks: int = 5000,
+    fail_at: int | None = None,
+    preempt_at: int | None = None,
+    fault_rows: int = 1,
+    preempt_duration: int = 0,
 ):
     """Drive an engine through a scenario: submit each event's request
     at its tick, step once per tick, continue until the horizon has
@@ -245,7 +256,29 @@ def replay(
     silently diverge between them. ``on_tick(engine)`` runs after every
     step (analytics sampling, virtual-clock accumulation). Returns the
     materialized `(event, Request)` pairs.
+
+    Faults: the scenario's declared ``faults`` tuple plus the
+    ``fail_at``/``preempt_at`` convenience hooks (lose ``fault_rows``
+    rows at that tick; preempted rows return after ``preempt_duration``
+    ticks) are injected into the engine before the loop starts — the
+    engine must expose `inject_fault` (FleetEngine) when any are set.
     """
+    fault_events = tuple(sc.faults) + events_from_hooks(
+        sc.horizon,
+        fail_at=fail_at,
+        preempt_at=preempt_at,
+        fault_rows=fault_rows,
+        preempt_duration=preempt_duration,
+    )
+    if fault_events:
+        inject = getattr(engine, "inject_fault", None)
+        if inject is None:
+            raise ValueError(
+                "fault injection needs an engine with inject_fault "
+                "(serve.fleet.FleetEngine in continuous mode)"
+            )
+        for ev in fault_events:
+            inject(ev)
     pairs = sc.requests(vocab_size, events)
     by_tick: dict[int, list] = {}
     for e, r in pairs:

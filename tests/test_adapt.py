@@ -345,14 +345,32 @@ def test_reshard_state_redeal_and_passthrough():
     assert float(out["scalar"]) == 3.0  # non-row leaf passes through
 
 
-def test_reshard_state_rejects_mismatched_axes():
+def test_reshard_state_rejects_bad_repartition_row_count():
+    # axis-size mismatch no longer raises — the fault path reshards a
+    # shrink onto a healthy_mesh with fewer rows (DESIGN.md §14). The
+    # remaining guard: a repartition hook must hand back exactly the
+    # NEW compute row count.
+    import jax.numpy as jnp
+
     from repro.launch.elastic import reshard_state
+    from repro.utils.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
 
     class GM:
-        axis_size = 4
+        def __init__(self):
+            self.mesh = mesh
+            self.axis = "data"
+            self.axis_size = 1
 
-    class GM2:
-        axis_size = 8
+        @property
+        def compute(self):
+            class S:
+                size = 1
 
-    with pytest.raises(ValueError):
-        reshard_state({}, GM(), GM2())
+            return S
+
+    state = {"buf": jnp.arange(6.0).reshape(1, 6)}
+    bad = lambda tree, og, ng: {"buf": np.zeros((3, 6), np.float32)}
+    with pytest.raises(ValueError, match="repartition returned"):
+        reshard_state(state, GM(), GM(), repartition=bad)

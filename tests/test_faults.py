@@ -1,0 +1,552 @@
+"""FaultFleet: fault-schedule determinism, monitor row arithmetic,
+probe-with-backoff, serving-state checkpoints (bitwise round trips),
+async-writer hardening, and the zero-lost-request recovery invariants
+(DESIGN.md §14)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, strategies as st
+
+from repro.serve.engine import Request
+from repro.serve.faults import (
+    FailureMonitor,
+    FaultEvent,
+    FaultSchedule,
+    events_from_hooks,
+    validate_events,
+)
+
+
+def _req(uid, n_tokens, tenant="default", max_new=4, seed=None):
+    if seed is None:
+        prompt = np.zeros(int(n_tokens), np.int32)
+    else:
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(0, 100, int(n_tokens)).astype(np.int32)
+    return Request(uid=uid, prompt=prompt, max_new_tokens=max_new, tenant=tenant)
+
+
+# -- fault events and schedules -------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(0, "meteor")
+    with pytest.raises(ValueError):
+        FaultEvent(-1, "device_loss")
+    with pytest.raises(ValueError):
+        FaultEvent(0, "device_loss", rows=0)
+    with pytest.raises(ValueError):
+        FaultEvent(0, "preempt", duration=-1)
+    with pytest.raises(ValueError):
+        FaultEvent(0, "slow_node", factor=0.5)
+    FaultEvent(0, "slow_node", rows=0)  # rows unused for slow_node
+
+
+def test_fault_schedule_generate_deterministic_and_sorted():
+    a = FaultSchedule.generate(64, seed=7, p_loss=0.2, p_preempt=0.2,
+                               p_slow=0.1, max_rows=3)
+    b = FaultSchedule.generate(64, seed=7, p_loss=0.2, p_preempt=0.2,
+                               p_slow=0.1, max_rows=3)
+    assert a.events == b.events
+    assert a.events, "seed 7 should draw at least one fault"
+    ticks = [e.tick for e in a.events]
+    assert ticks == sorted(ticks)
+    c = FaultSchedule.generate(64, seed=8, p_loss=0.2, p_preempt=0.2,
+                               p_slow=0.1, max_rows=3)
+    assert a.events != c.events
+    t = a.events[0].tick
+    assert all(e.tick == t for e in a.at(t))
+    # construction re-sorts whatever order the events arrive in
+    ev = (FaultEvent(5, "device_loss"), FaultEvent(1, "preempt", duration=2))
+    assert [e.tick for e in FaultSchedule(ev).events] == [1, 5]
+
+
+def test_events_from_hooks_clamp_into_horizon():
+    evs = events_from_hooks(10, fail_at=99, preempt_at=-3, fault_rows=2,
+                            preempt_duration=4)
+    kinds = {e.kind: e for e in evs}
+    assert kinds["device_loss"].tick == 10 and kinds["device_loss"].rows == 2
+    assert kinds["preempt"].tick == 0 and kinds["preempt"].duration == 4
+    assert events_from_hooks(10) == ()
+    with pytest.raises(TypeError):
+        validate_events(("not-an-event",))
+
+
+# -- the failure monitor --------------------------------------------------------
+
+
+def test_monitor_clamps_loss_at_min_rows():
+    m = FailureMonitor(FaultSchedule((FaultEvent(0, "device_loss", rows=5),
+                                      FaultEvent(1, "device_loss", rows=1))),
+                       n_rows=4, min_rows=2)
+    h0 = m.poll(0)
+    assert [e.rows for e in h0.events] == [2]  # clamped from 5
+    assert m.healthy_rows == 2
+    h1 = m.poll(1)
+    assert h1.events == ()  # unrealizable: the floor holds the fleet up
+    assert m.healthy_rows == 2
+    with pytest.raises(ValueError):
+        FailureMonitor(None, n_rows=1, min_rows=2)
+
+
+def test_monitor_preempt_schedules_return():
+    m = FailureMonitor(
+        FaultSchedule((FaultEvent(0, "preempt", rows=1, duration=3),)),
+        n_rows=4, min_rows=2)
+    assert m.poll(0).events[0].kind == "preempt"
+    assert m.healthy_rows == 3
+    assert m.poll(2).returned_rows == 0
+    h = m.poll(3)
+    assert h.returned_rows == 1
+    assert m.healthy_rows == 4
+    # a re-grow never exceeds the provisioned fleet
+    assert m.poll(9).returned_rows == 0
+
+
+def test_monitor_nets_same_tick_return_and_loss():
+    m = FailureMonitor(
+        FaultSchedule((FaultEvent(0, "preempt", rows=1, duration=2),
+                       FaultEvent(2, "device_loss", rows=1))),
+        n_rows=4, min_rows=2)
+    m.poll(0)
+    assert m.healthy_rows == 3
+    h = m.poll(2)  # the returning row absorbs the same-tick loss
+    assert h.returned_rows == 1 and [e.rows for e in h.events] == [1]
+    assert m.healthy_rows == 3
+
+
+def test_monitor_slow_windows_multiply():
+    m = FailureMonitor(
+        FaultSchedule((FaultEvent(1, "slow_node", duration=3, factor=2.0),
+                       FaultEvent(2, "slow_node", duration=1, factor=3.0))),
+        n_rows=4, min_rows=2)
+    m.poll(1)
+    assert m.slow_factor(1) == 2.0
+    m.poll(2)
+    assert m.slow_factor(2) == 6.0  # overlapping stragglers compound
+    assert m.slow_factor(3) == 2.0
+    assert m.slow_factor(4) == 1.0
+    assert m.healthy_rows == 4  # slow nodes never shrink the fleet
+
+
+def test_monitor_prober_reports_devices():
+    m = FailureMonitor(FaultSchedule((FaultEvent(0, "device_loss", rows=1),)),
+                       n_rows=4, min_rows=2)
+    probe = m.prober(devices_per_row=2)
+    assert probe() == 8
+    m.poll(0)
+    assert probe() == 6
+
+
+# -- probe-with-backoff ---------------------------------------------------------
+
+
+def test_healthy_mesh_with_backoff_schedule():
+    from repro.launch.elastic import healthy_mesh_with_backoff
+
+    probes = iter([0, 0, 1])
+    slept, retried = [], []
+    mesh = healthy_mesh_with_backoff(
+        (1,), ("data",), prober=lambda: next(probes), attempts=3,
+        base_delay=0.5, sleep=slept.append,
+        on_retry=lambda a, d: retried.append((a, d)))
+    assert mesh.shape["data"] == 1
+    assert slept == [0.5, 1.0]  # exponential: base, 2*base
+    assert retried == [(1, 0.5), (2, 1.0)]
+    # a healthy first probe never sleeps
+    slept.clear()
+    healthy_mesh_with_backoff((1,), ("data",), prober=lambda: 4,
+                              attempts=3, sleep=slept.append)
+    assert slept == []
+    with pytest.raises(ValueError):
+        healthy_mesh_with_backoff((1,), ("data",), attempts=0)
+
+
+# -- async checkpoint hardening -------------------------------------------------
+
+
+def test_async_checkpointer_save_after_close_raises(tmp_path):
+    from repro.io.checkpoint import AsyncCheckpointer
+
+    ck = AsyncCheckpointer(str(tmp_path / "ck"))
+    ck.save(0, {"a": np.arange(3)})
+    ck.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        ck.save(1, {"a": np.arange(3)})
+
+
+def test_async_checkpointer_worker_failure_surfaces(tmp_path):
+    from repro.io.checkpoint import AsyncCheckpointer
+
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("in the way")
+    ck = AsyncCheckpointer(str(blocker))  # writes must fail in the worker
+    ck.save(0, {"a": np.arange(3)})
+    with pytest.raises(RuntimeError, match="checkpoint write"):
+        ck.wait()
+    ck.close()  # a drained failure does not wedge shutdown
+
+
+def test_checkpoint_commit_is_atomic_no_part_files(tmp_path):
+    from repro.io import checkpoint as ckpt_io
+
+    d = str(tmp_path / "ck")
+    ckpt_io.save(d, 3, {"a": np.arange(4), "b": {"c": np.float32(1.5)}})
+    step_dir = os.path.join(d, "step_00000003")
+    names = sorted(os.listdir(step_dir))
+    assert ckpt_io.COMMIT in names
+    assert not [n for n in names if n.endswith(".part")]
+    tree = ckpt_io.restore_tree(d, 3)
+    np.testing.assert_array_equal(tree["a"], np.arange(4))
+    assert float(tree["b"]["c"]) == 1.5
+
+
+# -- engine-level fixtures ------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import build
+
+    cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _fleet(model, params, **over):
+    from repro.serve.fleet import FleetConfig, FleetEngine
+
+    kw = dict(mode="continuous", n_rows=4, prefill_rows=1, slots_per_row=2,
+              max_len=64, prefill_chunk=16, min_rows=2)
+    kw.update(over)
+    return FleetEngine(model, params, FleetConfig(**kw))
+
+
+def _submit_and_fill(fe, n=8, max_new=8, max_steps=30):
+    """Submit n requests and step until the TAIL slots_per_row slots are
+    occupied (so a tail-row fault is guaranteed to orphan live KV)."""
+    for i in range(n):
+        fe.submit(_req(i, 5 + (i % 3), max_new=max_new, seed=i))
+    spr = fe.cfg.slots_per_row
+    for _ in range(max_steps):
+        fe.step()
+        if all(s is not None for s in fe.eng.slots[-spr:]):
+            return n
+    raise AssertionError("tail decode slots never filled — widen the setup")
+
+
+def _streams(fe):
+    return {r.uid: list(r.out_tokens) for r in fe.finished}
+
+
+def test_drain_stall_raises_instead_of_silent_return(tiny_model):
+    cfg, model, params = tiny_model
+    fe = _fleet(model, params)
+    fe.submit(_req(0, 5, max_new=4))
+    with pytest.raises(RuntimeError, match="stalled"):
+        fe.drain(max_steps=1)
+
+
+def test_device_loss_retry_zero_lost_and_streams_match(tiny_model):
+    """A device loss with no checkpoint: orphans re-enter from scratch at
+    their ORIGINAL arrival tick, nothing is lost, and greedy decode
+    regenerates exactly the unfaulted streams."""
+    cfg, model, params = tiny_model
+    base = _fleet(model, params)
+    for i in range(8):
+        base.submit(_req(i, 5 + (i % 3), max_new=8, seed=i))
+    base.drain()
+
+    fe = _fleet(model, params)
+    n = _submit_and_fill(fe)
+    victims = {fe.eng.slots[i].uid: fe.eng.slots[i].submitted_tick
+               for i in (len(fe.eng.slots) - 2, len(fe.eng.slots) - 1)}
+    fe.inject_fault(FaultEvent(fe.eng.tick + 1, "device_loss", rows=1))
+    fe.drain()
+    assert fe.recoveries["retried"] >= 1
+    assert fe.fault_log and fe.fault_log[0]["kind"] == "device_loss"
+    assert fe.n_rows == 3 and len(fe.eng.slots) == 4
+    assert sorted(_streams(fe)) == list(range(n))
+    assert _streams(fe) == _streams(base)
+    # the recovery stall is charged to the original arrival
+    for r in fe.finished:
+        if r.uid in victims:
+            assert r.submitted_tick == victims[r.uid]
+
+
+def test_preempt_stages_in_memory_and_regrows(tiny_model):
+    """Preemption (loss WITH notice): the dying rows' slots stage to
+    host — pure in-memory migration, zero recompute — and the fleet
+    re-grows to its provisioned size when the rows return."""
+    cfg, model, params = tiny_model
+    base = _fleet(model, params)
+    for i in range(8):
+        base.submit(_req(i, 5 + (i % 3), max_new=8, seed=i))
+    base.drain()
+
+    fe = _fleet(model, params)
+    _submit_and_fill(fe)
+    fe.inject_fault(FaultEvent(fe.eng.tick + 1, "preempt", rows=1, duration=4))
+    fe.drain()
+    assert fe.recoveries["staged"] >= 1
+    assert fe.recoveries["retried"] == 0  # nothing recomputed
+    assert fe.regrows == 1
+    assert fe.n_rows == 4  # back to the provisioned fleet
+    assert _streams(fe) == _streams(base)
+
+
+def test_checkpoint_recovery_resumes_orphans(tiny_model, tmp_path):
+    """recovery='checkpoint': orphans of a device loss resume decode
+    from the last snapshot (restored, not retried) and still finish the
+    exact unfaulted streams."""
+    cfg, model, params = tiny_model
+    base = _fleet(model, params)
+    for i in range(8):
+        base.submit(_req(i, 5 + (i % 3), max_new=8, seed=i))
+    base.drain()
+
+    fe = _fleet(model, params, recovery="checkpoint",
+                ckpt_dir=str(tmp_path / "serving"), ckpt_cadence=1)
+    _submit_and_fill(fe, max_new=8)
+    fe.inject_fault(FaultEvent(fe.eng.tick + 1, "device_loss", rows=1))
+    fe.drain()
+    fe.ckpt.close()
+    assert fe.recoveries["restored"] >= 1
+    assert _streams(fe) == _streams(base)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_random_fault_schedules_never_lose_requests(tiny_model, seed):
+    """Property: under any generated loss/preempt schedule the finished
+    uid set equals the submitted uid set — zero requests lost."""
+    cfg, model, params = tiny_model
+    sched = FaultSchedule.generate(
+        8, seed=seed, p_loss=0.35, p_preempt=0.35, max_rows=2,
+        preempt_duration=3)
+    fe = _fleet(model, params, faults=sched)
+    uids = list(range(4))
+    for i in uids:
+        fe.submit(_req(i, 4 + (i % 3), max_new=3, seed=i))
+    fe.drain(max_steps=400)
+    assert sorted(_streams(fe)) == uids
+
+
+def test_monitor_rows_stay_bounded_under_random_schedules():
+    """Property (host-only): the monitor's healthy-row count never
+    leaves [min_rows, n_rows] whatever the schedule throws at it."""
+    for seed in range(50):
+        sched = FaultSchedule.generate(
+            32, seed=seed, p_loss=0.4, p_preempt=0.4, p_slow=0.2,
+            max_rows=4, preempt_duration=5)
+        m = FailureMonitor(sched, n_rows=6, min_rows=2)
+        for t in range(40):
+            m.poll(t)
+            assert 2 <= m.healthy_rows <= 6
+            assert m.slow_factor(t) >= 1.0
+
+
+# -- serving-state snapshots ----------------------------------------------------
+
+
+def _paged_engine(model, params):
+    from repro.serve.api import KVSpec
+    from repro.serve.disagg import DisaggConfig, DisaggEngine
+
+    return DisaggEngine(
+        model, params,
+        DisaggConfig(n_prefill_rows=1, decode_slots=4, max_len=64,
+                     mode="continuous", prefill_chunk=16,
+                     kv=KVSpec(kind="paged", block_size=8, prefix_cache=True)))
+
+
+def test_paged_kvstore_snapshot_roundtrip_bitwise(tiny_model):
+    """snapshot_kvstore -> restore_kvstore reproduces a mid-flight paged
+    store exactly: pools, tables, lens, refcounts, the free set, and the
+    prefix cache's entries in LRU order."""
+    from repro.serve.checkpoint_bridge import restore_kvstore, snapshot_kvstore
+    from repro.serve.kvstore import _FullEntry
+
+    cfg, model, params = tiny_model
+    eng = _paged_engine(model, params)
+    shared = np.arange(12, dtype=np.int32) % cfg.vocab_size
+    for i in range(5):
+        prompt = np.concatenate([shared, np.full(3 + i, i, np.int32)])
+        eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=6))
+    for _ in range(6):
+        eng.step()
+    src = eng.kv
+    assert src.prefix.entries, "setup: prefix cache should hold entries"
+    assert any(src.lens > 0), "setup: slots should hold live KV"
+    snap = snapshot_kvstore(src)
+
+    dst = _paged_engine(model, params).kv
+    restore_kvstore(dst, snap)
+    np.testing.assert_array_equal(np.asarray(dst.k_pool), np.asarray(src.k_pool))
+    np.testing.assert_array_equal(np.asarray(dst.v_pool), np.asarray(src.v_pool))
+    np.testing.assert_array_equal(dst.tables, src.tables)
+    np.testing.assert_array_equal(dst.lens, src.lens)
+    np.testing.assert_array_equal(dst.ref, src.ref)
+    np.testing.assert_array_equal(dst._pref, src._pref)
+    assert sorted(dst._free) == sorted(src._free)
+    assert dst.peak_blocks == src.peak_blocks
+    assert list(dst.prefix.entries) == list(src.prefix.entries)  # LRU order
+    for key, a in src.prefix.entries.items():
+        b = dst.prefix.entries[key]
+        if isinstance(a, _FullEntry):
+            assert (a.length, a.blocks, a.first) == (b.length, b.blocks, b.first)
+            np.testing.assert_array_equal(np.asarray(a.logits), np.asarray(b.logits))
+            np.testing.assert_array_equal(np.asarray(a.k_tail), np.asarray(b.k_tail))
+            np.testing.assert_array_equal(np.asarray(a.v_tail), np.asarray(b.v_tail))
+        else:
+            assert a == b
+    assert (dst.prefix.hits, dst.prefix.misses, dst.prefix.hit_tokens) == (
+        src.prefix.hits, src.prefix.misses, src.prefix.hit_tokens)
+
+
+def test_cold_restore_replays_to_identical_streams(tiny_model, tmp_path):
+    """A fresh fleet restored from a mid-flight snapshot finishes the
+    same streams as the fleet that kept running, with every request's
+    ORIGINAL submitted_tick preserved across the restore."""
+    from repro.serve.checkpoint_bridge import ServingCheckpointer
+
+    cfg, model, params = tiny_model
+    d = str(tmp_path / "serving")
+    live = _fleet(model, params, ckpt_dir=d, ckpt_cadence=2)
+    submitted_at = {}
+    for t in range(3):  # staggered arrivals: submitted_tick varies
+        for i in (2 * t, 2 * t + 1):
+            r = _req(i, 5 + i, max_new=6, seed=i)
+            live.submit(r)
+            submitted_at[i] = r.submitted_tick
+        live.step()
+    for _ in range(2):
+        live.step()
+    live.ckpt.save(live.eng, live.eng.tick)
+    live.ckpt.wait()  # the restorer below is a separate instance
+
+    cold = _fleet(model, params)
+    restorer = ServingCheckpointer(d, cadence=0)
+    assert restorer.restore_into(cold.eng)
+    restorer.close()
+    live.drain()
+    live.ckpt.close()
+    cold.drain()
+    assert _streams(cold) == _streams(live)
+    for r in cold.finished:
+        assert r.submitted_tick == submitted_at[r.uid]
+
+
+def test_restore_geometry_and_occupancy_guards(tiny_model, tmp_path):
+    from repro.serve.checkpoint_bridge import (
+        restore_engine,
+        snapshot_engine,
+        snapshot_kvstore,
+        restore_kvstore,
+    )
+
+    cfg, model, params = tiny_model
+    fe = _fleet(model, params)
+    _submit_and_fill(fe)
+    snap = snapshot_engine(fe.eng)
+    small = _fleet(model, params, n_rows=3)
+    with pytest.raises(ValueError, match="slots"):
+        restore_engine(small.eng, snap)
+    with pytest.raises(ValueError, match="occupied"):
+        restore_engine(fe.eng, snap)  # the live engine's slots are taken
+    dense = _fleet(model, params)
+    with pytest.raises(ValueError, match="paged"):
+        restore_kvstore(dense.eng.kv, snapshot_kvstore(
+            _paged_engine(model, params).kv))
+
+
+# -- SPMD-layer migration with dead rows (multi-device subprocess) --------------
+
+
+def test_reshard_serving_state_drops_dead_rows(multidevice):
+    """Cross-size dense reshard: surviving slots' KV migrates verbatim
+    onto the smaller mesh, a dead decode row's slots are excluded from
+    the default keep, and naming a dead slot explicitly raises."""
+    multidevice("""
+import numpy as np
+import pytest
+from repro.core.groups import GroupedMesh
+from repro.serve.disagg import PREFILL
+from repro.serve.fleet import reshard_serving_state
+from repro.utils.compat import make_mesh
+
+spr = 2
+old = GroupedMesh.build_rows(make_mesh((4,), ("data",)), rows={PREFILL: 1})
+new = GroupedMesh.build_rows(make_mesh((3,), ("data",)), rows={PREFILL: 1})
+old_c, new_c = old.compute.size, new.compute.size
+assert (old_c, new_c) == (3, 2)
+L, T, D = 2, 8, 4
+k = np.zeros((L, 4 * spr, T, D), np.float32)
+for s in range(old_c * spr):
+    k[:, s] = s + 1  # distinct per-slot payload
+cache = {"k": k, "v": k * 10, "pos": np.array([3, 3, 3, 0], np.int32)}
+tokens = np.arange(4 * spr, dtype=np.int32).reshape(-1, 1)
+
+new_cache, new_tokens = reshard_serving_state(
+    cache, tokens, old, new, slots_per_row=spr, dead_rows=[2])
+nk = np.asarray(new_cache["k"])
+assert nk.shape[1] == 3 * spr
+# dead row 2 owned slots 4,5; survivors 0..3 fill the new pool's head
+for s in range(4):
+    np.testing.assert_array_equal(nk[:, s], np.full((L, T, D), s + 1))
+np.testing.assert_array_equal(np.asarray(new_tokens)[:4, 0], np.arange(4))
+assert int(np.asarray(new_cache["pos"]).max()) == 3
+with pytest.raises(ValueError, match="dead row"):
+    reshard_serving_state(cache, tokens, old, new, slots_per_row=spr,
+                          keep=[0, 4], dead_rows=[2])
+with pytest.raises(ValueError, match="exceed"):
+    reshard_serving_state(cache, tokens, old, new, slots_per_row=spr,
+                          keep=[0, 1, 2, 3, 4], dead_rows=None)
+print("reshard-dead-rows-ok")
+""", n_devices=8)
+
+
+def test_fleet_engine_mesh_fault_drain_zero_lost(multidevice):
+    """End to end on a real mesh: a device loss mid-flight rebuilds the
+    serving topology on a healthy_mesh with fewer rows (via the
+    monitor's prober) and the drain still finishes every request."""
+    multidevice("""
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke
+from repro.models import build
+from repro.serve.engine import Request
+from repro.serve.faults import FaultEvent, FaultSchedule
+from repro.serve.fleet import FleetConfig, FleetEngine
+from repro.utils.compat import make_mesh
+
+cfg = dataclasses.replace(get_smoke("tinyllama-1.1b"), dtype=jnp.float32)
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+mesh = make_mesh((4,), ("data",))
+fc = FleetConfig(mode="continuous", n_rows=4, prefill_rows=1,
+                 slots_per_row=2, max_len=64, prefill_chunk=16, min_rows=2,
+                 faults=FaultSchedule((FaultEvent(4, "device_loss", rows=1),)))
+fe = FleetEngine(model, params, fc, mesh=mesh)
+rng = np.random.default_rng(0)
+for i in range(6):
+    fe.submit(Request(uid=i, prompt=rng.integers(0, 100, 5 + i % 3).astype(np.int32),
+                      max_new_tokens=5))
+fe.drain()
+assert fe.fault_log, "fault never fired"
+assert fe.n_rows == 3
+assert fe.graph is not None
+assert fe.graph.gmesh.mesh.shape["data"] == 3
+assert sorted(r.uid for r in fe.finished) == list(range(6))
+print("mesh-fault-ok")
+""", n_devices=8)
