@@ -1,0 +1,387 @@
+"""Fig. 17 (beyond-paper): SpecGraph — speculative draft->verify
+decoding vs target-only decode, over draft agreement x block length k.
+
+Mechanism on smoke weights: the target is the `qwen2.5-3b` smoke
+variant; the DRAFT is the SAME weights perturbed by ``eps * N(0, 1)``
+per float leaf. ``eps`` is the acceptance-rate dial — eps=0 agrees
+with the target everywhere (acceptance 1.0), larger eps degrades
+agreement smoothly — with none of the cost of distilling a real draft,
+and it leaves the correctness contract exact: greedy speculative
+streams must be BITWISE-identical to target-only greedy at every
+sweep point regardless of what the draft proposes.
+
+Methodology (DESIGN.md §8 / §15, the fig14 x fig15 hybrid): the
+engines really run — per-uid token streams, acceptance counts, KV
+block accounting all come from the jitted smoke engines — and the
+PERF claim is priced on the roofline-accounted virtual clock at PAPER
+scale. One compiled smoke program per phase (target decode step,
+draft decode step, width-(k+1) verify forward) is HLO-accounted
+(`utils.hloanalyze.analyze`), its FLOPs / HBM bytes scaled by the
+paper-config / smoke-config active-param ratio (decode cost is
+weight-streaming dominated, so it scales with the parameter bytes),
+and `utils.roofline.from_dryrun` turns each into a per-step time for
+the paper pair: `qwen2.5-3b` target, `qwen1.5-0.5b` draft (~6.5x
+parameter ratio). The spec engine's tick trace (n draft sub-steps +
+one verify each) and the baseline's (one decode step per tick) are
+summed under those prices; both engines emit the SAME decode tokens
+(bitwise parity), so the decode-throughput speedup is T_base / T_spec.
+Prefill work is identical on both sides and excluded from both clocks.
+
+Claimed (asserted):
+  * >= SPEC_GATE (1.5x) decode tokens/s at the paper-scale pair for
+    the headline point (eps = 1e-4, k = 4, acceptance ~0.9) — at
+    matched output quality, where "matched" is bitwise, not a proxy
+    metric;
+  * greedy stream parity vs the target-only engine at EVERY point;
+  * zero leaked KV blocks after drain in BOTH stores (target rollback
+    + draft rollback + retire leave refcounts exact);
+  * acceptance falls monotonically as eps rises, and emitted tokens
+    per verify step track acceptance the same way.
+
+Run:  PYTHONPATH=src python benchmarks/fig17_spec.py [--quick]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_REPO, os.path.join(_REPO, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.util import csv_row
+
+LAST: dict = {}
+
+TARGET = "qwen2.5-3b"
+DRAFT = "qwen1.5-0.5b"
+MAX_LEN = 96
+SLOTS = 4
+BLOCK_SIZE = 8  # small blocks: every rollback exercises a partial block
+N_REQUESTS = 12
+MAX_NEW = 14
+SPEC_GATE = 1.5  # paper-scale decode tokens/s win the headline must clear
+HEADLINE = (1e-4, 4)  # (eps, k): acceptance ~0.9
+EPS_SWEEP = (0.0, 1e-4, 1e-3, 3e-3)
+EPS_SWEEP_QUICK = (1e-4, 3e-3)
+K_SWEEP = (2, 4, 6)
+K_SWEEP_QUICK = (4,)
+
+
+def _noised(params, eps: float, key):
+    """Draft = target params + eps * N(0, 1) per float leaf."""
+    import jax
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, [
+        leaf + eps * jax.random.normal(k, leaf.shape, leaf.dtype)
+        if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf
+        for leaf, k in zip(leaves, keys)
+    ])
+
+
+def _requests(vocab: int):
+    from repro.serve import Request
+
+    rng = np.random.RandomState(0)
+    return [
+        Request(uid=u, prompt=rng.randint(1, vocab, rng.randint(4, 20))
+                .astype(np.int32), max_new_tokens=MAX_NEW)
+        for u in range(N_REQUESTS)
+    ]
+
+
+def _kv_spec():
+    from repro.serve import KVSpec
+
+    return KVSpec(kind="paged", block_size=BLOCK_SIZE)
+
+
+def _drive_base(model, params) -> dict:
+    """Target-only continuous engine on the shared request set: the
+    reference streams and the baseline decode-tick count."""
+    from repro.serve import EngineConfig, make_engine
+
+    eng = make_engine(model, params, EngineConfig(
+        max_batch=SLOTS, max_len=MAX_LEN, mode="continuous", kv=_kv_spec()))
+    for r in _requests(model.cfg.vocab_size):
+        eng.submit(dataclasses.replace(r, out_tokens=[]))
+    decode_ticks = 0
+    while not eng.idle():
+        eng.step()
+        decode_ticks += bool(eng.last_tick["decode_batch"])
+        assert eng.tick < 2000, "baseline did not drain"
+    assert eng.kv.stats["blocks_in_use"] == 0, eng.kv.stats
+    return {
+        "decode_ticks": decode_ticks,
+        "tokens_out": eng.stats["tokens_out"],
+        "streams": {r.uid: list(r.out_tokens) for r in eng.finished},
+    }
+
+
+def _drive_spec(model, params, draft_params, k: int) -> dict:
+    """SpecEngine on the shared request set: streams, acceptance, the
+    (draft sub-steps, verify) tick trace, and the leak check."""
+    from repro.serve import SpecConfig, make_engine
+
+    eng = make_engine(
+        model, params,
+        SpecConfig(max_batch=SLOTS, max_len=MAX_LEN, kv=_kv_spec(), spec_k=k),
+        draft=(model, draft_params))
+    for r in _requests(model.cfg.vocab_size):
+        eng.submit(dataclasses.replace(r, out_tokens=[]))
+    trace = []  # (draft_sub_steps, verified) per tick
+    while not eng.idle():
+        eng.step()
+        trace.append((len(eng.last_tick["draft_batches"]),
+                      eng.last_tick["verify"] is not None))
+        assert eng.tick < 2000, "spec engine did not drain"
+    # rollback + retire leave nothing behind, in either store
+    leaks = (eng.kv.stats["blocks_in_use"], eng.draft_kv.stats["blocks_in_use"])
+    assert leaks == (0, 0), leaks
+    drafted = max(1, eng.stats["drafted"])
+    return {
+        "k": k,
+        "trace": trace,
+        "tokens_out": eng.stats["tokens_out"],
+        "verify_calls": eng.stats["verify_calls"],
+        "draft_steps": eng.stats["draft_steps"],
+        "acceptance": eng.stats["accepted"] / drafted,
+        "tokens_per_verify": eng.stats["tokens_out"]
+        / max(1, eng.stats["verify_calls"]),
+        "streams": {r.uid: list(r.out_tokens) for r in eng.finished},
+        "leaked_blocks": sum(leaks),
+    }
+
+
+# -- paper-scale roofline prices -------------------------------------------------
+
+
+def _paper_prices(model, params, ks) -> dict:
+    """Per-step times of the three serving phases at PAPER scale.
+
+    One compiled smoke program per phase; `hloanalyze` accounts its
+    FLOPs / HBM bytes; both are scaled by the paper/smoke active-param
+    ratio of the model that phase runs at paper scale (target for
+    decode + verify, draft for the draft step — the draft runs the
+    same smoke program here, its weights are just noised), and
+    `roofline.from_dryrun` prices the scaled program. Decode-class
+    steps are memory-bound, so the widths-(k+1) verify costs barely
+    more than a decode step while scoring k + 1 positions — the whole
+    speculative win."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get
+    from repro.serve import KVSpec
+    from repro.serve.kvstore import make_kvstore
+    from repro.utils import hloanalyze, roofline
+
+    smoke_params = model.cfg.active_param_count()
+    scale_t = get(TARGET).active_param_count() / smoke_params
+    scale_d = get(DRAFT).active_param_count() / smoke_params
+
+    dense = make_kvstore(model, SLOTS, MAX_LEN, KVSpec(), ragged=True)
+    c1 = model.init_cache(1, 32)
+    c1["pos"] = jnp.int32(32)
+    for slot in range(SLOTS):
+        dense.admit(slot, c1, 32)
+    view = dense.view(list(range(SLOTS)))
+    tok = jnp.zeros((SLOTS, 1), jnp.int32)
+
+    def accounted(lowered):
+        c = hloanalyze.analyze(lowered.compile().as_text())
+        return c.flops, c.bytes, c.coll_wire
+
+    def price(acct, scale: float, paper_params: int, positions: int) -> dict:
+        flops, bytes_, wire = acct
+        rl = roofline.from_dryrun(
+            {"flops": flops * scale, "bytes accessed": bytes_ * scale},
+            wire * scale,
+            model_flops=2.0 * paper_params * SLOTS * positions,
+            n_chips=1,
+        )
+        return {"step_time_s": rl.step_time_s, "roofline": rl.as_dict(),
+                "smoke_flops": flops, "smoke_bytes": bytes_, "scale": scale}
+
+    dec_acct = accounted(jax.jit(model.decode_step).lower(params, view, tok))
+    p_target, p_draft = (get(TARGET).active_param_count(),
+                         get(DRAFT).active_param_count())
+    out = {
+        "target_decode": price(dec_acct, scale_t, p_target, 1),
+        "draft_decode": price(dec_acct, scale_d, p_draft, 1),
+        "verify": {},
+        "param_ratio": p_target / p_draft,
+    }
+    verify = jax.jit(model.verify_step)
+    for k in sorted(set(ks)):
+        s = k + 1
+        chunk = jnp.zeros((SLOTS, s), jnp.int32)
+        n_new = jnp.full((SLOTS,), s, jnp.int32)
+        out["verify"][k] = price(
+            accounted(verify.lower(params, view, chunk, n_new)),
+            scale_t, p_target, s)
+    return out
+
+
+def _price_run(spec: dict, base: dict, prices: dict) -> dict:
+    """Sum the tick traces under the paper-scale per-step prices.
+
+    Both engines emitted the same decode tokens (parity is asserted
+    separately), so the decode-throughput speedup is T_base / T_spec."""
+    c_base = prices["target_decode"]["step_time_s"]
+    c_draft = prices["draft_decode"]["step_time_s"]
+    c_verify = prices["verify"][spec["k"]]["step_time_s"]
+    t_spec = sum(n_draft * c_draft + (c_verify if verified else 0.0)
+                 for n_draft, verified in spec["trace"])
+    t_base = base["decode_ticks"] * c_base
+    return {
+        "t_base_s": t_base,
+        "t_spec_s": t_spec,
+        "speedup": t_base / t_spec,
+        "base_tok_s": base["tokens_out"] / t_base,
+        "spec_tok_s": spec["tokens_out"] / t_spec,
+    }
+
+
+# -- report ---------------------------------------------------------------------
+
+
+def _report(quick: bool) -> list[str]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import build
+
+    cfg = dataclasses.replace(get_smoke(TARGET), dtype=jnp.float32)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    noise_key = jax.random.PRNGKey(1)
+
+    eps_sweep = EPS_SWEEP_QUICK if quick else EPS_SWEEP
+    k_sweep = K_SWEEP_QUICK if quick else K_SWEEP
+    head_eps, head_k = HEADLINE
+    assert head_eps in eps_sweep and head_k in k_sweep
+
+    prices = _paper_prices(model, params, k_sweep)
+    base = _drive_base(model, params)
+    out, points = [], {}
+
+    def run_point(eps: float, k: int) -> dict:
+        if (eps, k) in points:
+            return points[(eps, k)]
+        rec = _drive_spec(model, params, _noised(params, eps, noise_key), k)
+        # matched quality, bitwise: same uids, same token streams
+        assert rec["streams"] == base["streams"], (
+            f"greedy parity broken at eps={eps} k={k}")
+        rec.update(eps=eps, parity=True, **_price_run(rec, base, prices))
+        points[(eps, k)] = rec
+        out.append(csv_row(
+            f"fig17_eps{eps:g}_k{k}", rec["t_spec_s"] * 1e6,
+            acceptance=f"{rec['acceptance']:.3f}",
+            tok_per_verify=f"{rec['tokens_per_verify']:.2f}",
+            speedup=f"{rec['speedup']:.2f}",
+            parity=str(rec["parity"]),
+            leaked_blocks=str(rec["leaked_blocks"]),
+        ))
+        return rec
+
+    # eps sweep at the headline k: the acceptance dial
+    eps_points = [run_point(eps, head_k) for eps in eps_sweep]
+    # k sweep at the headline eps: the block-length dial
+    for k in k_sweep:
+        run_point(head_eps, k)
+
+    # acceptance (and with it the emitted tokens per verify step) must
+    # fall monotonically as the draft noise grows
+    accs = [p["acceptance"] for p in eps_points]
+    tpv = [p["tokens_per_verify"] for p in eps_points]
+    assert all(a >= b for a, b in zip(accs, accs[1:])), (eps_sweep, accs)
+    assert all(a >= b for a, b in zip(tpv, tpv[1:])), (eps_sweep, tpv)
+
+    head = points[HEADLINE]
+    assert head["speedup"] >= SPEC_GATE, (head["speedup"], SPEC_GATE)
+
+    claims = {
+        "headline": {"eps": head_eps, "k": head_k,
+                     "acceptance": head["acceptance"],
+                     "speedup": head["speedup"],
+                     "spec_tok_s": head["spec_tok_s"],
+                     "base_tok_s": head["base_tok_s"]},
+        "gate": SPEC_GATE,
+        "greedy_bitwise_parity": True,
+        "leaked_blocks": max(p["leaked_blocks"] for p in points.values()),
+        "acceptance_monotone_in_eps": True,
+        "paper_pair": {"target": TARGET, "draft": DRAFT,
+                       "param_ratio": prices["param_ratio"]},
+    }
+    LAST.clear()
+    LAST.update({
+        "figure": "fig17_spec",
+        "quick": quick,
+        "slots": SLOTS,
+        "max_len": MAX_LEN,
+        "block_size": BLOCK_SIZE,
+        "n_requests": N_REQUESTS,
+        "prices": prices,
+        "baseline": {k: v for k, v in base.items() if k != "streams"},
+        "sweep": [
+            {k: v for k, v in rec.items() if k not in ("streams", "trace")}
+            for rec in points.values()
+        ],
+        "claims": claims,
+    })
+    out.append(csv_row(
+        "fig17_claims", 0.0,
+        speedup=f"{claims['headline']['speedup']:.2f}",
+        gate=f"{SPEC_GATE:.1f}",
+        acceptance=f"{claims['headline']['acceptance']:.3f}",
+        param_ratio=f"{prices['param_ratio']:.1f}",
+        parity=str(claims["greedy_bitwise_parity"]),
+        leaked_blocks=str(claims["leaked_blocks"]),
+    ))
+    return out
+
+
+def run(mesh) -> list[str]:
+    return _report(quick=False)
+
+
+def run_quick(mesh) -> list[str]:
+    """CI smoke: two eps points, headline k only."""
+    return _report(quick=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--quick", action="store_true")
+    parser.add_argument(
+        "--json",
+        default=os.path.join(_REPO, "BENCH_spec.json"),
+        help="where to write the SpecGraph record",
+    )
+    args = parser.parse_args()
+
+    print("name,us_per_call,derived")
+    for line in (run_quick if args.quick else run)(None):
+        print(line)
+    from benchmarks.run import serving_phase_costs
+
+    LAST["phase_cost"] = serving_phase_costs()
+    with open(args.json, "w") as f:
+        json.dump(LAST, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    print(f"# wrote {args.json}", file=sys.stderr)

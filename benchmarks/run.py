@@ -24,8 +24,9 @@ the structured ChannelWire record from ``fig11_channel``),
 ``fig13_fleet``), ``BENCH_serve_continuous.json`` (the
 ContinuousServe record from ``fig14_continuous``) and
 ``BENCH_decode.json`` (the PagedDecode record from
-``fig15_decode_kernel``) and ``BENCH_faults.json`` (the FaultFleet
-record from ``fig16_faults``). Before overwriting, EVERY committed
+``fig15_decode_kernel``), ``BENCH_faults.json`` (the FaultFleet
+record from ``fig16_faults``) and ``BENCH_spec.json`` (the SpecGraph
+record from ``fig17_spec``). Before overwriting, EVERY committed
 ``BENCH_*.json`` is read back and its wall-seconds entries
 (``seconds`` / ``wall_s`` / ``total_s`` leaves, wherever they sit) are
 diffed — a WARNING flags any entry both >20% and >0.25s slower than
@@ -33,7 +34,7 @@ the baseline, so the perf trajectory is actually consumed, not just
 written. By default
 regressions never fail the run (containers differ); ``--strict`` turns
 them into a nonzero exit (the CI quick sweep runs strict). CI uploads
-all six JSONs as artifacts.
+all seven JSONs as artifacts.
 
 Every record additionally carries a ``phase_cost`` section: per
 serving phase (prefill, dense decode, paged-kernel decode) the
@@ -214,6 +215,9 @@ def main() -> None:
     parser.add_argument("--faults-json",
                         default=os.path.join(_REPO, "BENCH_faults.json"),
                         help="where to write the FaultFleet record")
+    parser.add_argument("--spec-json",
+                        default=os.path.join(_REPO, "BENCH_spec.json"),
+                        help="where to write the SpecGraph record")
     args = parser.parse_args()
 
     import jax
@@ -233,6 +237,7 @@ def main() -> None:
         fig14_continuous,
         fig15_decode_kernel,
         fig16_faults,
+        fig17_spec,
         roofline_table,
     )
 
@@ -250,6 +255,7 @@ def main() -> None:
         "BENCH_serve_continuous": read_baseline(args.serve_json),
         "BENCH_decode": read_baseline(args.decode_json),
         "BENCH_faults": read_baseline(args.faults_json),
+        "BENCH_spec": read_baseline(args.spec_json),
     }
 
     mesh = make_mesh((8,), ("data",))
@@ -259,7 +265,8 @@ def main() -> None:
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
                 fig12_adaptive, fig13_fleet, fig14_continuous,
-                fig15_decode_kernel, fig16_faults, roofline_table):
+                fig15_decode_kernel, fig16_faults, fig17_spec,
+                roofline_table):
         runner = mod.run
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
@@ -302,6 +309,7 @@ def main() -> None:
         "BENCH_serve_continuous": (args.serve_json, fig14_continuous.LAST),
         "BENCH_decode": (args.decode_json, fig15_decode_kernel.LAST),
         "BENCH_faults": (args.faults_json, fig16_faults.LAST),
+        "BENCH_spec": (args.spec_json, fig17_spec.LAST),
     }
     regressions = 0
     for name, (path, rec) in records.items():

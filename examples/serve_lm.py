@@ -22,6 +22,14 @@ paged KV store with the cross-tenant prefix cache. Every combination
 builds through the one `make_engine(model, params, cfg)` entry point —
 the driver below never branches on engine type.
 
+`--spec` serves through the speculative draft->verify engine
+(repro/serve/spec.py): a small zoo draft model (`--draft NAME`) streams
+`--spec-k`-token blocks to the target model, which scores all k
+positions in one batched verify forward and rolls the KV caches back to
+the accept point. Greedy speculative streams are bitwise-identical to
+target-only greedy; the speedup is the accepted-tokens-per-verify-step
+multiple printed at the end.
+
 `--fail-at TICK` / `--preempt-at TICK` inject a fault mid-replay
 (repro/serve/faults.py): a device loss orphans the dying rows'
 in-flight requests (re-admitted at their original arrival ticks —
@@ -33,6 +41,7 @@ Run:  PYTHONPATH=src python examples/serve_lm.py [--disagg]
       PYTHONPATH=src python examples/serve_lm.py --scenario bursty-prefix --paged
       PYTHONPATH=src python examples/serve_lm.py --scenario bursty-multitenant --adapt
       PYTHONPATH=src python examples/serve_lm.py --scenario bursty-multitenant --fail-at 12
+      PYTHONPATH=src python examples/serve_lm.py --spec --spec-k 4 --paged
 """
 import argparse
 import time
@@ -91,6 +100,13 @@ def main():
     ap.add_argument("--paged", action="store_true",
                     help="paged KV blocks + cross-tenant prefix cache "
                          "(implies --continuous)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative draft->verify decoding "
+                         "(implies --continuous)")
+    ap.add_argument("--spec-k", type=int, default=4, metavar="K",
+                    help="draft block length per verify step (with --spec)")
+    ap.add_argument("--draft", default="qwen1.5-0.5b",
+                    help="zoo name of the draft model (with --spec)")
     ap.add_argument("--fail-at", type=int, default=None, metavar="TICK",
                     help="lose --fault-rows rows WITHOUT notice at TICK "
                          "(device loss; orphans re-admitted, zero lost)")
@@ -117,7 +133,16 @@ def main():
     kv = (KVSpec(kind="paged", block_size=16, prefix_cache=True)
           if args.paged else KVSpec())
 
-    if args.adapt or faulted:
+    if args.spec:
+        if args.disagg or args.adapt or faulted:
+            raise SystemExit("--spec composes with --paged/--scenario, not "
+                             "--disagg/--adapt/fault flags")
+        from repro.serve import SpecConfig
+
+        engine_cfg = SpecConfig(max_batch=4, max_len=160, mode="continuous",
+                                kv=kv, spec_k=args.spec_k, draft=args.draft)
+        mode = f"speculative k={args.spec_k}"
+    elif args.adapt or faulted:
         if sc is None:
             raise SystemExit("--adapt / fault injection need --scenario")
         from repro.serve import FleetConfig
@@ -170,6 +195,16 @@ def main():
     if args.paged:
         print(f"prefix cache: {eng.stats['prefix_hit_tokens']} hit tokens, "
               f"{eng.stats['prefill_skips']} prefill skips")
+    if args.spec:
+        acc = eng.ledger.acceptance_rate()
+        verify_calls = max(1, eng.stats["verify_calls"])
+        print(f"speculative: acceptance rate {acc:.2f}, "
+              f"rows draft/verify = {eng.draft_rows}/"
+              f"{eng.n_rows - eng.draft_rows}, "
+              f"{eng.stats['tokens_out'] / verify_calls:.2f} "
+              f"tokens per verify step "
+              f"(drafted {eng.stats['drafted']}, "
+              f"accepted {eng.stats['accepted']})")
     if args.adapt:
         print(f"regroups: {eng.regroups} (deferred {eng.deferrals}), final "
               f"prefill rows {eng.prefill_rows}/{eng.cfg.n_rows}, "

@@ -91,6 +91,13 @@ class ServiceGraph:
     # ``graph.channel(src, dst)`` — train grads, KV migration, mapreduce
     # elements — gets the codec + chunked schedule with no extra plumbing.
     wires: tuple[tuple[tuple[str, str], WireSpec], ...] = ()
+    # (a, b) pairs declared with ``bidirectional=``: both directed edges
+    # exist and `reverse_channel` resolves the return path. The MPI
+    # Streams reference (1708.01306) allows a stream's endpoints to swap
+    # producer/consumer roles; here each direction keeps its own
+    # StreamChannel (and its own wire), paired by this declaration —
+    # draft blocks flow a->b, accept/correction payloads flow b->a.
+    bidir: tuple[tuple[str, str], ...] = ()
 
     # -- construction -----------------------------------------------------
     @staticmethod
@@ -98,26 +105,39 @@ class ServiceGraph:
         mesh,
         *,
         stages: Mapping[str, float],
-        edges: Sequence[tuple[str, str]],
+        edges: Sequence[tuple[str, str]] = (),
         axis: str = "data",
         min_compute_rows: int = 1,
         wire: Mapping[tuple[str, str], "WireSpec | str"] | None = None,
+        bidirectional: Sequence[tuple[str, str]] = (),
     ) -> "ServiceGraph":
         """Resolve fractional per-stage alphas onto one `GroupedMesh`
         and validate the declared edges against the resulting groups."""
         gmesh = GroupedMesh.build(
             mesh, axis=axis, services=dict(stages), min_compute_rows=min_compute_rows
         )
-        return ServiceGraph.from_grouped(gmesh, edges, wire=wire)
+        return ServiceGraph.from_grouped(gmesh, edges, wire=wire,
+                                         bidirectional=bidirectional)
 
     @staticmethod
     def from_grouped(
         gmesh: GroupedMesh,
-        edges: Sequence[tuple[str, str]],
+        edges: Sequence[tuple[str, str]] = (),
         wire: Mapping[tuple[str, str], "WireSpec | str"] | None = None,
+        bidirectional: Sequence[tuple[str, str]] = (),
     ) -> "ServiceGraph":
         """Adopt an existing `GroupedMesh` (migration path for code that
-        still builds its own) and declare the channels on it."""
+        still builds its own) and declare the channels on it. Each
+        ``bidirectional`` pair (a, b) declares BOTH directed edges — a
+        forward stream plus its return path (`reverse_channel`)."""
+        edges = [tuple(e) for e in edges]
+        for a, b in bidirectional:
+            for e in ((a, b), (b, a)):
+                if e in edges:
+                    raise ValueError(
+                        f"edge {e!r} declared both directed and bidirectional"
+                    )
+                edges.append(e)
         seen = set()
         for src, dst in edges:
             if src == dst:
@@ -138,8 +158,9 @@ class ServiceGraph:
             wires.append((tuple(edge), WireSpec.of(spec)))
         return ServiceGraph(
             gmesh=gmesh,
-            edges=tuple((s, d) for s, d in edges),
+            edges=tuple(edges),
             wires=tuple(wires),
+            bidir=tuple((a, b) for a, b in bidirectional),
         )
 
     # -- regrouping (the adaptive loop's actuator) -------------------------
@@ -174,6 +195,21 @@ class ServiceGraph:
     # -- queries ----------------------------------------------------------
     def has_edge(self, src: str, dst: str) -> bool:
         return (src, dst) in self.edges
+
+    def is_bidirectional(self, src: str, dst: str) -> bool:
+        return (src, dst) in self.bidir or (dst, src) in self.bidir
+
+    def reverse_channel(self, src: str, dst: str) -> StreamChannel:
+        """The return path of a bidirectional edge: the `StreamChannel`
+        flowing ``dst -> src``. Requires the pair to have been declared
+        with ``bidirectional=`` — a plain directed edge has no return
+        path, and asking for one is a topology bug, not a fallback."""
+        if not self.is_bidirectional(src, dst):
+            raise KeyError(
+                f"edge ({src!r}, {dst!r}) is not bidirectional; "
+                f"declared pairs: {list(self.bidir)}"
+            )
+        return self.channel(dst, src)
 
     def wire_spec(self, src: str, dst: str) -> WireSpec:
         """The wire declaration of an edge (identity if undeclared)."""

@@ -455,6 +455,118 @@ def recommend_disaggregation(
     )
 
 
+# -- serving specialization: speculative decoding (draft -> verify) -------------
+#
+# Speculative decoding is a second two-model instance of Eq. 4': Op0 =
+# the draft model's k sequential decode steps (small, latency-bound),
+# Op1 = the target model's single batched verify of all k positions
+# (large, one forward). Splitting the fleet into a draft group of r_d
+# rows and a verify group of N - r_d rows, the two stages pipeline
+# (the draft streams block t+1 while the verify scores block t), so the
+# steady-state tick cost is Eq. 4's service-side MAX:
+#
+#   T_tick(k, r_d)  = max( k * C_d / r_d , C_v(k) / (N - r_d) )
+#   T_token(k, r_d) = T_tick / E[tokens](a, k)                  (Eq. 4'')
+#
+# where E[tokens](a, k) = sum_{i=0..k} a^i is the expected emitted
+# tokens per verify under i.i.d. per-token acceptance a (1..k accepted
+# drafts + 1 corrected-or-bonus token, a geometric truncation). The
+# acceptance rate couples the split to the k choice: for a fixed k the
+# balanced split r_d* = N * kC_d / (kC_d + C_v) is acceptance-free,
+# but k* itself grows with a (high agreement -> long blocks pay off),
+# which drags r_d* with it — the monotone draft-shrink-on-low-
+# acceptance behaviour the adapt loop (serve/spec.py) relies on and
+# tests/test_spec.py pins.
+
+
+def spec_expected_tokens(acceptance: float, k: int) -> float:
+    """E[tokens emitted per verify tick]: 1 + a + a^2 + ... + a^k.
+
+    Every tick emits at least one token (the corrected/bonus sample) —
+    the distribution-preserving guarantee — and each of the k draft
+    positions survives with probability a^i of an all-accept prefix.
+    """
+    if not 0.0 <= acceptance <= 1.0:
+        raise ValueError(f"acceptance must be in [0,1], got {acceptance}")
+    if k < 0:
+        raise ValueError(f"k must be >= 0, got {k}")
+    return sum(acceptance**i for i in range(k + 1))
+
+
+def t_spec_serve(
+    c_draft: float,
+    c_verify: Callable[[int], float],
+    acceptance: float,
+    k: int,
+    draft_rows: int,
+    n_rows: int,
+    pipelined: bool = True,
+) -> float:
+    """Eq. 4'' seconds per emitted token.
+
+    ``c_draft`` is one draft decode step on one row; ``c_verify(k)``
+    one target forward scoring a k+1-wide chunk on one row (so
+    ``c_verify(0)`` is a plain target decode step — the target-only
+    baseline's cost). ``pipelined=False`` gives the sequential
+    (single-group) form — the sum instead of the max — for engines
+    that run draft and verify on the same rows."""
+    if not 1 <= draft_rows < n_rows:
+        raise ValueError(f"draft_rows must be in [1, {n_rows - 1}], got {draft_rows}")
+    draft_side = k * c_draft / draft_rows
+    verify_side = c_verify(k) / (n_rows - draft_rows)
+    tick = max(draft_side, verify_side) if pipelined else draft_side + verify_side
+    return tick / spec_expected_tokens(acceptance, k)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecPlan:
+    """Output of recommend_spec_split: a joint (k, row-split) choice."""
+
+    k: int
+    draft_rows: int
+    verify_rows: int
+    t_per_token: float
+    expected_tokens: float  # per verify tick, at the planned k
+    speedup: float  # vs target-only decode on all n_rows
+
+
+def recommend_spec_split(
+    c_draft: float,
+    c_verify: Callable[[int], float],
+    acceptance: float,
+    n_rows: int,
+    k_max: int = 8,
+    pipelined: bool = True,
+) -> SpecPlan:
+    """Joint argmin of Eq. 4'' over (k, draft_rows).
+
+    The spec analog of `recommend_allocation`: exhaustive over the
+    small integer grid (k in 1..k_max, r_d in 1..N-1). Low acceptance
+    pushes k* down (long draft blocks mostly get thrown away), and the
+    balanced split follows k* down — fewer draft rows, more verify
+    rows. ``speedup`` compares against all N rows running target-only
+    decode (cost ``c_verify(0)`` per token per row)."""
+    if n_rows < 2:
+        raise ValueError(f"need >= 2 rows to split, got {n_rows}")
+    best: SpecPlan | None = None
+    base = c_verify(0) / n_rows  # target-only seconds per token
+    for k in range(1, k_max + 1):
+        for r_d in range(1, n_rows):
+            t = t_spec_serve(c_draft, c_verify, acceptance, k, r_d, n_rows,
+                             pipelined=pipelined)
+            if best is None or t < best.t_per_token:
+                best = SpecPlan(
+                    k=k,
+                    draft_rows=r_d,
+                    verify_rows=n_rows - r_d,
+                    t_per_token=t,
+                    expected_tokens=spec_expected_tokens(acceptance, k),
+                    speedup=base / t,
+                )
+    assert best is not None
+    return best
+
+
 # -- Sec. II-E suitability criteria ---------------------------------------------
 
 @dataclasses.dataclass(frozen=True)

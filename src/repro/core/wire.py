@@ -363,6 +363,43 @@ class WirePacker:
         return total
 
 
+# ---------------------------------------------------------------------------
+# speculative-decoding payloads (the bidirectional draft<->verify edge)
+# ---------------------------------------------------------------------------
+#
+# The forward direction carries a draft block (token ids + per-token
+# draft probabilities); the return direction carries the verify group's
+# verdict (accept counts + the corrected/bonus token). Both are plain
+# pytrees so they ride any declared wire: the int32 leaves pass every
+# codec bit-exactly (codecs gate on floating dtypes), and the f32 draft
+# probs tolerate lossy codecs because rejection sampling only *compares*
+# against them — a bf16 wire changes acceptance slightly, never
+# correctness (the corrected token is always drawn from the target).
+
+
+def make_draft_payload(tokens: jax.Array, probs: jax.Array) -> dict:
+    """Draft block: ``tokens`` (B, k) int32 draft ids, ``probs`` (B, k)
+    f32 draft probabilities of those ids (q(d_i))."""
+    return {"tokens": tokens.astype(jnp.int32), "probs": probs.astype(jnp.float32)}
+
+
+def split_draft_payload(payload: dict) -> tuple[jax.Array, jax.Array]:
+    return payload["tokens"], payload["probs"]
+
+
+def make_accept_payload(accepts: jax.Array, corrected: jax.Array) -> dict:
+    """Verify verdict: ``accepts`` (B,) int32 accepted-draft counts
+    (0..k), ``corrected`` (B,) int32 token emitted after the accepted
+    prefix (the rejection correction, or the bonus token on full
+    accept)."""
+    return {"accepts": accepts.astype(jnp.int32),
+            "corrected": corrected.astype(jnp.int32)}
+
+
+def split_accept_payload(payload: dict) -> tuple[jax.Array, jax.Array]:
+    return payload["accepts"], payload["corrected"]
+
+
 def _wire_dtype(dtype):
     """Dtype a leaf travels as: itself, except bool -> uint8 (collectives
     over bool are not portable; uint8 round-trips exactly)."""
@@ -395,4 +432,8 @@ __all__ = [
     "init_residual",
     "is_int8_payload",
     "leaf_encoded_bytes",
+    "make_accept_payload",
+    "make_draft_payload",
+    "split_accept_payload",
+    "split_draft_payload",
 ]

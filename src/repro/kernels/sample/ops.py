@@ -16,24 +16,33 @@ import functools
 import jax
 
 from repro.kernels.runtime import on_tpu
-from repro.kernels.sample.ref import sample_last_ref
+from repro.kernels.sample.ref import sample_last_ref, sample_last_seeded_ref
 from repro.kernels.sample.sample import argmax_last_kernel
 
 
+# `key` is a traced PRNG key array, NOT static — keys change every draft
+# step and hashing them into the jit cache would recompile per step.
 @functools.partial(jax.jit, static_argnames=("k", "impl", "interpret"))
 def sample_last(
     logits: jax.Array,  # (B, S, V)
     *,
     k: int = 1,
+    key: jax.Array | None = None,
     impl: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Greedy (k=1 -> (B,) int32) or top-k (-> (B, k) int32) sampling
-    of the last position."""
+    of the last position. With ``key=`` (k=1 only): seeded categorical
+    over the last-position logits — the deterministic draw rejection
+    sampling in serve/spec.py replays under a fixed seed."""
     if impl is None:
         impl = "kernel" if on_tpu() else "ref"
     if impl not in ("kernel", "ref"):
         raise ValueError(f"unknown impl {impl!r} (use 'kernel', 'ref' or None)")
+    if key is not None:
+        if k != 1:
+            raise ValueError("seeded sampling (key=) requires k=1")
+        return sample_last_seeded_ref(logits, key)
     if impl == "kernel" and k == 1:
         return argmax_last_kernel(logits[:, -1], interpret=interpret)
     return sample_last_ref(logits, k)

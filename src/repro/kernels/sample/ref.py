@@ -23,4 +23,15 @@ def sample_last_ref(logits: jax.Array, k: int = 1) -> jax.Array:
     return idx.astype(jnp.int32)
 
 
-__all__ = ["sample_last_ref"]
+def sample_last_seeded_ref(logits: jax.Array, key: jax.Array) -> jax.Array:
+    """Seeded categorical over the last position: (B, S, V) + PRNG key
+    -> (B,) int32 sampled ids. `jax.random.categorical` is the Gumbel
+    trick over the raw logits — deterministic under a fixed key (ties
+    included: the Gumbel perturbation makes the argmax unique with
+    probability one, and identical key + logits reproduce the identical
+    perturbation, which is what makes speculative rejection sampling
+    replayable; tests/test_spec.py::test_seeded_sampling_ties)."""
+    return jax.random.categorical(key, logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+__all__ = ["sample_last_ref", "sample_last_seeded_ref"]

@@ -290,6 +290,49 @@ def attention_decode(
     return out.reshape(b, 1, h, hd)
 
 
+def attention_verify(
+    q: jax.Array,  # (B, S, H, hd) — one chunk of draft positions per slot
+    k_cache: jax.Array,  # (B, Sc, Kv*hd) flattened layout
+    v_cache: jax.Array,
+    n_kv: int,
+    valid_len: jax.Array,  # (B, S) per-chunk-position live lengths
+    window: jax.Array | int,
+    softmax_scale: float,
+) -> jax.Array:
+    """`attention_decode` over a whole speculative chunk at once.
+
+    Chunk position ``j`` of slot ``b`` attends the cache prefix
+    ``[0, valid_len[b, j])`` — the verify step writes the chunk's K/V
+    first, then every position sees exactly the prefix the sequential
+    decode step would have seen, with identical masking (`NEG_INF` into
+    the same softmax/weighted-sum reductions). That per-element identity
+    is what carries the engines' bitwise decode contract over to the
+    batched verify (tests/test_spec.py::test_verify_matches_sequential).
+    """
+    b, sq, h, hd = q.shape
+    s = k_cache.shape[1]
+    g = h // n_kv
+    # head idx = kv_idx * g + group_idx (matches _expand_kv's jnp.repeat)
+    qg = q.reshape(b, sq, n_kv, g, hd)
+    kc = k_cache.reshape(b, s, n_kv, hd)
+    vc = v_cache.reshape(b, s, n_kv, hd)
+    logits = (
+        jnp.einsum("bjkgd,bskd->bjkgs", qg, kc).astype(jnp.float32)
+        * softmax_scale
+    )
+    pos = jnp.arange(s)
+    valid = pos[None, None, :] < valid_len[:, :, None]
+    window = jnp.asarray(window)
+    in_window = (window <= 0) | (
+        pos[None, None, :] >= valid_len[:, :, None] - window
+    )
+    ok = valid & in_window
+    logits = jnp.where(ok[:, :, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bjkgs,bskd->bjkgd", probs, vc)
+    return out.reshape(b, sq, h, hd)
+
+
 # -- MLPs --------------------------------------------------------------------------
 
 def init_mlp(key, d_model: int, d_ff: int, kind: str, bias: bool = False) -> Params:

@@ -35,6 +35,11 @@ class Model:
     # (logits, rows_k, rows_v); None when the family can't run it
     # (SSM/hybrid recurrent state, enc-dec cross caches)
     decode_step_paged: Callable[[Params, dict, jax.Array], tuple] | None = None
+    # speculative verify: (params, cache, tokens (B,S), n_new (B,)) ->
+    # (logits (B,S,V), cache) — one batched forward scoring a whole
+    # draft chunk, bitwise the sequential decode (serve/spec.py); same
+    # family gate as the paged decode
+    verify_step: Callable[[Params, dict, jax.Array, jax.Array], tuple] | None = None
 
 
 def _frontend_key(cfg) -> str | None:
@@ -84,12 +89,16 @@ def _build_lm(cfg) -> Model:
         return transformer.decode_step_lm(cfg, params, cache, token)
 
     decode_step_paged = None
+    verify_step = None
     if cfg.family != "ssm" and not cfg.hybrid:
         def decode_step_paged(params, pview, token):
             return transformer.decode_step_paged_lm(cfg, params, pview, token)
 
+        def verify_step(params, cache, tokens, n_new):
+            return transformer.verify_step_lm(cfg, params, cache, tokens, n_new)
+
     return Model(cfg, init, loss, prefill, decode_step, init_cache,
-                 decode_step_paged)
+                 decode_step_paged, verify_step)
 
 
 def _build_encdec(cfg) -> Model:

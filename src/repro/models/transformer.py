@@ -413,6 +413,102 @@ def decode_step_lm(cfg, params: Params, cache: dict, token: jax.Array):
     return lm_logits(cfg, params, x), cache
 
 
+def verify_step_lm(cfg, params: Params, cache: dict, tokens: jax.Array,
+                   n_new: jax.Array):
+    """Score a whole speculative chunk in ONE batched forward.
+
+    ``tokens`` (B, S) int32 is each slot's chunk — its pending token
+    followed by the draft block; ``cache["pos"]`` must be the ragged
+    (B,) cursor vector and ``n_new`` (B,) says how many chunk positions
+    each slot really carries (1 <= n_new <= S; position ``j >= n_new``
+    is padding and writes nothing). Returns ``(logits (B, S, V), new
+    cache)`` with the chunk's K/V written at positions
+    ``pos .. pos+n_new-1`` and ``pos`` advanced by ``n_new``.
+
+    Equivalence contract: every per-position op is elementwise over the
+    chunk axis (embeds, norms, linears, rope) and the attention reduces
+    over the same masked cache prefix the sequential `decode_step_lm`
+    would see (`layers.attention_verify`), so the logits — and the
+    greedy stream built from them — are bitwise identical to running
+    the k+1 decode steps one by one. That identity is what turns k
+    sequential decode-weight reads into one, which is the entire
+    speculative-decoding win; it is asserted, not assumed
+    (tests/test_spec.py, benchmarks/fig17_spec.py).
+
+    Attention-only families (ragged cursors have no SSM rewind), like
+    the paged decode path.
+    """
+    if cfg.family == "ssm" or cfg.hybrid:
+        raise ValueError("verify step needs an attention-only cache")
+    if getattr(cache["pos"], "ndim", 0) != 1:
+        raise ValueError("verify step is ragged-only: cache['pos'] must be (B,)")
+    dtype = cfg.dtype
+    b, s_chunk = tokens.shape
+    x = layers.embed(params["embed"], tokens, dtype)  # (B, S, d)
+    pos = cache["pos"]  # (B,)
+    offs = jnp.arange(s_chunk, dtype=jnp.int32)
+    chunk_pos = pos[:, None].astype(jnp.int32) + offs[None, :]  # (B, S)
+    live = offs[None, :] < n_new[:, None]  # (B, S) real chunk positions
+    s_cache = cache["k"].shape[2]
+    # a cursor at/past the cache length writes nothing — the same
+    # convention the ragged decode lane write uses for free slots
+    write_pos = jnp.where(live, chunk_pos, s_cache)
+    if cfg.pos_kind == "sinusoidal":
+        emb = jax.vmap(jax.vmap(
+            lambda p: layers.sinusoidal_at(p, cfg.d_model)
+        ))(chunk_pos)
+        x = x + emb.astype(dtype)
+    windows = layer_windows_array(cfg)
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / np.sqrt(hd) if hd else 1.0
+
+    def body(x, inp):
+        p, window, slices = inp
+        h = layers.apply_norm(p["norm1"], x, cfg.norm_kind, cfg.norm_eps)
+        q = layers.linear(p["attn"]["wq"], h, dtype).reshape(
+            b, s_chunk, cfg.n_heads, hd)
+        kn = layers.linear(p["attn"]["wk"], h, dtype).reshape(
+            b, s_chunk, cfg.n_kv_heads, hd)
+        vn = layers.linear(p["attn"]["wv"], h, dtype)
+        if cfg.pos_kind == "rope":
+            q = layers.apply_rope(q, chunk_pos, cfg.rope_theta)
+            kn = layers.apply_rope(kn, chunk_pos, cfg.rope_theta)
+        # masked multi-lane write: chunk position j of slot i lands at
+        # chunk_pos[i, j]; padding positions target s_cache and the
+        # write lane is empty — value-for-value what j sequential
+        # ragged lane writes would have stored
+        lane = (
+            jnp.arange(s_cache)[None, None, :] == write_pos[:, :, None]
+        )  # (B, S, Sc)
+        krows = kn.reshape(b, s_chunk, cfg.d_kv).astype(slices["k"].dtype)
+        vrows = vn.reshape(b, s_chunk, cfg.d_kv).astype(slices["v"].dtype)
+        kcache = slices["k"]
+        vcache = slices["v"]
+        for j in range(s_chunk):
+            kcache = jnp.where(lane[:, j, :, None], krows[:, j, None], kcache)
+            vcache = jnp.where(lane[:, j, :, None], vrows[:, j, None], vcache)
+        attn = layers.attention_verify(
+            q, kcache, vcache, cfg.n_kv_heads, chunk_pos + 1, window, scale
+        )
+        attn = layers.linear(
+            p["attn"]["wo"], attn.reshape(b, s_chunk, cfg.d_q), dtype)
+        x = x + attn
+        h2 = layers.apply_norm(p["norm2"], x, cfg.norm_kind, cfg.norm_eps)
+        if cfg.n_experts:
+            mo, _ = moe.apply_moe(p["moe"], h2, cfg, dtype)
+            x = x + mo
+        else:
+            x = x + layers.apply_mlp(p["mlp"], h2, cfg.mlp_kind, dtype)
+        return x, {"k": kcache, "v": vcache}
+
+    slices_in = {"k": cache["k"], "v": cache["v"]}
+    x, new_slices = jax.lax.scan(body, x, (params["layers"], windows, slices_in))
+    cache["k"], cache["v"] = new_slices["k"], new_slices["v"]
+    cache["pos"] = pos + n_new.astype(pos.dtype)
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    return lm_logits(cfg, params, x), cache
+
+
 def decode_step_paged_lm(cfg, params: Params, pview: dict, token: jax.Array,
                          *, impl: str | None = None):
     """Paged-kernel decode step: attention reads the KV block pool

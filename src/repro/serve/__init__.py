@@ -40,6 +40,7 @@ from repro.serve.fleet import (
 )
 from repro.serve.kvstore import DenseKVStore, PagedKVStore, PrefixCache, make_kvstore
 from repro.serve.sched import FleetLedger, FleetScheduler
+from repro.serve.spec import SpecConfig, SpecEngine
 from repro.serve.traffic import (
     SCENARIOS,
     SLOClass,
@@ -72,6 +73,8 @@ __all__ = [
     "ServeConfig",
     "ServingCheckpointer",
     "ServingEngine",
+    "SpecConfig",
+    "SpecEngine",
     "TenantSpec",
     "TrafficScenario",
     "make_engine",

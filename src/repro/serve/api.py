@@ -142,21 +142,31 @@ class ServingEngine(Protocol):
         ...
 
 
-def make_engine(model, params, cfg: ServeConfig, sched=None, *, mesh=None, clock=None):
+def make_engine(model, params, cfg: ServeConfig, sched=None, *, mesh=None,
+                clock=None, draft=None):
     """Build the engine a config describes — the one entry point.
 
     `FleetConfig` -> `FleetEngine` (closed-loop disaggregated fleet;
-    ``mesh``/``clock`` forwarded), `DisaggConfig` -> `DisaggEngine`,
-    `EngineConfig` (or a bare `ServeConfig`) -> the colocated `Engine`.
+    ``mesh``/``clock`` forwarded), `SpecConfig` -> `SpecEngine`
+    (speculative draft/verify decoding; ``draft`` is an optional
+    ``(draft_model, draft_params)`` pair, otherwise the config's zoo
+    draft is built), `DisaggConfig` -> `DisaggEngine`, `EngineConfig`
+    (or a bare `ServeConfig`) -> the colocated `Engine`.
     """
     from repro.serve.disagg import DisaggConfig, DisaggEngine
     from repro.serve.engine import Engine, EngineConfig
     from repro.serve.fleet import FleetConfig, FleetEngine
+    from repro.serve.spec import SpecConfig, SpecEngine
 
     if isinstance(cfg, FleetConfig):
+        if draft is not None:
+            raise ValueError("draft is a SpecConfig-only knob")
         return FleetEngine(model, params, cfg, sched=sched, mesh=mesh, clock=clock)
-    if mesh is not None or clock is not None:
-        raise ValueError("mesh/clock are FleetConfig-only knobs")
+    if isinstance(cfg, SpecConfig):  # before EngineConfig: SpecConfig extends it
+        return SpecEngine(model, params, cfg, sched=sched, draft=draft,
+                          mesh=mesh, clock=clock)
+    if mesh is not None or clock is not None or draft is not None:
+        raise ValueError("mesh/clock/draft are FleetConfig/SpecConfig-only knobs")
     if isinstance(cfg, DisaggConfig):
         return DisaggEngine(model, params, cfg, sched=sched)
     if isinstance(cfg, EngineConfig):

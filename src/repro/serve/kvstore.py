@@ -99,6 +99,7 @@ class DenseKVStore:
         self.lens = np.zeros(slots, np.int64)
         self._mig = jax.jit(migrate_cache_into_slot)
         self._scatter = jax.jit(_dense_scatter_rows)
+        self._trunc = jax.jit(_dense_truncate_rows)
 
     # -- decode surface ----------------------------------------------------
     def view(self, active: Sequence[int] | None = None) -> dict:
@@ -122,6 +123,37 @@ class DenseKVStore:
             # write lane is empty, so advancing would only desync the
             # rope position between dense and paged runs
             self.lens[i] = min(self.lens[i] + 1, self.max_len)
+
+    def absorb_span(self, cache: dict, active: Sequence[int],
+                    n_new: Sequence[int]) -> None:
+        """Take back a *verify* step's cache: slot ``active[i]``
+        appended ``n_new[i]`` rows starting at its cursor in one batched
+        forward (serve/spec.py). Dense is the easy case — the verify
+        step wrote straight into the contiguous layout, so absorbing is
+        the same whole-dict replacement `absorb` does, plus a multi-row
+        cursor bump."""
+        if not self.ragged:
+            raise RuntimeError("absorb_span needs ragged mode (per-slot cursors)")
+        self.cache = {"k": cache["k"], "v": cache["v"],
+                      "pos": self.cache["pos"]}
+        for i, n in zip(active, n_new):
+            self.lens[i] = min(self.lens[i] + int(n), self.max_len)
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Roll a slot back to ``new_len`` tokens (speculative-decode
+        rejection): zero the rows past the new cursor — the ragged
+        write lane and the paged-vs-dense identity suite both assume
+        everything past a slot's cursor is bitwise zero — and rewind
+        the host length. No-op if the slot is already at or below
+        ``new_len``."""
+        new_len = int(new_len)
+        old = int(self.lens[slot])
+        if new_len >= old:
+            return
+        k, v = self._trunc(self.cache["k"], self.cache["v"],
+                           jnp.int32(slot), jnp.int32(new_len), jnp.int32(old))
+        self.cache = {"k": k, "v": v, "pos": self.cache["pos"]}
+        self.lens[slot] = new_len
 
     # -- paged-kernel surface ----------------------------------------------
     def kernel_view(self, active: Sequence[int] | None = None) -> dict:
@@ -391,12 +423,14 @@ class PagedKVStore:
                                  static_argnames=("block_size",))
             self._absorb = jax.jit(_absorb_rows_int8)
             self._scatter = jax.jit(_paged_scatter_rows_int8)
+            self._trunc_tail = jax.jit(_zero_block_tail_int8)
         else:
             self._gather = jax.jit(paged_gather_cache)
             self._fill = jax.jit(migrate_cache_into_blocks,
                                  static_argnames=("block_size",))
             self._absorb = jax.jit(_absorb_rows)
             self._scatter = jax.jit(_paged_scatter_rows)
+            self._trunc_tail = jax.jit(_zero_block_tail)
 
     # -- block accounting --------------------------------------------------
     def _alloc(self, n: int) -> list[int]:
@@ -491,6 +525,62 @@ class PagedKVStore:
                 )
         for i in active:
             self.lens[i] = min(self.lens[i] + 1, self.max_len)
+
+    def absorb_span(self, cache: dict, active: Sequence[int],
+                    n_new: Sequence[int]) -> None:
+        """Take back a *verify* step's cache: slot ``active[i]``
+        appended ``n_new[i]`` rows starting at its cursor
+        (serve/spec.py). The verify step wrote the chunk rows at view
+        positions ``lens[i] + j`` — exactly where `absorb` extracts
+        from once the cursor has advanced ``j`` times — so a span
+        absorb is ``max(n_new)`` plain absorbs over the still-live
+        subset, reusing the tail-block alloc/zeroing path unchanged
+        (which is what keeps the refcount accounting identical to
+        one-token decode)."""
+        counts = [int(n) for n in n_new]
+        for j in range(max(counts, default=0)):
+            self.absorb(cache, [i for i, n in zip(active, counts) if n > j])
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Roll a slot back to ``new_len`` tokens (speculative-decode
+        rejection): blocks wholly past the keep point are dereferenced
+        (table entry back to ``-1`` — "rollback truncates block
+        tables"), and the kept partial boundary block, if any, has its
+        rows past the cursor zeroed. That boundary block is always a
+        decode-appended *private* block (shared prefix chains cover
+        full prompt blocks only, and the cursor at tick start is past
+        the prompt), so the zeroing can't be seen by another reader —
+        asserted, not assumed. No-op at or below ``new_len``."""
+        new_len = int(new_len)
+        old = int(self.lens[slot])
+        if new_len >= old:
+            return
+        bs = self.block_size
+        first_dead = -(-new_len // bs)  # ceil: first block index fully rejected
+        for b_idx in range(first_dead, self.max_blocks):
+            b = int(self.tables[slot, b_idx])
+            if b > 0:
+                self._decref(b)
+                self.tables[slot, b_idx] = -1
+        rem = new_len % bs
+        if rem:
+            b = int(self.tables[slot, new_len // bs])
+            assert b > 0 and self.ref[b] == 1, (
+                f"truncate boundary block {b} must be private (ref="
+                f"{self.ref[b] if b > 0 else 'zero-block'})"
+            )
+            args = (jnp.int32(b), jnp.int32(rem))
+            if self.quantized:
+                (self.k_pool, self.v_pool, self.k_scale,
+                 self.v_scale) = self._trunc_tail(
+                    self.k_pool, self.v_pool, self.k_scale, self.v_scale,
+                    *args,
+                )
+            else:
+                self.k_pool, self.v_pool = self._trunc_tail(
+                    self.k_pool, self.v_pool, *args,
+                )
+        self.lens[slot] = new_len
 
     def _tail_slots(self, active: Sequence[int]):
         """Host half of a decode append: the slots whose cursor is still
@@ -784,6 +874,36 @@ def _paged_scatter_rows_int8(k_pool, v_pool, k_scale, v_scale, rows_k,
             v_pool.at[:, blocks, offs].set(vq),
             k_scale.at[:, blocks, offs].set(ks),
             v_scale.at[:, blocks, offs].set(vs))
+
+
+def _dense_truncate_rows(k_cache, v_cache, slot, lo, hi):
+    """Zero one slot's rows in [lo, hi) — speculative rollback keeps
+    the zeros-past-cursor invariant the lane write and the paged
+    identity suite depend on."""
+    pos = jnp.arange(k_cache.shape[2])
+    keep = (pos < lo) | (pos >= hi)
+    kslot = jnp.where(keep[:, None], k_cache[:, slot], 0)
+    vslot = jnp.where(keep[:, None], v_cache[:, slot], 0)
+    return k_cache.at[:, slot].set(kslot), v_cache.at[:, slot].set(vslot)
+
+
+def _zero_block_tail(k_pool, v_pool, block, start):
+    """Zero one block's rows in [start, block_size) — the kept partial
+    boundary block of a speculative rollback."""
+    keep = jnp.arange(k_pool.shape[2]) < start
+    kb = jnp.where(keep[:, None], k_pool[:, block], 0)
+    vb = jnp.where(keep[:, None], v_pool[:, block], 0)
+    return k_pool.at[:, block].set(kb), v_pool.at[:, block].set(vb)
+
+
+def _zero_block_tail_int8(k_pool, v_pool, k_scale, v_scale, block, start):
+    keep = jnp.arange(k_pool.shape[2]) < start
+    kb = jnp.where(keep[:, None], k_pool[:, block], 0)
+    vb = jnp.where(keep[:, None], v_pool[:, block], 0)
+    ks = jnp.where(keep, k_scale[:, block], 0)
+    vs = jnp.where(keep, v_scale[:, block], 0)
+    return (k_pool.at[:, block].set(kb), v_pool.at[:, block].set(vb),
+            k_scale.at[:, block].set(ks), v_scale.at[:, block].set(vs))
 
 
 def _dense_scatter_rows(k_cache, v_cache, rows_k, rows_v, slot_idx, positions):

@@ -293,13 +293,25 @@ class FleetLedger:
         prefill_work_rows: Sequence[float],
         decode_work_rows: Sequence[float],
         queue_depth: int,
+        accepted: int = 0,
+        drafted: int = 0,
+        accepted_by_tenant: Mapping[str, int] | None = None,
+        drafted_by_tenant: Mapping[str, int] | None = None,
     ) -> None:
+        """``accepted``/``drafted`` are the speculative-decode counters
+        (serve/spec.py): draft tokens proposed this tick and how many
+        the verify pass kept. Non-spec engines leave them at zero —
+        `acceptance_rate` then reports the sentinel, not a division."""
         self.ticks.append(
             {
                 "wall_s": float(wall_s),
                 "prefill_work_rows": list(map(float, prefill_work_rows)),
                 "decode_work_rows": list(map(float, decode_work_rows)),
                 "queue_depth": int(queue_depth),
+                "accepted": int(accepted),
+                "drafted": int(drafted),
+                "accepted_by_tenant": dict(accepted_by_tenant or {}),
+                "drafted_by_tenant": dict(drafted_by_tenant or {}),
             }
         )
         self.total_ticks += 1
@@ -327,6 +339,29 @@ class FleetLedger:
     def queue_depth_mean(self) -> float:
         return float(np.mean([t["queue_depth"] for t in self.ticks])) if self.ticks else 0.0
 
+    # sentinel for "no speculative sample in the window" — callers must
+    # branch on it, not average it (it is deliberately out of [0, 1])
+    NO_SAMPLE = -1.0
+
+    def acceptance_rate(self, tenant: str | None = None) -> float:
+        """Windowed draft-token acceptance rate, the live signal the
+        spec adapt loop splits draft/verify rows on. Over an empty
+        window, a verify-only warmup tick, or a tenant that never
+        drafted, returns ``NO_SAMPLE`` (-1.0) instead of raising a
+        ZeroDivisionError — the adapt bridge polls every tick and the
+        first tick of a run has no drafted tokens yet."""
+        if tenant is None:
+            acc = sum(t.get("accepted", 0) for t in self.ticks)
+            drf = sum(t.get("drafted", 0) for t in self.ticks)
+        else:
+            acc = sum(t.get("accepted_by_tenant", {}).get(tenant, 0)
+                      for t in self.ticks)
+            drf = sum(t.get("drafted_by_tenant", {}).get(tenant, 0)
+                      for t in self.ticks)
+        if drf <= 0:
+            return self.NO_SAMPLE
+        return acc / drf
+
     def snapshot(self) -> dict:
         """JSON-able per-tenant/per-class summary."""
         tenants = sorted({c.tenant for c in self.completions})
@@ -336,6 +371,7 @@ class FleetLedger:
             "tokens_out": self.tokens_out,
             "good_tokens": self.good_tokens(),
             "queue_depth_mean": self.queue_depth_mean(),
+            "acceptance_rate": self.acceptance_rate(),
             "ttft_p50": self.ttft_percentile(50),
             "ttft_p99": self.ttft_percentile(99),
             "latency_p50": self.latency_percentile(50),

@@ -1,0 +1,579 @@
+"""SpecGraph: speculative decoding as a draft -> verify service chain.
+
+The paper's decoupling strategy maps heterogeneous operations onto
+dedicated process groups chained by streams; speculative decoding is
+that shape applied to the decode loop itself. A small DRAFT model
+(`qwen1.5-0.5b` / `tinyllama-1.1b` class) runs k cheap sequential
+decode steps and streams the k-token block plus its per-token draft
+probabilities to the VERIFY group; the large target model scores all k
+positions in ONE batched forward (`models.transformer.verify_step_lm`
+— bitwise identical to k sequential decode steps, asserted by
+tests/test_spec.py), applies distribution-preserving accept/reject,
+and streams the accept count + corrected token back on the REVERSE
+edge — the first bidirectional `ServiceGraph` edge in the repo
+(`core/dataflow.py`), with `core/wire.py` carrying both payloads.
+
+Per verify tick a slot emits ``a + 1`` tokens (``a`` accepted drafts
+plus one corrected-or-bonus target token), so k sequential target
+steps collapse into one target forward whenever the draft agrees —
+the raw-speed lever Eq. 4'' in `core/perfmodel.py` models with a
+two-model service term.
+
+Protocol (greedy mode; `DESIGN.md` §15):
+
+  chunk   = [x, d_1 .. d_k]          x = the pending (last emitted) token
+  L_0..L_k = target logits of the chunk positions (one verify forward)
+  accept d_i  iff  d_i == argmax L_{i-1}   (leading run, length a)
+  emit    = d_1 .. d_a, then argmax L_a    (correction, or bonus on a == k)
+
+Greedy speculative streams are bitwise identical to target-only greedy
+BY CONSTRUCTION: every emitted token is an argmax of target logits
+computed on exactly the prefix the target-only engine would have, and
+the verify forward reproduces sequential decode bit-for-bit. Sampled
+mode replaces the argmax test with the standard rejection rule
+(accept with prob min(1, p/q), residual-sample on reject) under
+seeded keys (`kernels.sample.sample_last(..., key=)`), so runs replay
+deterministically.
+
+KV bookkeeping: the draft gets its OWN small KV store; the target
+store absorbs the whole verified span and then `truncate`s back to
+the accept point — paged rollback dereferences the dead tail blocks
+(block tables shrink, refcounts stay exact) and zeroes the kept
+partial block, preserving the dense==paged bitwise identity. The
+draft store rolls back the same way, with one catch-up decode step on
+full accept (its last drafted token was sampled but never fed back).
+
+Integration: `SpecConfig(EngineConfig)` behind `api.make_engine`, so
+continuous batching, paged KV, prefix caching, `FleetScheduler`
+admission and the ledger all compose unchanged. The live acceptance
+rate feeds `FleetLedger.acceptance_rate`, and the adapt loop re-splits
+the virtual draft/verify row fleet via
+`perfmodel.recommend_spec_split` (low acceptance -> smaller k* ->
+fewer draft rows).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import recommend_spec_split, t_spec_serve
+from repro.core.wire import (
+    get_codec,
+    make_accept_payload,
+    make_draft_payload,
+    split_accept_payload,
+    split_draft_payload,
+)
+from repro.kernels.sample import sample_last
+from repro.serve.engine import Engine, EngineConfig, PrefillRunner
+from repro.serve.faults import FaultEvent
+from repro.serve.kvstore import make_kvstore
+from repro.serve.sched import FleetScheduler
+
+
+@dataclasses.dataclass
+class SpecConfig(EngineConfig):
+    """Speculative-decoding engine config (continuous mode only: the
+    draft/verify protocol needs per-slot cursors for rollback).
+
+    ``draft`` names the zoo draft model (the engine builds its smoke
+    variant when no draft is passed to `make_engine`); ``spec_k`` is
+    the draft block length; ``spec_mode`` picks the greedy argmax test
+    (bitwise target-parity) or seeded rejection sampling. ``n_rows`` /
+    ``draft_rows`` is the virtual fleet split the benchmarks price the
+    two model groups at and the adapt loop re-plans; ``cost_ratio``
+    overrides the planner's target/draft cost ratio (default: the
+    param-count ratio of the two models actually loaded — fig17 sets
+    the paper-scale ratio here when driving smoke weights)."""
+
+    mode: str = "continuous"
+    draft: str = "qwen1.5-0.5b"
+    spec_k: int = 4
+    spec_mode: str = "greedy"  # greedy | sampled
+    seed: int = 0
+    n_rows: int = 8
+    draft_rows: int = 2
+    adapt: bool = False
+    report_window: int = 16
+    speedup_threshold: float = 1.05
+    spec_k_max: int = 8
+    verify_width_cost: float = 0.08  # relative verify cost per extra chunk slot
+    cost_ratio: float | None = None  # target/draft cost ratio for the planner
+    wire_codec: str = "identity"  # draft<->verify edge codec
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.mode != "continuous":
+            raise ValueError("spec decoding needs mode='continuous'")
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec_mode not in ("greedy", "sampled"):
+            raise ValueError(
+                f"spec_mode must be 'greedy' or 'sampled', got {self.spec_mode!r}"
+            )
+        if not 1 <= self.draft_rows < self.n_rows:
+            raise ValueError(
+                f"draft_rows must be in [1, {self.n_rows - 1}], got {self.draft_rows}"
+            )
+
+
+def _build_draft(name: str):
+    """The smoke variant of the named zoo draft (random weights — the
+    mechanism's correctness never depends on draft quality; benchmarks
+    that need a controllable acceptance rate pass their own draft)."""
+    from repro.configs.base import get_smoke
+    from repro.models import model_zoo
+
+    cfg = dataclasses.replace(get_smoke(name), dtype=jnp.float32)
+    model = model_zoo.build(cfg)
+    return model, model.init(jax.random.PRNGKey(7))
+
+
+class SpecEngine(Engine):
+    """Continuous-batching engine whose decode tick is the speculative
+    draft -> verify -> rollback protocol. Everything else — admission,
+    paged KV, prefix cache, scheduler, ledger, retire — is inherited.
+    """
+
+    def __init__(self, model, params, cfg: SpecConfig,
+                 sched: FleetScheduler | None = None, *,
+                 draft=None, mesh=None, clock=None):
+        super().__init__(model, params, cfg, sched=sched)
+        if model.verify_step is None:
+            raise ValueError(
+                "speculative decoding needs a model with verify_step "
+                "(attention-only LMs)"
+            )
+        if draft is None:
+            self.draft_model, self.draft_params = _build_draft(cfg.draft)
+        else:
+            self.draft_model, self.draft_params = draft
+        if self.draft_model.cfg.vocab_size != model.cfg.vocab_size:
+            raise ValueError(
+                "draft and target must share a vocabulary: "
+                f"{self.draft_model.cfg.vocab_size} != {model.cfg.vocab_size}"
+            )
+        # the draft's own (small) KV store: same geometry, full capacity
+        # (no oversubscription — the target store's page-aware admission
+        # can't see this pool, so it must never be the one to exhaust),
+        # no prefix cache (draft KV is never shared across requests)
+        draft_spec = dataclasses.replace(cfg.kv, n_blocks=None,
+                                         prefix_cache=False)
+        self.draft_kv = make_kvstore(self.draft_model, cfg.max_batch,
+                                     cfg.max_len, draft_spec, ragged=True)
+        self._draft_decode = jax.jit(self.draft_model.decode_step)
+        self._draft_prefill = PrefillRunner(self.draft_model, self.draft_params,
+                                            max_len=cfg.max_len)
+        self._verify = jax.jit(model.verify_step)
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        self._codec = get_codec(cfg.wire_codec)
+        self.clock = clock
+        # live (mutable) plan state the adapt loop rewrites
+        self.spec_k = cfg.spec_k
+        self.n_rows = cfg.n_rows
+        self.draft_rows = cfg.draft_rows
+        self.replans: list[dict] = []
+        self.stats.update(accepted=0, drafted=0, verify_calls=0,
+                          draft_steps=0)
+        self._regrow: tuple[int, int] | None = None  # (tick, slots)
+        self._slow_until = 0
+        self._slow_factor = 1.0
+        # the ServiceGraph topology: draft rows are the compute group,
+        # verify rows the service group, chained by the repo's first
+        # bidirectional edge (draft blocks out, verdicts back)
+        self.graph = None
+        if mesh is not None:
+            from repro.core.dataflow import COMPUTE, ServiceGraph
+
+            verify_rows = self.n_rows - self.draft_rows
+            self.graph = ServiceGraph.build(
+                mesh,
+                stages={"verify": verify_rows / self.n_rows},
+                bidirectional=[(COMPUTE, "verify")],
+                wire={(COMPUTE, "verify"): cfg.wire_codec,
+                      ("verify", COMPUTE): cfg.wire_codec},
+            )
+
+    # -- admission: the draft mirrors every target admission ----------------
+    def _admit_continuous(self) -> None:
+        before = {i for i, s in enumerate(self.slots) if s is not None}
+        super()._admit_continuous()
+        for i, req in enumerate(self.slots):
+            if req is None or i in before:
+                continue
+            # the draft prefills the same prompt into its own store so
+            # draft_len == target_len at every tick head. Prefix-cache
+            # fast paths on the target side don't skip this: the draft
+            # pool is private per request.
+            _, cache1 = self._draft_prefill(req.prompt)
+            self.draft_kv.admit(i, cache1, int(req.prompt.shape[0]))
+
+    # -- one speculative tick ----------------------------------------------
+    def _step_continuous(self) -> None:
+        self.last_tick = {
+            "prefill_lens": [], "prefill_calls": [], "decode_batch": 0,
+            "prefix_hit_tokens": 0, "draft_batches": [], "verify": None,
+            "accepted": 0, "drafted": 0, "emitted": 0,
+            "spec_k": self.spec_k, "draft_rows": self.draft_rows,
+        }
+        if self._regrow is not None and self.tick >= self._regrow[0]:
+            tick_at, slots = self._regrow
+            self._regrow = None
+            self.resize(slots=slots)
+        self._admit_continuous()
+        self.tick += 1
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if active:
+            self._spec_tick(active)
+        self._admit_continuous()
+        self.last_tick["kv"] = self.kv.stats
+        self.last_tick["draft_kv"] = self.draft_kv.stats
+        self.stats["steps"] += 1
+        self._record_tick()
+        if self.cfg.adapt and self.tick % self.cfg.report_window == 0:
+            self._replan()
+
+    def _spec_tick(self, active: list[int]) -> None:
+        k = self.spec_k
+        cfg = self.cfg
+        n0 = {i: int(self.kv.lens[i]) for i in active}
+        # per-row draft budget: the final emitted token of a tick is
+        # always target-sampled, so a row r tokens from its cap drafts
+        # at most r - 1; the cache cap leaves room for the pending
+        # token's row plus the drafts
+        n_draft = {}
+        for i in active:
+            req = self.slots[i]
+            rem = req.max_new_tokens - len(req.out_tokens)
+            n_draft[i] = max(0, min(k, rem - 1, cfg.max_len - 1 - n0[i]))
+
+        # -- draft phase: k cheap sequential steps on the draft group ------
+        b = cfg.max_batch
+        cur = self.tokens  # (B, 1) pending token per slot
+        d_np = np.zeros((b, k), np.int64)  # drafted ids
+        q_of_d = np.zeros((b, k), np.float64)  # draft prob of each drafted id
+        q_rows: list[np.ndarray | None] = [None] * k  # full draft dists (B, V)
+        for j in range(k):
+            active_j = [i for i in active if n_draft[i] > j]
+            if not active_j:
+                break
+            logits, dcache = self._draft_decode(
+                self.draft_params, self.draft_kv.view(active_j), cur)
+            self.draft_kv.absorb(dcache, active_j)
+            if cfg.spec_mode == "greedy":
+                d = sample_last(logits)
+            else:
+                key = jax.random.fold_in(self._base_key, self.tick * (k + 1) + j)
+                d = sample_last(logits, key=key)
+                probs = np.asarray(jax.nn.softmax(logits[:, -1].astype(jnp.float32)))
+                q_rows[j] = probs
+                q_of_d[:, j] = probs[np.arange(b), np.asarray(d)]
+            d_host = np.asarray(d)
+            d_np[:, j] = d_host
+            cur = d[:, None]
+            self.last_tick["draft_batches"].append(len(active_j))
+            self.stats["draft_steps"] += 1
+
+        # -- forward wire: the draft block crosses the draft->verify edge --
+        payload = make_draft_payload(jnp.asarray(d_np, jnp.int32),
+                                     jnp.asarray(q_of_d, jnp.float32))
+        payload = self._codec.decode_tree(self._codec.encode_tree(payload))
+        d_wire, _q_wire = split_draft_payload(payload)
+        d_np = np.asarray(d_wire, np.int64)  # int leaves are codec-exact
+
+        # -- verify phase: ONE batched target forward over the chunk -------
+        s_chunk = k + 1
+        chunk = np.zeros((b, s_chunk), np.int64)
+        n_new = np.zeros((b,), np.int64)
+        tok_np = np.asarray(self.tokens)[:, 0]
+        for i in active:
+            chunk[i, 0] = tok_np[i]
+            chunk[i, 1 : 1 + n_draft[i]] = d_np[i, : n_draft[i]]
+            n_new[i] = n_draft[i] + 1
+        logits, vcache = self._verify(
+            self.params, self.kv.view(active),
+            jnp.asarray(chunk, jnp.int32), jnp.asarray(n_new, jnp.int32))
+        self.last_logits = logits
+        self.stats["verify_calls"] += 1
+        self.last_tick["verify"] = (s_chunk, len(active))
+        self.last_tick["decode_batch"] = len(active)
+
+        # -- accept / correct ----------------------------------------------
+        if cfg.spec_mode == "greedy":
+            targets = np.asarray(sample_last(
+                logits.reshape(b * s_chunk, 1, -1)).reshape(b, s_chunk))
+            accepts, corrected = self._greedy_verdict(
+                active, chunk, n_draft, targets)
+        else:
+            accepts, corrected = self._sampled_verdict(
+                active, chunk, n_draft, logits, q_rows)
+
+        # -- reverse wire: the verdict crosses the verify->draft edge ------
+        back = make_accept_payload(
+            jnp.asarray([accepts.get(i, 0) for i in range(b)], jnp.int32),
+            jnp.asarray([corrected.get(i, 0) for i in range(b)], jnp.int32))
+        back = self._codec.decode_tree(self._codec.encode_tree(back))
+        acc_wire, corr_wire = split_accept_payload(back)
+        acc_np, corr_np = np.asarray(acc_wire), np.asarray(corr_wire)
+
+        # -- commit + rollback ---------------------------------------------
+        self.kv.absorb_span(vcache, active, [int(n_new[i]) for i in active])
+        full_accept = []
+        for i in active:
+            a = int(acc_np[i])
+            self.kv.truncate(i, n0[i] + a + 1)
+            if a == n_draft[i]:
+                full_accept.append(i)  # draft is one row short (see below)
+            else:
+                self.draft_kv.truncate(i, n0[i] + a + 1)
+        if full_accept:
+            # catch-up: on full accept the last drafted token was sampled
+            # but never fed back, so the draft cache is one row short of
+            # the target's accept point. One decode step over just those
+            # rows closes the gap (rows outside the active set get the
+            # view length as their cursor — the lane write skips them).
+            feed = np.zeros((b, 1), np.int64)
+            for i in full_accept:
+                feed[i, 0] = chunk[i, n_draft[i]]
+            _, dcache = self._draft_decode(
+                self.draft_params, self.draft_kv.view(full_accept),
+                jnp.asarray(feed, jnp.int32))
+            self.draft_kv.absorb(dcache, full_accept)
+
+        # -- emit + retire ---------------------------------------------------
+        emitted = {}
+        for i in active:
+            a = int(acc_np[i])
+            emitted[i] = [int(t) for t in chunk[i, 1 : 1 + a]] + [int(corr_np[i])]
+            self.last_tick["accepted"] += a
+            self.last_tick["drafted"] += n_draft[i]
+        self.stats["accepted"] += self.last_tick["accepted"]
+        self.stats["drafted"] += self.last_tick["drafted"]
+        self.last_tick["emitted"] = sum(len(v) for v in emitted.values())
+        next_np = np.array(
+            [emitted[i][-1] if i in emitted else 0 for i in range(b)])
+        for slot in self._retire_many(emitted):
+            self.kv.free(slot)
+            self.draft_kv.free(slot)
+        self.tokens = jnp.asarray(next_np[:, None].astype(np.int32))
+
+    def _greedy_verdict(self, active, chunk, n_draft, targets):
+        """Leading-run argmax test: accept d_i while it matches the
+        target argmax at the previous position; the first mismatch (or
+        the bonus position on a full match) supplies the emitted
+        target token."""
+        accepts, corrected = {}, {}
+        for i in active:
+            a = 0
+            while a < n_draft[i] and chunk[i, a + 1] == targets[i, a]:
+                a += 1
+            accepts[i] = a
+            corrected[i] = int(targets[i, a])
+        return accepts, corrected
+
+    def _sampled_verdict(self, active, chunk, n_draft, logits, q_rows):
+        """Distribution-preserving rejection sampling (seeded): accept
+        d_i with prob min(1, p(d_i)/q(d_i)); on reject, sample from the
+        residual norm(max(0, p - q)); on full accept, sample the bonus
+        from p. Every draw folds (tick, row, position) into the base
+        key, so the whole run replays under a fixed seed."""
+        b, s_chunk = chunk.shape
+        p_full = np.asarray(jax.nn.softmax(logits.astype(jnp.float32), axis=-1))
+        # slot k of the tick's key stream: the draft draws used 0..k-1
+        key = jax.random.fold_in(self._base_key,
+                                 self.tick * (s_chunk) + s_chunk - 1)
+        u = np.asarray(jax.random.uniform(key, (b, max(1, s_chunk - 1))))
+        accepts, corrected = {}, {}
+        for i in active:
+            a = 0
+            while a < n_draft[i]:
+                d = chunk[i, a + 1]
+                p = p_full[i, a, d]
+                q = q_rows[a][i, d]
+                if q <= 0.0 or u[i, a] < min(1.0, p / q):
+                    a += 1
+                else:
+                    break
+            accepts[i] = a
+            if a < n_draft[i]:
+                residual = np.maximum(p_full[i, a] - q_rows[a][i], 0.0)
+                z = residual.sum()
+                dist = residual / z if z > 0 else p_full[i, a]
+            else:
+                dist = p_full[i, a]
+            rk = jax.random.fold_in(key, i * s_chunk + a + 1)
+            corrected[i] = int(jax.random.categorical(
+                rk, jnp.log(jnp.asarray(dist) + 1e-30)))
+        return accepts, corrected
+
+    def _retire_many(self, emitted: dict[int, list[int]]) -> list[int]:
+        """Multi-token retire: record each slot's emitted tokens in
+        stream order, finishing at EOS / length exactly as the base
+        single-token `_retire` would have over as many ticks."""
+        freed = []
+        for i, toks in emitted.items():
+            req = self.slots[i]
+            if req is None:
+                continue
+            for tok in toks:
+                if req.done:
+                    break  # tokens past EOS are discarded
+                if req.first_token_tick < 0:
+                    req.first_token_tick = self.tick
+                req.out_tokens.append(tok)
+                self.stats["tokens_out"] += 1
+                if tok == self.cfg.eos_id or \
+                        len(req.out_tokens) >= req.max_new_tokens:
+                    req.done = True
+                    req.done_tick = self.tick
+                    self.finished.append(req)
+                    self.ledger.record_done(req, self.sched.slo(req.tenant),
+                                            self.tick)
+                    self.slots[i] = None
+                    freed.append(i)
+        return freed
+
+    # -- ledger / adapt bridge ----------------------------------------------
+    def _record_tick(self) -> None:
+        wall = self.clock(self.last_tick) if self.clock is not None else 1.0
+        if self.tick < self._slow_until:
+            wall *= self._slow_factor
+        self.ledger.record_tick(
+            wall_s=wall,
+            prefill_work_rows=[float(sum(self.last_tick["prefill_lens"]))],
+            decode_work_rows=[float(self.last_tick["decode_batch"])],
+            queue_depth=self.sched.pending(),
+            accepted=self.last_tick["accepted"],
+            drafted=self.last_tick["drafted"],
+            accepted_by_tenant=self._tenant_counts("accepted"),
+            drafted_by_tenant=self._tenant_counts("drafted"),
+        )
+
+    def _tenant_counts(self, which: str) -> dict[str, int]:
+        """Attribute this tick's total to tenants by live-slot share —
+        exact when one tenant occupies the fleet, proportional
+        otherwise (the per-slot counters are summed before this)."""
+        tenants = [req.tenant for req in self.slots if req is not None]
+        total = self.last_tick[which]
+        if not tenants or not total:
+            return {}
+        share, rem = divmod(total, len(tenants))
+        out: dict[str, int] = {}
+        for n, t in enumerate(tenants):
+            out[t] = out.get(t, 0) + share + (1 if n < rem else 0)
+        return out
+
+    def _planner_costs(self):
+        if self.cfg.cost_ratio is not None:
+            ratio = self.cfg.cost_ratio
+        else:
+            ratio = (self.model.cfg.active_param_count()
+                     / self.draft_model.cfg.active_param_count())
+        c_draft = 1.0
+        w = self.cfg.verify_width_cost
+        return c_draft, lambda kk: ratio * (1.0 + w * kk)
+
+    def _replan(self) -> None:
+        """The adapt loop: fold the windowed acceptance rate through
+        Eq. 4'' and re-split the virtual draft/verify fleet. Hysteresis:
+        only apply when the predicted win over the current (k, split)
+        clears ``speedup_threshold`` — a regroup implies a recompile on
+        a real fleet, so marginal wins don't fire."""
+        acceptance = self.ledger.acceptance_rate()
+        if acceptance == self.ledger.NO_SAMPLE:
+            return  # verify-only warmup window: nothing to plan on
+        c_draft, c_verify = self._planner_costs()
+        plan = recommend_spec_split(c_draft, c_verify, acceptance,
+                                    self.n_rows, k_max=self.cfg.spec_k_max)
+        t_now = t_spec_serve(c_draft, c_verify, acceptance, self.spec_k,
+                             self.draft_rows, self.n_rows)
+        if (plan.k, plan.draft_rows) == (self.spec_k, self.draft_rows):
+            return
+        if t_now / plan.t_per_token < self.cfg.speedup_threshold:
+            return
+        self.replans.append({
+            "tick": self.tick, "acceptance": acceptance,
+            "from": (self.spec_k, self.draft_rows),
+            "to": (plan.k, plan.draft_rows),
+            "predicted_speedup": t_now / plan.t_per_token,
+        })
+        self.spec_k = plan.k
+        self.resize(draft_rows=plan.draft_rows)
+
+    # -- fleet-style elasticity ---------------------------------------------
+    def resize(self, *, slots: int | None = None,
+               draft_rows: int | None = None) -> None:
+        """Re-size the engine without losing requests.
+
+        ``draft_rows`` rewrites the virtual draft/verify split (and the
+        ServiceGraph row partition when a mesh is attached).
+        ``slots`` re-sizes the decode slot pool via the KV stores'
+        in-flight-preserving `resize`; live requests beyond the new
+        capacity are re-queued at their original arrival (retry
+        recovery: recomputed, never lost)."""
+        if draft_rows is not None:
+            if not 1 <= draft_rows < self.n_rows:
+                raise ValueError(
+                    f"draft_rows must be in [1, {self.n_rows - 1}], "
+                    f"got {draft_rows}")
+            self.draft_rows = draft_rows
+            if self.graph is not None:
+                self.graph = self.graph.regroup(
+                    {"verify": self.n_rows - draft_rows})
+        if slots is None:
+            return
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        keep, requeue = live[:slots], live[slots:]
+        for i in requeue:
+            req = self.slots[i]
+            req.out_tokens = []
+            req.first_token_tick = -1
+            req.done = False
+            self.sched.submit(req, now=req.submitted_tick)
+        moves = [(dst, src) for dst, src in enumerate(keep)]
+        self.kv = self.kv.resize(slots, moves)
+        self.draft_kv = self.draft_kv.resize(slots, moves)
+        old_tok = np.asarray(self.tokens)
+        new_tok = np.zeros((slots, 1), np.int32)
+        new_slots: list = [None] * slots
+        for dst, src in moves:
+            new_slots[dst] = self.slots[src]
+            new_tok[dst] = old_tok[src]
+        self.slots = new_slots
+        self.tokens = jnp.asarray(new_tok)
+        self.cfg.max_batch = slots
+
+    def inject_fault(self, event: FaultEvent) -> None:
+        """Map fleet faults onto the single-process spec engine:
+        ``device_loss``/``preempt`` shrink the slot pool (re-queueing
+        the overflow — zero lost requests), preempted capacity returns
+        after ``duration`` ticks, ``slow_node`` scales the recorded
+        wall clock. The same `traffic.replay(fail_at=)` hooks that
+        drive `FleetEngine` drive this."""
+        if event.kind == "slow_node":
+            self._slow_until = self.tick + event.duration
+            self._slow_factor = event.factor
+            return
+        old = self.cfg.max_batch
+        new = max(1, old - event.rows)
+        if event.kind == "preempt" and event.duration > 0:
+            self._regrow = (self.tick + event.duration, old)
+        self.resize(slots=new)
+
+    def workload_sample(self) -> dict:
+        out = super().workload_sample()
+        out.update(
+            acceptance_rate=self.ledger.acceptance_rate(),
+            spec_k=self.spec_k,
+            draft_rows=self.draft_rows,
+            verify_rows=self.n_rows - self.draft_rows,
+        )
+        return out
+
+
+__all__ = ["SpecConfig", "SpecEngine"]

@@ -1,0 +1,388 @@
+"""SpecGraph (DESIGN.md §15): verify-step bitwise parity vs sequential
+decode, greedy engine stream parity vs target-only decode, paged
+rollback refcount exactness, resize survival, seeded sampling, the
+bidirectional ServiceGraph edge, wire payload codec exactness, the
+Eq. 4'' planner, and the ledger acceptance sentinel."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+MAX_LEN = 64
+SLOTS = 4
+N_REQUESTS = 8
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def target():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke
+    from repro.models import build
+
+    cfg = dataclasses.replace(get_smoke("qwen1.5-0.5b"), dtype=jnp.float32)
+    model = build(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _noised(params, eps: float):
+    """Draft = target params + eps * N(0, 1): the acceptance dial."""
+    import jax
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(jax.random.PRNGKey(1), len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, [
+        leaf + eps * jax.random.normal(k, leaf.shape, leaf.dtype)
+        if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf
+        for leaf, k in zip(leaves, keys)
+    ])
+
+
+def _requests(vocab: int, n: int = N_REQUESTS, max_new: int = MAX_NEW):
+    from repro.serve import Request
+
+    rng = np.random.RandomState(0)
+    return [
+        Request(uid=u, prompt=rng.randint(1, vocab, rng.randint(4, 16))
+                .astype(np.int32), max_new_tokens=max_new)
+        for u in range(n)
+    ]
+
+
+def _kv(paged: bool):
+    from repro.serve import KVSpec
+
+    return KVSpec(kind="paged", block_size=4) if paged else KVSpec()
+
+
+def _drain_streams(eng) -> dict[int, list[int]]:
+    while not eng.idle():
+        eng.step()
+        assert eng.tick < 2000, "engine did not drain"
+    return {r.uid: list(r.out_tokens) for r in eng.finished}
+
+
+def _base_streams(target, paged: bool) -> dict[int, list[int]]:
+    from repro.serve import EngineConfig, make_engine
+
+    model, params = target
+    eng = make_engine(model, params, EngineConfig(
+        max_batch=SLOTS, max_len=MAX_LEN, mode="continuous", kv=_kv(paged)))
+    for r in _requests(model.cfg.vocab_size):
+        eng.submit(dataclasses.replace(r, out_tokens=[]))
+    return _drain_streams(eng)
+
+
+def _spec_engine(target, paged: bool, eps: float = 1e-3, **cfg_kw):
+    from repro.serve import SpecConfig, make_engine
+
+    model, params = target
+    cfg = SpecConfig(max_batch=SLOTS, max_len=MAX_LEN, kv=_kv(paged),
+                     **{"spec_k": 4, **cfg_kw})
+    eng = make_engine(model, params, cfg,
+                      draft=(model, _noised(params, eps)))
+    for r in _requests(model.cfg.vocab_size):
+        eng.submit(dataclasses.replace(r, out_tokens=[]))
+    return eng
+
+
+# -- the verify forward ---------------------------------------------------------
+
+
+def test_verify_step_matches_sequential(target):
+    """One width-(k+1) verify forward == k+1 sequential decode steps,
+    bit for bit: per-position logits, K/V rows, and lengths — including
+    ragged n_new (rows mid-chunk stop writing and masking early)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve import KVSpec
+    from repro.serve.kvstore import make_kvstore
+
+    model, params = target
+    batch, s_chunk = 3, 4
+    n_new = [4, 2, 1]
+    rng = np.random.RandomState(3)
+    chunk = jnp.asarray(rng.randint(1, model.cfg.vocab_size, (batch, s_chunk)),
+                        jnp.int32)
+
+    stores = [make_kvstore(model, batch, MAX_LEN, KVSpec(), ragged=True)
+              for _ in range(2)]
+    prefill = jax.jit(lambda p, t: model.prefill(p, t)[:2])
+    for slot, plen in enumerate((5, 9, 3)):
+        prompt = jnp.asarray(rng.randint(1, model.cfg.vocab_size, (1, plen)),
+                             jnp.int32)
+        _, cache1 = prefill(params, prompt)
+        for store in stores:
+            store.admit(slot, cache1, plen)
+    seq_store, ver_store = stores
+
+    # sequential reference: one decode step per chunk position over the
+    # rows still live at that position (views are full-batch; inactive
+    # rows carry the view-length cursor, so the lane write skips them)
+    decode = jax.jit(model.decode_step)
+    seq_logits = np.zeros((batch, s_chunk, model.cfg.vocab_size), np.float32)
+    for j in range(s_chunk):
+        active_j = [i for i in range(batch) if n_new[i] > j]
+        logits, cache = decode(params, seq_store.view(active_j),
+                               chunk[:, j][:, None])
+        seq_store.absorb(cache, active_j)
+        for i in active_j:
+            seq_logits[i, j] = np.asarray(logits[i, -1])
+
+    logits, vcache = jax.jit(model.verify_step)(
+        params, ver_store.view(list(range(batch))), chunk,
+        jnp.asarray(n_new, jnp.int32))
+    ver_store.absorb_span(vcache, list(range(batch)), n_new)
+
+    for i in range(batch):
+        np.testing.assert_array_equal(
+            np.asarray(logits[i, : n_new[i]]), seq_logits[i, : n_new[i]])
+    np.testing.assert_array_equal(np.asarray(seq_store.cache["k"]),
+                                  np.asarray(ver_store.cache["k"]))
+    np.testing.assert_array_equal(np.asarray(seq_store.cache["v"]),
+                                  np.asarray(ver_store.cache["v"]))
+    assert list(seq_store.lens) == list(ver_store.lens)
+
+
+# -- engine stream parity --------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_spec_greedy_stream_parity(target, paged):
+    """Greedy speculative streams are BITWISE identical to target-only
+    greedy — per uid, over the whole request set — and nothing leaks:
+    after drain both KV stores are empty."""
+    eng = _spec_engine(target, paged)
+    streams = _drain_streams(eng)
+    assert streams == _base_streams(target, paged)
+    assert eng.stats["drafted"] > 0 and eng.stats["verify_calls"] > 0
+    if paged:
+        assert eng.kv.stats["blocks_in_use"] == 0, eng.kv.stats
+        assert eng.draft_kv.stats["blocks_in_use"] == 0, eng.draft_kv.stats
+
+
+def test_spec_acceptance_monotone_in_agreement(target):
+    """Acceptance tracks draft/target agreement: identical weights
+    accept everything, and acceptance falls monotonically as the draft
+    is noised away from the target."""
+    accs = []
+    for eps in (0.0, 1e-3, 1e-2):
+        eng = _spec_engine(target, paged=False, eps=eps)
+        _drain_streams(eng)
+        accs.append(eng.stats["accepted"] / max(1, eng.stats["drafted"]))
+    assert accs[0] == 1.0, accs
+    assert all(a >= b for a, b in zip(accs, accs[1:])), accs
+    assert accs[-1] < accs[0], accs
+
+
+def test_spec_paged_rollback_refcounts_exact(target):
+    """Paged rollback leaves refcounts exact at EVERY tick: private
+    blocks in use equal the live-token block demand in both stores (a
+    leaked tail block would break equality immediately), and both pools
+    drain to zero."""
+    eng = _spec_engine(target, paged=True)
+    ticks = 0
+    while not eng.idle():
+        eng.step()
+        for store in (eng.kv, eng.draft_kv):
+            st = store.stats
+            private = st["blocks_in_use"] - st.get("evictable_blocks", 0)
+            assert private == st["live_block_demand"], st
+        ticks += 1
+        assert ticks < 2000
+    assert eng.kv.stats["blocks_in_use"] == 0
+    assert eng.draft_kv.stats["blocks_in_use"] == 0
+
+
+def test_spec_survives_resize(target):
+    """A mid-replay preemption shrinks the slot pool (overflow requests
+    re-queued, zero lost), capacity regrows after the notice period,
+    and the final streams are STILL bitwise target-parity — greedy
+    decode is deterministic, so recomputed requests re-emit the same
+    tokens."""
+    from repro.serve.faults import FaultEvent
+
+    eng = _spec_engine(target, paged=True)
+    for _ in range(3):
+        eng.step()
+    eng.inject_fault(FaultEvent(eng.tick, "preempt", rows=2, duration=3))
+    assert eng.cfg.max_batch == SLOTS - 2
+    streams = _drain_streams(eng)
+    assert eng.cfg.max_batch == SLOTS  # the preempted rows came back
+    assert streams == _base_streams(target, paged=True)
+    assert eng.kv.stats["blocks_in_use"] == 0
+    assert eng.draft_kv.stats["blocks_in_use"] == 0
+
+
+def test_spec_sampled_mode_replays_deterministically(target):
+    """spec_mode='sampled' (seeded rejection sampling) replays bit-for-
+    bit under a fixed seed and diverges under a different one."""
+    a = _drain_streams(_spec_engine(target, False, spec_mode="sampled", seed=3))
+    b = _drain_streams(_spec_engine(target, False, spec_mode="sampled", seed=3))
+    c = _drain_streams(_spec_engine(target, False, spec_mode="sampled", seed=4))
+    assert a == b
+    assert a != c
+
+
+def test_spec_config_validation(target):
+    from repro.serve import EngineConfig, SpecConfig, make_engine
+
+    model, params = target
+    with pytest.raises(ValueError):
+        SpecConfig(mode="aligned")
+    with pytest.raises(ValueError):
+        SpecConfig(spec_k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(spec_mode="argmax-ish")
+    with pytest.raises(ValueError):
+        SpecConfig(n_rows=8, draft_rows=8)
+    with pytest.raises(ValueError):
+        make_engine(model, params, EngineConfig(mode="continuous"),
+                    draft=(model, params))
+
+
+# -- satellite machinery ---------------------------------------------------------
+
+
+def test_sample_last_seeded_deterministic_and_tiebreak():
+    """`sample_last(..., key=)`: fixed key -> fixed outcome (ties
+    resolved reproducibly via the Gumbel trick), different keys spread
+    over the tied argmax set, and k>1 with a key is rejected."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.sample import sample_last
+
+    logits = jnp.zeros((2, 1, 7))  # all-tied: the adversarial case
+    key = jax.random.PRNGKey(11)
+    a = sample_last(logits, key=key)
+    b = sample_last(logits, key=key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.dtype == jnp.int32 and a.shape == (2,)
+    draws = {int(sample_last(logits, key=jax.random.PRNGKey(s))[0])
+             for s in range(32)}
+    assert len(draws) > 1, "tied logits must not collapse to one index"
+    assert draws <= set(range(7))
+    with pytest.raises(ValueError):
+        sample_last(logits, k=2, key=key)
+
+
+def test_wire_spec_payloads_codec_exact():
+    """Draft blocks and verdicts cross the edge bit-exactly under EVERY
+    codec: both payloads' token/count leaves are integers, which all
+    codecs pass through untouched (lossy codecs only touch floats)."""
+    import jax.numpy as jnp
+
+    from repro.core.wire import (
+        CODECS,
+        make_accept_payload,
+        make_draft_payload,
+        split_accept_payload,
+        split_draft_payload,
+    )
+
+    rng = np.random.RandomState(5)
+    tokens = jnp.asarray(rng.randint(0, 50_000, (4, 4)), jnp.int32)
+    probs = jnp.asarray(rng.rand(4, 4), jnp.float32)
+    accepts = jnp.asarray(rng.randint(0, 5, (4,)), jnp.int32)
+    corrected = jnp.asarray(rng.randint(0, 50_000, (4,)), jnp.int32)
+    for name, codec in CODECS.items():
+        fwd = codec.decode_tree(codec.encode_tree(
+            make_draft_payload(tokens, probs)))
+        t2, p2 = split_draft_payload(fwd)
+        np.testing.assert_array_equal(np.asarray(t2), np.asarray(tokens))
+        if name == "identity":
+            np.testing.assert_array_equal(np.asarray(p2), np.asarray(probs))
+        back = codec.decode_tree(codec.encode_tree(
+            make_accept_payload(accepts, corrected)))
+        a2, c2 = split_accept_payload(back)
+        np.testing.assert_array_equal(np.asarray(a2), np.asarray(accepts))
+        np.testing.assert_array_equal(np.asarray(c2), np.asarray(corrected))
+
+
+def test_recommend_spec_split_planner():
+    """Eq. 4'': expected tokens per verify, and the draft/verify split —
+    draft rows grow monotonically with acceptance (higher acceptance
+    earns a longer k*, which needs more draft throughput), and the
+    paper-scale pair clears 1.5x at acceptance 0.8."""
+    from repro.core.perfmodel import recommend_spec_split, spec_expected_tokens
+
+    assert spec_expected_tokens(0.5, 2) == pytest.approx(1.75)
+    assert spec_expected_tokens(0.0, 8) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        spec_expected_tokens(1.5, 2)
+
+    def c_verify(k):
+        return 6.0 * (1.0 + 0.08 * k)
+
+    rows = []
+    for a in (0.0, 0.2, 0.4, 0.6, 0.8, 0.95):
+        plan = recommend_spec_split(1.0, c_verify, a, n_rows=8)
+        rows.append(plan.draft_rows)
+        assert 1 <= plan.draft_rows < 8
+    assert rows == sorted(rows), rows
+    assert recommend_spec_split(1.0, c_verify, 0.8, n_rows=8).speedup > 1.5
+
+
+def test_ledger_acceptance_sentinel_empty_window():
+    """Regression: acceptance/goodput sampling over an empty window (or
+    a window with no drafted tokens, or an unknown tenant) returns the
+    sentinel / zero instead of raising."""
+    from repro.serve.sched import FleetLedger
+
+    led = FleetLedger()
+    assert led.acceptance_rate() == FleetLedger.NO_SAMPLE
+    assert led.acceptance_rate(tenant="nobody") == FleetLedger.NO_SAMPLE
+    assert led.good_tokens() == 0
+    assert led.queue_depth_mean() == 0.0
+    snap = led.snapshot()  # must not raise on the empty window
+    assert snap["acceptance_rate"] == FleetLedger.NO_SAMPLE
+    led.record_tick(wall_s=1.0, prefill_work_rows=[], decode_work_rows=[4.0],
+                    queue_depth=0)
+    assert led.acceptance_rate() == FleetLedger.NO_SAMPLE  # verify-only tick
+    led.record_tick(wall_s=1.0, prefill_work_rows=[], decode_work_rows=[4.0],
+                    queue_depth=0, accepted=3, drafted=4,
+                    accepted_by_tenant={"t0": 3}, drafted_by_tenant={"t0": 4})
+    assert led.acceptance_rate() == pytest.approx(0.75)
+    assert led.acceptance_rate(tenant="t0") == pytest.approx(0.75)
+    assert led.acceptance_rate(tenant="t1") == FleetLedger.NO_SAMPLE
+
+
+@pytest.mark.slow
+def test_bidirectional_edge_reverse_channel(multidevice):
+    """The ServiceGraph's first bidirectional edge: one declaration
+    installs both directions, `reverse_channel` is the opposite
+    direction's channel, directed duplicates are rejected, and
+    non-bidirectional pairs have no reverse channel."""
+    multidevice("""
+import pytest
+from repro.utils.compat import make_mesh
+from repro.core.dataflow import COMPUTE, ServiceGraph
+mesh = make_mesh((8,), ("data",))
+g = ServiceGraph.build(mesh, stages={"verify": 0.25},
+                       bidirectional=[(COMPUTE, "verify")])
+assert g.is_bidirectional(COMPUTE, "verify")
+assert g.is_bidirectional("verify", COMPUTE)
+rc = g.reverse_channel(COMPUTE, "verify")
+assert (rc.producer, rc.consumer) == ("verify", COMPUTE)
+rc2 = g.reverse_channel("verify", COMPUTE)
+assert (rc2.producer, rc2.consumer) == (COMPUTE, "verify")
+try:
+    ServiceGraph.build(mesh, stages={"verify": 0.25},
+                       edges=[(COMPUTE, "verify")],
+                       bidirectional=[(COMPUTE, "verify")])
+    raise SystemExit("duplicate directed+bidirectional must raise")
+except ValueError:
+    pass
+g2 = ServiceGraph.build(mesh, stages={"verify": 0.25})
+try:
+    g2.reverse_channel(COMPUTE, "verify")
+    raise SystemExit("non-bidirectional reverse_channel must raise")
+except KeyError:
+    pass
+print("OK")
+""")
