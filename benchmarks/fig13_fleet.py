@@ -215,8 +215,12 @@ def _drive_disagg(model, params, sc, costs, *, policy, mesh=None) -> dict:
         mesh=mesh,
         clock=clock,
     )
-    replay(fe, sc, model.cfg.vocab_size)
-    walls = [r["wall_s"] for r in fe.report]
+    # collect walls incrementally: FleetEngine.report is a bounded ring
+    # now, so the full history is gathered tick by tick (fe.report[-1]
+    # is always this tick's record)
+    walls: list[float] = []
+    replay(fe, sc, model.cfg.vocab_size,
+           on_tick=lambda e: walls.append(e.report[-1]["wall_s"]))
     return {
         "mode": "adaptive" if policy is not None else "static",
         "regroups": fe.regroups,
@@ -433,10 +437,20 @@ if __name__ == "__main__":
         default=os.path.join(_REPO, "BENCH_fleet.json"),
         help="where to write the fleet record",
     )
+    parser.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="record a Chrome/Perfetto trace of the fleet run to PATH",
+    )
     args = parser.parse_args()
 
     from repro.utils.compat import make_mesh
 
+    if args.trace:
+        from repro.obs import trace as _trace
+
+        _trace.enable()
     mesh = make_mesh((8,), ("data",))
     print("name,us_per_call,derived")
     for line in (run_quick if args.quick else run)(mesh):
@@ -445,3 +459,9 @@ if __name__ == "__main__":
         json.dump(LAST, f, indent=2, sort_keys=True, default=str)
         f.write("\n")
     print(f"# wrote {args.json}", file=sys.stderr)
+    if args.trace:
+        from repro.obs import export as _export
+        from repro.obs import registry as _registry
+
+        _export.write_trace(args.trace, metrics=_registry.get_registry().snapshot())
+        print(f"# wrote {args.trace}", file=sys.stderr)

@@ -203,10 +203,12 @@ def _drive(model, params, sc, costs, *, faults=None, recovery="retry",
         sched=FleetScheduler(sc.tenants, token_budget=TOKEN_BUDGET, aging=0.05),
         clock=clock,
     )
-    pairs = replay(fe, sc, model.cfg.vocab_size, max_ticks=5000)
+    # collect walls incrementally: FleetEngine.report is a bounded ring
+    walls: list[float] = []
+    pairs = replay(fe, sc, model.cfg.vocab_size, max_ticks=5000,
+                   on_tick=lambda e: walls.append(e.report[-1]["wall_s"]))
     if fe.ckpt is not None:
         fe.ckpt.close()
-    walls = [r["wall_s"] for r in fe.report]
     submitted = {r.uid for _, r in pairs}
     finished = {r.uid: list(r.out_tokens) for r in fe.finished}
     lost = sorted(submitted - set(finished))
@@ -214,7 +216,7 @@ def _drive(model, params, sc, costs, *, faults=None, recovery="retry",
         "submitted": len(submitted),
         "lost": lost,
         "streams": finished,
-        "fault_log": fe.fault_log,
+        "fault_log": list(fe.fault_log),
         "recoveries": dict(fe.recoveries),
         "regrows": fe.regrows,
         "rows_final": fe.n_rows,

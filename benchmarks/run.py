@@ -218,6 +218,9 @@ def main() -> None:
     parser.add_argument("--spec-json",
                         default=os.path.join(_REPO, "BENCH_spec.json"),
                         help="where to write the SpecGraph record")
+    parser.add_argument("--trace-dir", default=None, metavar="DIR",
+                        help="record one Chrome/Perfetto trace per figure "
+                             "module into DIR (<figure>.json)")
     args = parser.parse_args()
 
     import jax
@@ -258,10 +261,18 @@ def main() -> None:
         "BENCH_spec": read_baseline(args.spec_json),
     }
 
+    from repro.obs import export as obs_export
+    from repro.obs import registry as obs_registry
+    from repro.obs import trace as obs_trace
+
+    if args.trace_dir:
+        os.makedirs(args.trace_dir, exist_ok=True)
+
     mesh = make_mesh((8,), ("data",))
     print("name,us_per_call,derived")
     failures = 0
     figures: dict[str, dict] = {}
+    fig_metrics: dict[str, dict] = {}  # per-figure registry snapshots
     for mod in (fig5_mapreduce, fig6_cg, fig7_particle_comm, fig8_particle_io,
                 fig9_disagg_serve, fig10_pipeline, fig11_channel,
                 fig12_adaptive, fig13_fleet, fig14_continuous,
@@ -271,6 +282,9 @@ def main() -> None:
         if args.quick and hasattr(mod, "run_quick"):
             runner = mod.run_quick
         name = mod.__name__.rsplit(".", 1)[-1]
+        obs_registry.reset()  # scope the always-on counters to this figure
+        if args.trace_dir:
+            obs_trace.enable()
         t0 = time.perf_counter()
         rows = []
         try:
@@ -290,6 +304,12 @@ def main() -> None:
                 "rows": rows,
                 "error": traceback.format_exc().strip().rsplit("\n", 1)[-1],
             }
+        fig_metrics[name] = obs_registry.get_registry().snapshot()
+        if args.trace_dir:
+            trace_path = os.path.join(args.trace_dir, f"{name}.json")
+            obs_export.write_trace(trace_path, metrics=fig_metrics[name])
+            obs_trace.disable()
+            print(f"# wrote {trace_path}", file=sys.stderr)
     trajectory = {
         "quick": bool(args.quick),
         "jax": jax.__version__,
@@ -303,19 +323,28 @@ def main() -> None:
         traceback.print_exc(file=sys.stderr)
         phase_cost = {"error": traceback.format_exc().strip().rsplit("\n", 1)[-1]}
     records = {
-        "BENCH_channel": (args.json, trajectory),
-        "BENCH_adaptive": (args.adaptive_json, fig12_adaptive.LAST),
-        "BENCH_fleet": (args.fleet_json, fig13_fleet.LAST),
-        "BENCH_serve_continuous": (args.serve_json, fig14_continuous.LAST),
-        "BENCH_decode": (args.decode_json, fig15_decode_kernel.LAST),
-        "BENCH_faults": (args.faults_json, fig16_faults.LAST),
-        "BENCH_spec": (args.spec_json, fig17_spec.LAST),
+        "BENCH_channel": (args.json, trajectory, "fig11_channel"),
+        "BENCH_adaptive": (args.adaptive_json, fig12_adaptive.LAST, "fig12_adaptive"),
+        "BENCH_fleet": (args.fleet_json, fig13_fleet.LAST, "fig13_fleet"),
+        "BENCH_serve_continuous": (
+            args.serve_json, fig14_continuous.LAST, "fig14_continuous"
+        ),
+        "BENCH_decode": (
+            args.decode_json, fig15_decode_kernel.LAST, "fig15_decode_kernel"
+        ),
+        "BENCH_faults": (args.faults_json, fig16_faults.LAST, "fig16_faults"),
+        "BENCH_spec": (args.spec_json, fig17_spec.LAST, "fig17_spec"),
     }
     regressions = 0
-    for name, (path, rec) in records.items():
+    for name, (path, rec, fig) in records.items():
         if not rec:
             continue
         rec["phase_cost"] = phase_cost
+        # registry snapshot for the record's figure run: counter/gauge/
+        # histogram leaves only, no wall-seconds keys, so collect_walls
+        # (and committed baselines) never see it
+        if fig_metrics.get(fig):
+            rec["metrics"] = fig_metrics[fig]
         for line in compare_to_baseline(name, baselines[name], rec):
             print(line, file=sys.stderr)
             regressions += "WARNING" in line

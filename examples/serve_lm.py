@@ -116,8 +116,16 @@ def main():
                          "--preempt-duration ticks)")
     ap.add_argument("--fault-rows", type=int, default=1)
     ap.add_argument("--preempt-duration", type=int, default=8)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome/Perfetto trace of the run to PATH "
+                         "(open at ui.perfetto.dev or chrome://tracing)")
     args = ap.parse_args()
     faulted = args.fail_at is not None or args.preempt_at is not None
+
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.enable()  # before engine build: compile spans land too
 
     cfg = get_smoke("qwen2.5-3b")
     model = build(cfg)
@@ -227,6 +235,18 @@ def main():
                   f"ttft_p99={rec['ttft_p99']:.0f} "
                   f"latency_p99={rec['latency_p99']:.0f} "
                   f"good={rec['good_tokens']}")
+    if args.trace:
+        from repro.obs import export as obs_export
+        from repro.obs import registry as obs_registry
+        from repro.obs import trace as obs_trace
+
+        tracer = obs_trace.get()
+        obj = obs_export.write_trace(
+            args.trace, metrics=obs_registry.get_registry().snapshot())
+        life = tracer.lifecycle_report()
+        print(f"trace: {len(obj['traceEvents'])} events "
+              f"({tracer.dropped} dropped), "
+              f"{life['begins']} request flows -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import GroupedMesh, ServiceGraph, Stage, delta_emitter, sink_sum_stage
-from repro.core.adapt import AdaptPolicy, AdaptiveGraph, StageTrait, timed_call
+from repro.core.adapt import (
+    AdaptPolicy,
+    AdaptiveGraph,
+    StageTrait,
+    timed_call,
+    warmed_step,
+)
 from repro.core.dataflow import COMPUTE, work_vector
 from repro.core.decouple import group_psum
 from repro.core.imbalance import skewed_partition
@@ -383,15 +389,17 @@ def run_wordcount_adaptive(
         total_docs = cfg_t.n_docs_per_row * n_rows
         all_tokens, all_mask = make_corpus(cfg_t, total_docs)
         tokens, mask = layout_corpus(all_tokens, all_mask, work_rows, n_rows)
-        if work_rows not in compiled:
-            compiled[work_rows] = _jit_measured_wordcount(
+        # compile outside the measurement: a ledger sample polluted by
+        # jit time would mis-calibrate t_unit by orders of magnitude
+        step_fn = warmed_step(
+            compiled, work_rows,
+            lambda: _jit_measured_wordcount(
                 mesh, graph, cfg_t.vocab, granularity_words
-            )
-            # compile outside the measurement: a ledger sample polluted by
-            # jit time would mis-calibrate t_unit by orders of magnitude
-            jax.block_until_ready(compiled[work_rows](tokens, mask))
+            ),
+            tokens, mask,
+        )
         (hist_rows, work_rows_vec, stage_rows), wall = timed_call(
-            compiled[work_rows], tokens, mask
+            step_fn, tokens, mask
         )
         hist = np.asarray(hist_rows[0])
         work = np.asarray(work_rows_vec[0])[:work_rows]

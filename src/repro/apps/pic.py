@@ -37,7 +37,13 @@ import numpy as np
 from jax import lax
 
 from repro.core import GroupedMesh, ServiceGraph, StreamChunker, buffer_op
-from repro.core.adapt import AdaptPolicy, AdaptiveGraph, StageTrait, timed_call
+from repro.core.adapt import (
+    AdaptPolicy,
+    AdaptiveGraph,
+    StageTrait,
+    timed_call,
+    warmed_step,
+)
 from repro.core.dataflow import COMPUTE, work_vector
 from repro.core.imbalance import sheet_partition, skewed_partition
 from repro.utils.compat import shard_map
@@ -427,15 +433,13 @@ def run_pic_adaptive(
     for t in range(supersteps):
         graph = ag.graph
         work_rows = graph.gmesh.compute.size
-        if work_rows not in compiled:
-            compiled[work_rows] = _jit_adaptive_pic(mesh, graph, cfg, steps)
-            # compile outside the ledger's wall-clock sample
-            jax.block_until_ready(
-                compiled[work_rows](state["x"], state["v"], state["m"],
-                                    jnp.float32(center))
-            )
+        step_fn = warmed_step(
+            compiled, work_rows,
+            lambda: _jit_adaptive_pic(mesh, graph, cfg, steps),
+            state["x"], state["v"], state["m"], jnp.float32(center),
+        )
         (x, v, m, work_vec, exits), wall = timed_call(
-            compiled[work_rows], state["x"], state["v"], state["m"],
+            step_fn, state["x"], state["v"], state["m"],
             jnp.float32(center),
         )
         state = {"x": x, "v": v, "m": m}

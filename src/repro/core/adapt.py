@@ -35,6 +35,8 @@ from typing import Any, Callable, Iterable, Mapping
 
 from repro.core.dataflow import ServiceGraph
 from repro.core.imbalance import empirical_sigma, empirical_t_sigma_work
+from repro.obs import registry as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.core.perfmodel import (
     StageWorkload,
     StreamCosts,
@@ -132,6 +134,7 @@ class LoadLedger:
         self._work.append(work)
         self._stage_items.append(dict(stage_items or {}))
         self.total_recorded += 1
+        _obs_metrics.REGISTRY.counter("adapt.load_samples").inc()
 
     def clear(self) -> None:
         """Forget the window — measurements of an old row partition do
@@ -367,6 +370,7 @@ class ReplanController:
         self.ledger.clear()
         self._since_regroup = 0
         self.pending = None
+        _obs_metrics.REGISTRY.counter("adapt.regroups").inc()
         self._pending_age = 0
         return dict(self.rows)
 
@@ -452,14 +456,66 @@ def timed_call(fn: Callable[..., Any], *args: Any) -> tuple[Any, float]:
     return out, time.perf_counter() - t0
 
 
+# -- compile-pollution guards ---------------------------------------------------
+# The adaptive apps all face the same measurement hazard: the first call
+# after a (re)build is compile + run, and feeding that wall into the
+# LoadLedger would trigger a spurious replan. Two idioms, one home:
+
+
+def warmed_step(cache: dict, key: Any, build: Callable[[], Callable],
+                *warmup_args: Any) -> Callable:
+    """Build-and-warm a jitted step per shape ``key``, outside the
+    ledger's wall-clock samples.
+
+    On a cache miss, ``build()`` compiles the step and one warmup call
+    runs to completion under a ``compile`` span (obs.trace), so JIT time
+    shows on timelines instead of polluting the first measured sample.
+    Only usable when a warmup call is side-effect-free — a step that
+    donates/updates real state must use `CompileGate` instead."""
+    fn = cache.get(key)
+    if fn is None:
+        import jax
+
+        with _obs_trace.span("compile", ("adapt", "compile"), key=str(key)):
+            fn = build()
+            jax.block_until_ready(fn(*warmup_args))
+        cache[key] = fn
+    return fn
+
+
+class CompileGate:
+    """Skip the first wall sample after every (re)build — for steps that
+    cannot pre-warm (e.g. a donated-buffer trainer step, where a warmup
+    call would apply a real update).
+
+    ``sample(wall_s)`` returns whether the sample is clean; the first
+    call after construction or `rebuilt()` returns False and emits the
+    measured compile+run wall as a ``compile`` span."""
+
+    def __init__(self):
+        self._fresh = True
+
+    def rebuilt(self) -> None:
+        self._fresh = True
+
+    def sample(self, wall_s: float) -> bool:
+        if not self._fresh:
+            return True
+        self._fresh = False
+        _obs_trace.complete("compile", wall_s, ("adapt", "compile"))
+        return False
+
+
 __all__ = [
     "AdaptPolicy",
     "AdaptiveGraph",
     "ChainCalibration",
+    "CompileGate",
     "LoadLedger",
     "ReplanController",
     "ReplanDecision",
     "StageTrait",
     "calibrate",
     "timed_call",
+    "warmed_step",
 ]

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from repro.core.channel import Operator, StreamChannel, broadcast_from_row
 from repro.core.groups import COMPUTE, GroupedMesh
 from repro.core.wire import WireSpec, get_codec
+from repro.obs import trace as _obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,6 +191,9 @@ class ServiceGraph:
             rows={g.name: int(rows[g.name]) for g in self.gmesh.service_groups},
             min_compute_rows=min_compute_rows,
         )
+        if _obs.enabled():
+            _obs.instant("regroup", ("graph", "control"),
+                         **{k: int(v) for k, v in rows.items()})
         return dataclasses.replace(self, gmesh=gmesh)
 
     # -- queries ----------------------------------------------------------
@@ -308,26 +312,33 @@ class ServiceGraph:
             k = t - i  # the head-wave index this stage handles at tick t
             if not 0 <= k < plan["n_waves"]:
                 continue
-            if i == 0:
-                plan["accs"][0] = ch.stream_fold(
-                    stage.elements,
-                    stage.operator,
-                    plan["accs"][0],
-                    count=stage.count,
-                    waves=[k],
-                )
-            else:
-                elem = plan["emissions"][i].pop(k)
-                # single-emission fold: drain every wave of this edge for
-                # element k, re-indexing the operator's stream step to k
-                op = stage.operator
-                plan["accs"][i] = ch.stream_fold(
-                    elem[None, :],
-                    lambda acc, e, _j, _op=op, _k=k: _op(acc, e, jnp.int32(_k)),
-                    plan["accs"][i],
-                )
-            if i < len(stages) - 1:
-                plan["emissions"][i + 1][k] = stage.emit(plan["accs"][i], k)
+            # trace-time span: this loop runs at trace/issue time (the
+            # folds are jitted), so the span shows the pipeline SCHEDULE
+            # — which stage issued which wave at which tick — not device
+            # occupancy; it never adds a sync
+            with _obs.span(f"{stage.src}->{stage.dst}",
+                           ("graph", f"stage{i}"), wave=k, tick=t):
+                if i == 0:
+                    plan["accs"][0] = ch.stream_fold(
+                        stage.elements,
+                        stage.operator,
+                        plan["accs"][0],
+                        count=stage.count,
+                        waves=[k],
+                    )
+                else:
+                    elem = plan["emissions"][i].pop(k)
+                    # single-emission fold: drain every wave of this edge
+                    # for element k, re-indexing the operator's stream
+                    # step to k
+                    op = stage.operator
+                    plan["accs"][i] = ch.stream_fold(
+                        elem[None, :],
+                        lambda acc, e, _j, _op=op, _k=k: _op(acc, e, jnp.int32(_k)),
+                        plan["accs"][i],
+                    )
+                if i < len(stages) - 1:
+                    plan["emissions"][i + 1][k] = stage.emit(plan["accs"][i], k)
 
 
 def delta_emitter(init: Any) -> Callable[[Any, int], Any]:

@@ -45,6 +45,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import COMPUTE, GroupedMesh, ServiceGraph, StreamChannel, WireSpec
 from repro.core.decouple import group_psum, select_by_role
 from repro.kernels.sample import sample_last
+from repro.obs import registry as _metrics
+from repro.obs import trace as _obs
 from repro.core.operators import (
     cache_migration_op,
     cache_stream_plan,
@@ -137,6 +139,14 @@ class PrefillScheduler:
         return finished, work
 
 
+# disaggregated tracks (obs.trace): prefill and decode are distinct
+# stage groups → distinct trace processes, so a request's flow arrows
+# visibly cross the prefill → migrate → decode handoff
+_T_DPREFILL = ("prefill", "rows")
+_T_HANDOFF = ("prefill", "handoff")
+_T_DDECODE = ("decode", "slots")
+
+
 class DisaggEngine:
     """Prefill group + decode group with a KV-handoff queue in between.
 
@@ -208,7 +218,13 @@ class DisaggEngine:
 
     def submit(self, req: Request) -> bool:
         req.submitted_tick = self.tick
-        return self.sched.submit(req, now=self.tick)
+        ok = self.sched.submit(req, now=self.tick)
+        # sole lifecycle-begin site (see Engine.submit): recovery paths
+        # re-queue through sched.submit directly and never re-open
+        if ok and _obs.enabled():
+            _obs.request_begin(req.uid, tenant=req.tenant, tick=self.tick,
+                               prompt_tokens=int(req.prompt.shape[0]))
+        return ok
 
     def _inflight(self) -> list[Request]:
         """Requests admitted past the fleet queue but not yet in a
@@ -249,24 +265,33 @@ class DisaggEngine:
                 # whole-prompt prefix hit: no prefill work at all —
                 # straight to the handoff queue (resolved at refill)
                 self.handoff.append((req, None, None, None))
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "handoff:prefix_hit", _T_HANDOFF)
                 self.stats["prefill_skips"] += 1
                 continue
             self.prefill_sched.admit(req)
         finished, work = self.prefill_sched.tick()
         if self.cfg.mode == "continuous" and len(finished) > 1:
-            logits, batch = self._prefill.run_batch([r.prompt for r in finished])
+            with _obs.span("prefill_packed", _T_DPREFILL, batch=len(finished)):
+                logits, batch = self._prefill.run_batch([r.prompt for r in finished])
             for i, req in enumerate(finished):
                 n = int(req.prompt.shape[0])
                 cache1 = {k: (jnp.int32(n) if k == "pos" else v[:, i : i + 1])
                           for k, v in batch.items()}
                 first = sample_last(logits[i : i + 1])[0]
                 self.handoff.append((req, cache1, first, logits[i, -1]))
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "handoff", _T_HANDOFF)
                 self.stats["prefills"] += 1
         else:
             for req in finished:
-                logits, cache1 = self._prefill(req.prompt)
+                with _obs.span("prefill", _T_DPREFILL, uid=req.uid,
+                               tokens=int(req.prompt.shape[0])):
+                    logits, cache1 = self._prefill(req.prompt)
                 first = sample_last(logits)[0]
                 self.handoff.append((req, cache1, first, logits[0, -1]))
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "handoff", _T_HANDOFF)
                 self.stats["prefills"] += 1
         return work
 
@@ -285,6 +310,8 @@ class DisaggEngine:
                 self.slots[slot] = req
                 self.kv.admit(slot, cache1, int(length))
                 self.tokens = self.tokens.at[slot, 0].set(int(next_tok))
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "restore", _T_DDECODE, slot=slot)
                 self.stats["restores"] += 1
                 self._tick_restores += 1
                 n += 1
@@ -299,6 +326,9 @@ class DisaggEngine:
                     info = self.kv.admit_from_full(slot, entry)
                     self.stats["prefix_hit_tokens"] += info["prefix_tokens"]
                     self.tokens = self.tokens.at[slot, 0].set(entry.first)
+                    if _obs.enabled():
+                        _obs.request_mark(req.uid, "migrate:prefix_hit",
+                                          _T_DDECODE, slot=slot)
                     self.stats["handoffs"] += 1
                     n += 1
                     continue
@@ -314,6 +344,8 @@ class DisaggEngine:
             else:
                 self.kv.admit(slot, cache1, plen)
             self.tokens = self.tokens.at[slot, 0].set(first)
+            if _obs.enabled():
+                _obs.request_mark(req.uid, "migrate", _T_DDECODE, slot=slot)
             self.stats["handoffs"] += 1
             n += 1
         return n
@@ -337,7 +369,9 @@ class DisaggEngine:
         if not active:
             if continuous:
                 self.last_tick["kv"] = self.kv.stats
+                _metrics.publish_kv_stats(self.last_tick["kv"])
             return
+        _obs.begin("decode", _T_DDECODE, tick=self.tick, batch=len(active))
         if continuous and self._decode_paged is not None:
             # paged decode kernel: per-slot rows in/out, no dense
             # (L, B, S, d) gather per step
@@ -352,6 +386,7 @@ class DisaggEngine:
         self.last_logits = logits
         next_tok = sample_last(logits)
         next_np = np.asarray(next_tok)
+        _obs.end(_T_DDECODE)
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -364,6 +399,8 @@ class DisaggEngine:
                 req.done = True
                 req.done_tick = self.tick
                 self.finished.append(req)
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "retire", _T_DDECODE, slot=i)
                 self.ledger.record_done(req, self.sched.slo(req.tenant), self.tick)
                 self.slots[i] = None
                 if continuous:
@@ -376,6 +413,11 @@ class DisaggEngine:
             self.last_tick["restores"] = self._tick_restores
             self.last_tick["slots_active"] = [s is not None for s in self.slots]
             self.last_tick["kv"] = self.kv.stats
+            _metrics.publish_kv_stats(self.last_tick["kv"])
+            if _obs.enabled():
+                kv = self.last_tick["kv"]
+                _obs.counter("kv", {k: kv[k] for k in ("blocks_in_use", "live_tokens")
+                                    if k in kv}, _T_DDECODE)
         self.stats["steps"] += 1
 
     def idle(self) -> bool:

@@ -36,9 +36,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.sample import sample_last
+from repro.obs import registry as _metrics
+from repro.obs import trace as _obs
 from repro.serve.api import ServeConfig
 from repro.serve.kvstore import make_kvstore
 from repro.serve.sched import FleetLedger, FleetScheduler
+
+# colocated-engine tracks (obs.trace): process "engine", one thread per
+# phase; requests flow-link through these via request_mark
+_T_PREFILL = ("engine", "prefill")
+_T_DECODE = ("engine", "decode")
 
 
 def prefill_bucket(n: int, minimum: int = 8, max_len: int | None = None) -> int:
@@ -216,7 +223,14 @@ class Engine:
 
     def submit(self, req: Request) -> bool:
         req.submitted_tick = self.tick
-        return self.sched.submit(req, now=self.tick)
+        ok = self.sched.submit(req, now=self.tick)
+        # lifecycle span opens HERE and only here: fault retries and
+        # resize re-queues go straight to sched.submit, so the one open
+        # span survives recovery and closes once in record_done
+        if ok and _obs.enabled():
+            _obs.request_begin(req.uid, tenant=req.tenant, tick=self.tick,
+                               prompt_tokens=int(req.prompt.shape[0]))
+        return ok
 
     def idle(self) -> bool:
         return self.sched.pending() == 0 and all(s is None for s in self.slots)
@@ -246,7 +260,11 @@ class Engine:
             self.slots[slot] = req
             # batch-1 prefill, then migrate the per-request cache into
             # the slot (zero-extended to max_len)
-            logits, cache1 = self._prefill(req.prompt)
+            with _obs.span("prefill", _T_PREFILL, uid=req.uid,
+                           tokens=int(req.prompt.shape[0])):
+                logits, cache1 = self._prefill(req.prompt)
+            if _obs.enabled():
+                _obs.request_mark(req.uid, "admit", _T_PREFILL, slot=slot)
             self.kv.admit(slot, cache1, int(req.prompt.shape[0]))
             first = sample_last(logits)[0]
             self.tokens = self.tokens.at[slot, 0].set(first)
@@ -276,6 +294,9 @@ class Engine:
             if entry is not None:
                 info = self.kv.admit_from_full(slot, entry)
                 self.tokens = self.tokens.at[slot, 0].set(entry.first)
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "admit:prefix_hit", _T_PREFILL,
+                                      slot=slot)
                 self.stats["prefill_skips"] += 1
                 self.stats["prefix_hit_tokens"] += info["prefix_tokens"]
                 self.last_tick["prefix_hit_tokens"] += info["prefix_tokens"]
@@ -283,7 +304,11 @@ class Engine:
                 cold.append((slot, req))
         if not cold:
             return
-        logits, batch = self._prefill.run_batch([r.prompt for _, r in cold])
+        with _obs.span("prefill_packed", _T_PREFILL, batch=len(cold)):
+            logits, batch = self._prefill.run_batch([r.prompt for _, r in cold])
+        if _obs.enabled():
+            for slot, req in cold:
+                _obs.request_mark(req.uid, "admit", _T_PREFILL, slot=slot)
         call_nets = []
         for i, (slot, req) in enumerate(cold):
             n = int(req.prompt.shape[0])
@@ -321,7 +346,9 @@ class Engine:
         self.tick += 1
         if all(s is None for s in self.slots):
             return
-        logits, cache = self._decode(self.params, self.kv.view(), self.tokens)
+        with _obs.span("decode", _T_DECODE, tick=self.tick,
+                       batch=sum(s is not None for s in self.slots)):
+            logits, cache = self._decode(self.params, self.kv.view(), self.tokens)
         self.kv.absorb(cache, [i for i, s in enumerate(self.slots) if s is not None])
         self.last_logits = logits
         next_tok = sample_last(logits)
@@ -338,6 +365,7 @@ class Engine:
         self.tick += 1
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if active:
+            _obs.begin("decode", _T_DECODE, tick=self.tick, batch=len(active))
             if self._decode_paged is not None:
                 # kernel path: decode attends straight into the pool
                 # through the block tables; the step returns just its
@@ -354,6 +382,7 @@ class Engine:
             self.last_logits = logits
             next_tok = sample_last(logits)
             next_np = np.asarray(next_tok)
+            _obs.end(_T_DECODE)
             self.last_tick["decode_batch"] = len(active)
             for slot in self._retire(next_np):
                 self.kv.free(slot)
@@ -361,6 +390,11 @@ class Engine:
         # same-tick insertion: slots retired above refill immediately
         self._admit_continuous()
         self.last_tick["kv"] = self.kv.stats
+        _metrics.publish_kv_stats(self.last_tick["kv"])
+        if _obs.enabled():
+            kv = self.last_tick["kv"]
+            _obs.counter("kv", {k: kv[k] for k in ("blocks_in_use", "live_tokens")
+                                if k in kv}, _T_DECODE)
         self.stats["steps"] += 1
 
     def _retire(self, next_np: np.ndarray) -> list[int]:
@@ -379,6 +413,8 @@ class Engine:
                 req.done = True
                 req.done_tick = self.tick
                 self.finished.append(req)
+                if _obs.enabled():
+                    _obs.request_mark(req.uid, "retire", _T_DECODE, slot=i)
                 self.ledger.record_done(req, self.sched.slo(req.tenant), self.tick)
                 self.slots[i] = None
                 freed.append(i)

@@ -44,6 +44,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.adapt import AdaptPolicy, ReplanController, StageTrait
 from repro.core.groups import GroupedMesh
+from repro.obs import registry as _metrics
+from repro.obs import trace as _obs
 from repro.launch.elastic import (
     healthy_mesh_with_backoff,
     repack_block_pool,
@@ -53,6 +55,10 @@ from repro.serve.api import ServeConfig
 from repro.serve.disagg import PREFILL, DisaggConfig, DisaggEngine, serving_graph
 from repro.serve.faults import FailureMonitor, FaultEvent, FaultSchedule
 from repro.serve.sched import FleetScheduler
+
+# control-loop track (obs.trace): replan/regroup/fault/checkpoint
+# markers and the per-tick C series land here
+_T_FLEET = ("fleet", "control")
 
 
 @dataclasses.dataclass
@@ -85,11 +91,13 @@ class FleetConfig(ServeConfig):
     # forever would both freeze planning and eventually apply a verdict
     # computed from a long-gone load window
     max_deferrals: int = 8
-    # per-tick control-loop records kept on FleetEngine.report. None =
-    # unbounded (benchmarks replay finite traces and cumsum the whole
-    # wall history); a live fleet should bound it like the ledger's
-    # tick window
-    report_window: int | None = None
+    # per-tick control-loop records kept on FleetEngine.report — a ring
+    # buffer, bounded BY DEFAULT (a live fleet must not grow O(ticks)
+    # host state; cumulative totals stay exact on the ledger and the
+    # full history routes through obs.trace when a tracer is enabled).
+    # None = unbounded opt-in; benchmark drivers instead collect walls
+    # incrementally via replay's on_tick hook
+    report_window: int | None = 256
     # -- FaultFleet (serve/faults.py + DESIGN.md §14) ----------------------
     # deterministic fault schedule; None = the historic healthy fleet.
     faults: FaultSchedule | None = None
@@ -219,7 +227,13 @@ class FleetEngine:
             self.ckpt = ServingCheckpointer(
                 cfg.ckpt_dir, cadence=cfg.ckpt_cadence
             )
-        self.fault_log: list[dict] = []
+        # bounded like report: the cumulative story lives in
+        # faults_total/recoveries/regrows, the full event stream in the
+        # tracer (instant markers per fault/regrow)
+        self.fault_log: collections.deque[dict] = collections.deque(
+            maxlen=cfg.report_window
+        )
+        self.faults_total = 0
         self.recoveries = {"staged": 0, "restored": 0, "retried": 0}
         self.regrows = 0
 
@@ -305,7 +319,9 @@ class FleetEngine:
             # batched, so the slowest row sets the tick wall
             wall_s *= self.monitor.slow_factor(self.eng.tick)
         if self.ckpt is not None:
-            self.ckpt.maybe_save(self.eng, self.eng.tick)
+            if self.ckpt.maybe_save(self.eng, self.eng.tick):
+                _metrics.REGISTRY.counter("fleet.ckpt_saves").inc()
+                _obs.instant("checkpoint_save", _T_FLEET, tick=self.eng.tick)
         prefill_work, decode_work = self._work_signals(tick)
         # the same sample feeds two windows with DIFFERENT lifetimes:
         # the FleetLedger tick window is observability (never cleared —
@@ -336,10 +352,23 @@ class FleetEngine:
                 wall_s, decode_work, {PREFILL: sum(prefill_work)}
             )
             rec["decision"] = decision.reason
+            if decision.regroup:
+                # a fresh replan verdict this tick (deferred re-tries of
+                # an old pending decision don't re-mark)
+                if _obs.enabled():
+                    _obs.instant("replan", _T_FLEET, reason=str(decision.reason),
+                                 prefill_rows=int(decision.rows[PREFILL]),
+                                 tick=self.eng.tick)
+                _metrics.REGISTRY.counter("fleet.replans").inc()
             pending = self.controller.pending
             if pending is not None:
                 if self._try_regroup(pending):
                     rec["regrouped"] = True
+                    if _obs.enabled():
+                        _obs.instant("regroup", _T_FLEET, tick=self.eng.tick,
+                                     prefill_rows=self.prefill_rows,
+                                     decode_slots=self.decode_slots)
+                    _metrics.REGISTRY.counter("fleet.regroups").inc()
                     self._pending_age = 0
                 else:
                     rec["deferred"] = True
@@ -355,6 +384,21 @@ class FleetEngine:
         rec["prefill_rows"] = self.prefill_rows
         rec["decode_slots"] = self.decode_slots
         self.report.append(rec)
+        reg = _metrics.REGISTRY
+        reg.gauge("fleet.rows").set(float(self.n_rows))
+        reg.gauge("fleet.prefill_rows").set(float(self.prefill_rows))
+        if _obs.enabled():
+            # full control-loop history: the ring above may wrap, the
+            # trace keeps every tick (up to the tracer's own ring)
+            _obs.complete("tick", wall_s, _T_FLEET, tick=rec["tick"],
+                          rows=rec["rows"], prefill_rows=rec["prefill_rows"],
+                          decode_slots=rec["decode_slots"],
+                          decision=rec["decision"])
+            _obs.counter("fleet", {"rows": rec["rows"],
+                                   "prefill_rows": rec["prefill_rows"],
+                                   "queue_depth": float(
+                                       self.eng.workload_sample()["queue_depth"])},
+                         _T_FLEET)
         return rec
 
     def _try_regroup(self, decision) -> bool:
@@ -424,6 +468,19 @@ class FleetEngine:
                 out.append(rec)
         for ev in health.events:
             out.append(self._apply_fault(ev))
+        if out:
+            reg = _metrics.REGISTRY
+            for rec in out:
+                if rec["kind"] == "regrow":
+                    reg.counter("fleet.regrows").inc()
+                    _obs.instant("regrow", _T_FLEET, **rec)
+                else:
+                    self.faults_total += 1
+                    reg.counter(f"fleet.faults.{rec['kind']}").inc()
+                    reg.counter("fleet.recovered.staged").inc(rec["staged"])
+                    reg.counter("fleet.recovered.restored").inc(rec["restored"])
+                    reg.counter("fleet.recovered.retried").inc(rec["retried"])
+                    _obs.instant("fault", _T_FLEET, **rec)
         self.fault_log.extend(out)
         return out
 
@@ -558,12 +615,19 @@ class FleetEngine:
                 if not req.out_tokens:
                     req.first_token_tick = -1
                 self.eng.restores.append((req, cache1, length, next_tok))
+                if _obs.enabled():
+                    _obs.instant("checkpoint_restore", _T_FLEET, uid=req.uid,
+                                 tick=self.eng.tick)
                 return True
         # drop-and-retry: the stream restarts, so TTFT is honestly
-        # re-charged from the original arrival
+        # re-charged from the original arrival. sched.submit (not
+        # eng.submit) also keeps the request's one lifecycle span open
+        # across the retry — no double-begin
         req.out_tokens.clear()
         req.first_token_tick = -1
         self.eng.sched.submit(req, now=self.eng.tick)
+        if _obs.enabled():
+            _obs.request_mark(req.uid, "retry", _T_FLEET)
         return False
 
 

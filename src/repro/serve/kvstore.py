@@ -769,6 +769,12 @@ class PagedKVStore:
             "live_block_demand": int(sum(
                 -(-int(n) // self.block_size) for n in self.lens if n
             )),
+            # total refcount over the pool (slots + prefix entries,
+            # excluding the permanently-live zero block) and the prefix
+            # cache's share — the obs registry mirrors both, so refcount
+            # leaks show up as a drifting gauge, not just a failed test
+            "ref_total": int(self.ref.sum()) - 1,
+            "prefix_ref_total": int(self._pref.sum()),
         }
         if self.prefix is not None:
             out.update(prefix_hits=self.prefix.hits,

@@ -34,6 +34,8 @@ from typing import TYPE_CHECKING, Iterable, Mapping, Sequence
 
 import numpy as np
 
+from repro.obs import registry as _metrics
+from repro.obs import trace as _obs
 from repro.serve.traffic import SLOClass, TenantSpec
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -105,7 +107,9 @@ class FleetScheduler:
             and int(req.prompt.shape[0]) > self.token_budget
         ):
             self.rejected += 1
+            _metrics.REGISTRY.counter("sched.rejected").inc()
             return False
+        _metrics.REGISTRY.counter("sched.submitted").inc()
         spec = self.spec(ten)
         weight = max(spec.weight * spec.slo.weight, 1e-9)
         cost = float(req.prompt.shape[0]) / weight
@@ -217,6 +221,8 @@ class FleetScheduler:
         self._vtime = max(
             self._vtime, min((e.start_tag for e in self._heads()), default=self._vtime)
         )
+        if out:
+            _metrics.REGISTRY.counter("sched.admitted").inc(len(out))
         return out
 
 
@@ -265,6 +271,13 @@ class FleetLedger:
         self.ticks: collections.deque[dict] = collections.deque(maxlen=window)
         self.total_ticks = 0
         self.tokens_out = 0
+        # exact cumulative counters — the tick window above is a sliding
+        # sample for the adapt bridge, these never lose history
+        self.cum_wall_s = 0.0
+        self.cum_prefill_tokens = 0.0
+        self.cum_decode_work = 0.0
+        self.cum_accepted = 0
+        self.cum_drafted = 0
 
     # -- record ------------------------------------------------------------
     def record_done(self, req: "Request", slo: SLOClass, now: int) -> None:
@@ -285,6 +298,16 @@ class FleetLedger:
         self._by_tenant.setdefault(c.tenant, []).append(c)
         self._by_class.setdefault(c.slo, []).append(c)
         self.tokens_out += len(req.out_tokens)
+        reg = _metrics.REGISTRY
+        reg.counter("serve.completions").inc()
+        reg.counter("serve.tokens_out").inc(c.tokens)
+        if c.latency_ok:
+            reg.counter("serve.good_tokens").inc(c.tokens)
+        reg.histogram("serve.ttft_ticks").observe(ttft)
+        reg.histogram("serve.latency_ticks").observe(latency)
+        if _obs.enabled():
+            _obs.request_end(req.uid, tokens=c.tokens, tick=now,
+                             ttft=ttft, latency=latency, tenant=c.tenant)
 
     def record_tick(
         self,
@@ -315,6 +338,17 @@ class FleetLedger:
             }
         )
         self.total_ticks += 1
+        self.cum_wall_s += float(wall_s)
+        self.cum_prefill_tokens += float(sum(prefill_work_rows))
+        self.cum_decode_work += float(sum(decode_work_rows))
+        self.cum_accepted += int(accepted)
+        self.cum_drafted += int(drafted)
+        reg = _metrics.REGISTRY
+        reg.counter("serve.ticks").inc()
+        reg.gauge("serve.queue_depth").set(float(queue_depth))
+        if drafted:
+            reg.counter("spec.drafted").inc(int(drafted))
+            reg.counter("spec.accepted").inc(int(accepted))
 
     # -- latency / goodput -------------------------------------------------
     def _sel(self, tenant: str | None = None, slo: str | None = None):
@@ -369,6 +403,14 @@ class FleetLedger:
         return {
             "completions": len(self.completions),
             "tokens_out": self.tokens_out,
+            "cumulative": {
+                "ticks": self.total_ticks,
+                "cum_wall_s": self.cum_wall_s,
+                "prefill_tokens": self.cum_prefill_tokens,
+                "decode_work": self.cum_decode_work,
+                "accepted": self.cum_accepted,
+                "drafted": self.cum_drafted,
+            },
             "good_tokens": self.good_tokens(),
             "queue_depth_mean": self.queue_depth_mean(),
             "acceptance_rate": self.acceptance_rate(),

@@ -68,10 +68,16 @@ from repro.core.wire import (
     split_draft_payload,
 )
 from repro.kernels.sample import sample_last
+from repro.obs import trace as _obs
 from repro.serve.engine import Engine, EngineConfig, PrefillRunner
 from repro.serve.faults import FaultEvent
 from repro.serve.kvstore import make_kvstore
 from repro.serve.sched import FleetScheduler
+
+# SpecGraph tracks (obs.trace): the draft and verify groups are the
+# chain's two stage groups → two trace processes
+_T_DRAFT = ("draft", "rows")
+_T_VERIFY = ("verify", "rows")
 
 
 @dataclasses.dataclass
@@ -256,6 +262,7 @@ class SpecEngine(Engine):
         d_np = np.zeros((b, k), np.int64)  # drafted ids
         q_of_d = np.zeros((b, k), np.float64)  # draft prob of each drafted id
         q_rows: list[np.ndarray | None] = [None] * k  # full draft dists (B, V)
+        _obs.begin("draft", _T_DRAFT, tick=self.tick, k=k, batch=len(active))
         for j in range(k):
             active_j = [i for i in active if n_draft[i] > j]
             if not active_j:
@@ -276,6 +283,7 @@ class SpecEngine(Engine):
             cur = d[:, None]
             self.last_tick["draft_batches"].append(len(active_j))
             self.stats["draft_steps"] += 1
+        _obs.end(_T_DRAFT)
 
         # -- forward wire: the draft block crosses the draft->verify edge --
         payload = make_draft_payload(jnp.asarray(d_np, jnp.int32),
@@ -293,9 +301,11 @@ class SpecEngine(Engine):
             chunk[i, 0] = tok_np[i]
             chunk[i, 1 : 1 + n_draft[i]] = d_np[i, : n_draft[i]]
             n_new[i] = n_draft[i] + 1
-        logits, vcache = self._verify(
-            self.params, self.kv.view(active),
-            jnp.asarray(chunk, jnp.int32), jnp.asarray(n_new, jnp.int32))
+        with _obs.span("verify", _T_VERIFY, tick=self.tick, chunk=s_chunk,
+                       batch=len(active)):
+            logits, vcache = self._verify(
+                self.params, self.kv.view(active),
+                jnp.asarray(chunk, jnp.int32), jnp.asarray(n_new, jnp.int32))
         self.last_logits = logits
         self.stats["verify_calls"] += 1
         self.last_tick["verify"] = (s_chunk, len(active))
@@ -352,6 +362,10 @@ class SpecEngine(Engine):
             self.last_tick["drafted"] += n_draft[i]
         self.stats["accepted"] += self.last_tick["accepted"]
         self.stats["drafted"] += self.last_tick["drafted"]
+        if _obs.enabled():
+            _obs.instant("verdict", _T_VERIFY, tick=self.tick,
+                         accepted=self.last_tick["accepted"],
+                         drafted=self.last_tick["drafted"])
         self.last_tick["emitted"] = sum(len(v) for v in emitted.values())
         next_np = np.array(
             [emitted[i][-1] if i in emitted else 0 for i in range(b)])
@@ -430,6 +444,8 @@ class SpecEngine(Engine):
                     req.done = True
                     req.done_tick = self.tick
                     self.finished.append(req)
+                    if _obs.enabled():
+                        _obs.request_mark(req.uid, "retire", _T_VERIFY, slot=i)
                     self.ledger.record_done(req, self.sched.slo(req.tenant),
                                             self.tick)
                     self.slots[i] = None
@@ -500,6 +516,10 @@ class SpecEngine(Engine):
             "to": (plan.k, plan.draft_rows),
             "predicted_speedup": t_now / plan.t_per_token,
         })
+        if _obs.enabled():
+            _obs.instant("replan", _T_DRAFT, tick=self.tick,
+                         acceptance=float(acceptance), k=int(plan.k),
+                         draft_rows=int(plan.draft_rows))
         self.spec_k = plan.k
         self.resize(draft_rows=plan.draft_rows)
 

@@ -29,7 +29,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.adapt import AdaptPolicy, AdaptiveGraph
+from repro.core.adapt import AdaptPolicy, AdaptiveGraph, CompileGate
 from repro.data.pipeline import Pipeline
 from repro.io import checkpoint as ckpt
 from repro.train.optimizer import OptConfig, init_opt_state
@@ -154,7 +154,10 @@ class Trainer:
         opt = jax.device_put(state["opt"], self._shardings[1])
         t0 = time.time()
         step = state["step"]
-        fresh_trace = True  # first call of a (re)built step pays the jit
+        # first call of a (re)built step pays the jit; the step donates
+        # its buffers, so there is no side-effect-free warmup call —
+        # the gate skips that sample instead (core.adapt.CompileGate)
+        gate = CompileGate()
         try:
             while step < self.cfg.total_steps:
                 if self.cfg.fail_at_step is not None and step == self.cfg.fail_at_step:
@@ -166,11 +169,9 @@ class Trainer:
                 if adaptive:
                     jax.block_until_ready(metrics)
                     wall = time.perf_counter() - t_step
-                    if fresh_trace:
-                        # a wall sample polluted by jit time would
-                        # mis-calibrate t_unit by orders of magnitude
-                        fresh_trace = False
-                    else:
+                    # a wall sample polluted by jit time would
+                    # mis-calibrate t_unit by orders of magnitude
+                    if gate.sample(wall):
                         compute_rows = (
                             self.mesh.shape["data"] - self._service_rows()
                         )
@@ -181,7 +182,7 @@ class Trainer:
                             step_fn = self._regroup(decision.rows, params_like, step)
                             params = jax.device_put(params, self._shardings[0])
                             opt = jax.device_put(opt, self._shardings[1])
-                            fresh_trace = True
+                            gate.rebuilt()
                             event = {
                                 "step": step,
                                 "regroup": dict(decision.rows),
